@@ -1,0 +1,71 @@
+"""Shared benchmark plumbing: datasets, budgets, timing, scoring.
+
+Scale via REPRO_BENCH_SCALE (default 0.05 = CPU-friendly row counts;
+1.0 reproduces the paper's sizes). All numbers are medians over the same
+2000-query workloads the paper uses (REPRO_BENCH_QUERIES to override).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (build_synopsis, answer, ground_truth, random_queries,
+                        relative_error, ci_ratio)
+from repro.core.baselines import (uniform_synopsis, stratified_synopsis,
+                                  aqppp_synopsis)
+from repro.data import synthetic
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.05"))
+NQ = int(os.environ.get("REPRO_BENCH_QUERIES", "500"))
+
+_cache: dict = {}
+
+
+def dataset(name: str):
+    if name not in _cache:
+        if name == "intel":
+            _cache[name] = synthetic.intel_wireless(scale=SCALE)
+        elif name == "instacart":
+            _cache[name] = synthetic.instacart(scale=SCALE)
+        elif name == "nyc_taxi":
+            _cache[name] = synthetic.nyc_taxi(scale=SCALE)
+        elif name == "adversarial":
+            _cache[name] = synthetic.adversarial(n=int(1_000_000 * max(SCALE, 0.02) * 4))
+        else:
+            raise KeyError(name)
+    return _cache[name]
+
+
+DATASETS = ("intel", "instacart", "nyc_taxi")
+
+
+def median_err(syn_or_baseline, qs, c, a, kind, **kw):
+    gt = ground_truth(c, a, qs, kind=kind)
+    keep = np.abs(gt) > 1e-9
+    if hasattr(syn_or_baseline, "estimate"):          # AQPPP
+        res = syn_or_baseline.estimate(qs, kind=kind)
+    else:
+        res = answer(syn_or_baseline, qs, kind=kind, **kw)
+    return float(np.median(relative_error(res, gt)[keep])), res, gt
+
+
+def median_ci(res, gt):
+    keep = np.abs(gt) > 1e-9
+    return float(np.median(ci_ratio(res, gt)[keep]))
+
+
+def timed(fn, *args, reps=3, **kw):
+    fn(*args, **kw)          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / reps
+
+
+def emit(rows: list[dict], name: str):
+    """Print benchmark rows and the run.py CSV line."""
+    for r in rows:
+        print("  " + "  ".join(f"{k}={v}" for k, v in r.items()), flush=True)
+    return rows

@@ -1,0 +1,88 @@
+"""§Perf hillclimb cell 3: PASS query serving (the paper's own technique).
+
+Unlike the LM cells (dry-run/analytic only), the serving path runs for real
+on this host, so these iterations are wall-clock measured. Iterations:
+
+  it0  baseline: broadcast moments — pred (Q, k, s) elementwise + reduce
+  it1  flattened one-hot matmul formulation (the Pallas kernel's shape:
+       (Q, S_total) predicate @ (S_total, k) one-hot — MXU-shaped)
+  it2  f32 end-to-end + fused jit epilogue (single compiled answer())
+  it3  two-phase skip: classify first, then moments only over strata that
+       any query touches (the tree's data-skipping, batched)
+
+Run: PYTHONPATH=src python -m benchmarks.perf_pass_serving
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_synopsis, answer, random_queries
+from repro.core import estimators as E
+from repro.kernels import ops as kops
+from repro.data import synthetic
+
+
+def bench(fn, *args, reps=5):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(Q=2048, k=256, rate=0.01):
+    c, a = synthetic.nyc_taxi(scale=0.05)
+    syn, _ = build_synopsis(c, a, k=k, sample_rate=rate, kind="sum")
+    qs = random_queries(c, Q, seed=3)
+    kk, s, d = syn.sample_c.shape
+    rows = []
+
+    # it0: broadcast (Q,k,s) moments
+    f0 = jax.jit(lambda lo, hi: E.sample_moments(
+        syn.sample_c, syn.sample_a, syn.sample_valid, lo, hi))
+    t0 = bench(f0, qs.lo, qs.hi)
+    rows.append(("it0_broadcast_moments", t0))
+
+    # it1: flattened one-hot matmul (kernel formulation, jnp backend)
+    flat_c = syn.sample_c.reshape(kk * s, d)
+    flat_a = syn.sample_a.reshape(kk * s)
+    leaf = jnp.where(syn.sample_valid.reshape(kk * s),
+                     jnp.repeat(jnp.arange(kk, dtype=jnp.int32), s), -1)
+    f1 = jax.jit(lambda lo, hi: kops.stratified_moments_op(
+        flat_c, flat_a, leaf, lo, hi, kk))
+    t1 = bench(f1, qs.lo, qs.hi)
+    rows.append(("it1_onehot_matmul", t1))
+
+    # it2: full fused answer() epilogue (classification + exact + CI)
+    f2 = jax.jit(lambda lo, hi: E.estimate(
+        syn, type(qs)(lo, hi), kind="sum").estimate)
+    t2 = bench(f2, qs.lo, qs.hi)
+    rows.append(("it2_full_answer_fused", t2))
+
+    # it3: two-phase — moments computed only over the strata the batch
+    # touches (static gather of the union of partial strata; emulates the
+    # tree skip for clustered workloads)
+    rel = E.classify_leaves(syn.leaf_lo, syn.leaf_hi, qs.lo, qs.hi)
+    touched = np.unique(np.asarray(jnp.where(rel == 1)[1]))
+    sc = syn.sample_c[touched]
+    sa = syn.sample_a[touched]
+    sv = syn.sample_valid[touched]
+    f3 = jax.jit(lambda lo, hi: E.sample_moments(sc, sa, sv, lo, hi))
+    t3 = bench(f3, qs.lo, qs.hi)
+    rows.append((f"it3_skip_gather({len(touched)}/{kk} strata)", t3))
+
+    print(f"PASS serving hillclimb: Q={Q}, k={k}, samples={kk*s}")
+    base = rows[0][1]
+    for name, t in rows:
+        print(f"  {name:42s} {t*1e3:8.2f} ms/batch "
+              f"({t/Q*1e6:6.2f} us/query, {base/t:4.2f}x vs it0)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,122 @@
+"""Roofline analysis from the dry-run artifacts (assignment §ROOFLINE).
+
+For every (arch, shape) single-pod cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw             [s]
+    collective term = collective_bytes_per_device / link_bw     [s]
+(the compiled module is the per-device SPMD program, so per-device numbers
+over per-chip rates equal the global formula given in the assignment).
+
+Also: MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per device,
+usefulness ratio MODEL_FLOPS/HLO_FLOPs, dominant term, and roofline
+fraction = compute_term / max(all terms).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import get_config, SHAPES
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+
+def param_count(cfg) -> tuple[float, float]:
+    """(total params, active params per token) — analytic."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    embed = V * d
+    if cfg.rwkv:
+        mix = L * (5 * d * d + 2 * d)
+        mlp = L * 3 * d * cfg.d_ff
+        total = embed + mix + mlp
+        return total, total - 0  # all active
+    if cfg.family == "hybrid":
+        di = cfg.d_inner
+        mamba = L * (2 * d * di + 2 * d * cfg.ssm_state + d * cfg.ssm_heads
+                     + di * d)
+        shared = (4 * d * cfg.num_heads * cfg.head_dim + 3 * d * cfg.d_ff)
+        total = embed + mamba + shared
+        return total, total
+    attn = L * (d * cfg.num_heads * cfg.head_dim * 2
+                + d * cfg.num_kv_heads * cfg.head_dim * 2)
+    if cfg.num_experts:
+        ff_total = L * 3 * d * cfg.moe_d_ff * cfg.num_experts
+        ff_active = L * 3 * d * cfg.moe_d_ff * cfg.experts_per_token
+    else:
+        ff_total = ff_active = L * 3 * d * cfg.d_ff
+    enc = cfg.enc_layers * (4 * d * cfg.num_heads * cfg.head_dim
+                            + 3 * d * cfg.d_ff) if cfg.enc_layers else 0
+    xattn = L * 4 * d * cfg.num_heads * cfg.head_dim if cfg.cross_attn else 0
+    total = embed + attn + ff_total + enc + xattn
+    active = embed + attn + ff_active + enc + xattn
+    return total, active
+
+
+def model_flops_per_device(arch: str, shape: str, num_devices: int,
+                           step: str) -> float:
+    cfg = get_config(arch)
+    total, active = param_count(cfg)
+    info = SHAPES[shape]
+    if step == "train":
+        tokens = info["global_batch"] * info["seq_len"]
+        return 6.0 * active * tokens / num_devices
+    if step == "prefill":
+        tokens = info["global_batch"] * info["seq_len"]
+        return 2.0 * active * tokens / num_devices
+    # decode: one token per sequence
+    return 2.0 * active * info["global_batch"] / num_devices
+
+
+def analyze(pattern: str = "*__16x16.json"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, pattern))):
+        d = json.load(open(path))
+        if d.get("status") != "ok":
+            if d.get("status") == "skipped":
+                rows.append({"arch": d["arch"], "shape": d["shape"],
+                             "status": "skipped", "why": d["reason"]})
+            else:
+                rows.append({"arch": d.get("arch"), "shape": d.get("shape"),
+                             "status": d.get("status", "?")})
+            continue
+        t_comp = d["flops_per_device"] / PEAK_FLOPS_BF16
+        t_mem = d["bytes_accessed_per_device"] / HBM_BW
+        t_coll = d["collectives"]["total_bytes"] / ICI_BW
+        dom = max((t_comp, "compute"), (t_mem, "memory"),
+                  (t_coll, "collective"))[1]
+        mf = model_flops_per_device(d["arch"], d["shape"], d["num_devices"],
+                                    d["step"])
+        frac = t_comp / max(t_comp, t_mem, t_coll)
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "status": "ok",
+            "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            "dominant": dom, "model_flops": mf,
+            "useful_ratio": mf / max(d["flops_per_device"], 1.0),
+            "roofline_frac": frac,
+        })
+    return rows
+
+
+def run():
+    rows = analyze()
+    print(f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s}  -- {r['status']} "
+                  f"{r.get('why', '')}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+              f"{100 * r['roofline_frac']:6.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Quickstart: build a PASS synopsis and answer approximate queries.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (build_synopsis, answer, ground_truth, random_queries,
+                        relative_error, ci_ratio)
+from repro.data import synthetic
+
+
+def main():
+    # ~380k taxi-like rows: predicate = pickup time, aggregate = distance.
+    c, a = synthetic.nyc_taxi(scale=0.05)
+    print(f"dataset: {len(a):,} rows")
+
+    # Budgets (paper §3.1): k leaf partitions (construction budget tau_c),
+    # 0.5% stratified samples (query-latency budget tau_q).
+    syn, report = build_synopsis(c, a, k=64, sample_rate=0.005,
+                                 kind="sum", method="adp")
+    print(f"built PASS synopsis in {report.seconds_total:.2f}s "
+          f"(k={report.k}, samples={report.total_samples})")
+
+    queries = random_queries(c, 500, seed=0)
+    for kind in ("sum", "count", "avg", "min", "max"):
+        res = answer(syn, queries, kind=kind)
+        gt = ground_truth(c, a, queries, kind=kind)
+        keep = np.abs(gt) > 1e-9
+        err = np.median(relative_error(res, gt)[keep])
+        print(f"{kind:6s} median rel err {err*100:6.3f}%", end="")
+        if kind in ("sum", "count", "avg"):
+            ci = np.median(ci_ratio(res, gt)[keep])
+            inside = np.mean((np.asarray(res.lower) <= gt)
+                             & (gt <= np.asarray(res.upper)))
+            print(f"   CI ratio {ci*100:5.2f}%   hard-bound containment "
+                  f"{inside*100:.1f}%")
+        else:
+            print()
+
+
+if __name__ == "__main__":
+    main()

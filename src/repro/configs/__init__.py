@@ -1,0 +1,1 @@
+from .base import ModelConfig, reduced, get_config, ARCHITECTURES, SHAPES  # noqa: F401

@@ -1,0 +1,142 @@
+"""Model configuration system + architecture registry.
+
+One config file per assigned architecture lives alongside this module; each
+exposes ``CONFIG`` (the exact published shape) and registers itself. The
+``reduced()`` transform produces the CPU smoke-test variant of the same
+family (small widths/layers, same code paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention flavour
+    attn_type: str = "full"          # full | swa | local_global
+    window: int = 4096
+    softcap: float = 0.0             # gemma2 final-logit/attn softcapping
+    qkv_bias: bool = False           # qwen2.5
+    rope_theta: float = 10_000.0
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    expert_parallel: bool = True     # shard expert dim on "model" axis
+    capacity_factor: float = 1.25
+    # SSM / RWKV
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0              # hybrid: a (shared) attn block every N
+    shared_attn: bool = False        # zamba2: one shared block reused
+    rwkv: bool = False
+    # encoder-decoder
+    enc_layers: int = 0
+    enc_seq: int = 1500              # whisper audio frames after conv stub
+    cross_attn: bool = False
+    frontend: str = "none"           # none | audio_stub | vision_stub
+    vision_tokens: int = 256         # VLM stub prefix length
+    # numerics / training
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    act: str = "silu"                # silu | gelu
+    tie_embeddings: bool = False
+    remat: str = "block"             # none | block  (activation checkpointing)
+    scan_layers: bool = True         # stack homogeneous layers with lax.scan
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def sub_quadratic(self) -> bool:
+        """May this arch run the long_500k decode shape? (DESIGN.md §5)."""
+        if self.family in ("ssm", "hybrid") or self.rwkv:
+            return True
+        return self.attn_type in ("swa", "local_global")
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test scale: same family/code paths, tiny shapes."""
+    return dataclasses.replace(
+        cfg,
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(2, max(cfg.num_kv_heads, 1)) if cfg.num_kv_heads else 0,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        window=32,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        moe_d_ff=64 if cfg.moe_d_ff else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_headdim=16 if cfg.ssm_state or cfg.rwkv else cfg.ssm_headdim,
+        attn_every=min(cfg.attn_every, 2) if cfg.attn_every else 0,
+        enc_layers=2 if cfg.enc_layers else 0,
+        enc_seq=32 if cfg.enc_layers else cfg.enc_seq,
+        vision_tokens=8 if cfg.frontend == "vision_stub" else cfg.vision_tokens,
+        dtype="float32",
+        remat="none",
+        scan_layers=False,
+    )
+
+
+ARCHITECTURES = (
+    "qwen2.5-3b", "llama3.2-3b", "minitron-8b", "gemma2-27b",
+    "mixtral-8x7b", "qwen3-moe-235b-a22b", "internvl2-76b",
+    "whisper-medium", "rwkv6-1.6b", "zamba2-2.7b",
+)
+
+_MODULES = {
+    "qwen2.5-3b": "qwen2_5_3b",
+    "llama3.2-3b": "llama3_2_3b",
+    "minitron-8b": "minitron_8b",
+    "gemma2-27b": "gemma2_27b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "internvl2-76b": "internvl2_76b",
+    "whisper-medium": "whisper_medium",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHITECTURES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    cfg: ModelConfig = mod.CONFIG
+    return reduced(cfg) if smoke else cfg
+
+
+# Shape suite shared by every LM arch (assignment spec).
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, step="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, step="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, step="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, step="decode"),
+}
+
+
+__all__ = ["ModelConfig", "reduced", "get_config", "ARCHITECTURES", "SHAPES"]

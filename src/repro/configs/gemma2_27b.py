@@ -1,0 +1,10 @@
+"""Gemma2-27B: local+global alternating attention, logit softcap
+[arXiv:2408.00118; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b", family="dense",
+    num_layers=46, d_model=4608, num_heads=32, num_kv_heads=16,
+    head_dim=144, d_ff=36864, vocab_size=256000,
+    attn_type="local_global", window=4096, softcap=50.0,
+    act="gelu", rope_theta=1e4, tie_embeddings=True)

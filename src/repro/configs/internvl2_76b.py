@@ -1,0 +1,11 @@
+"""InternVL2-76B: InternViT stub frontend + LLM backbone
+[arXiv:2404.16821; unverified]. The vision tower is a STUB per the
+assignment: input_specs() provides precomputed patch embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    head_dim=128, d_ff=28672, vocab_size=128256,
+    attn_type="full", frontend="vision_stub", vision_tokens=256,
+    rope_theta=5e5)

@@ -1,0 +1,8 @@
+"""Llama-3.2-3B: small llama3 dense GQA [hf:meta-llama/Llama-3.2-*; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="dense",
+    num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8,
+    head_dim=128, d_ff=8192, vocab_size=128256,
+    attn_type="full", rope_theta=5e5)

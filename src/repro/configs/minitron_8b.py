@@ -1,0 +1,8 @@
+"""Minitron-8B: pruned Nemotron dense GQA [arXiv:2407.14679; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=16384, vocab_size=256000,
+    attn_type="full", rope_theta=1e4)

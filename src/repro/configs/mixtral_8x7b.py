@@ -1,0 +1,13 @@
+"""Mixtral-8x7B: 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=32000,
+    attn_type="swa", window=4096,
+    num_experts=8, experts_per_token=2, moe_d_ff=14336,
+    # 8 experts < 16-way model axis: shard the expert FFN hidden dim
+    # (Megatron-style TP) instead of the expert dim.
+    expert_parallel=False, rope_theta=1e6)

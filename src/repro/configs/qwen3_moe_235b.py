@@ -1,0 +1,11 @@
+"""Qwen3-MoE-235B-A22B: 128-expert top-8 fine-grained MoE
+[hf:Qwen/Qwen3-*; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4,
+    head_dim=128, d_ff=1536, vocab_size=151936,
+    attn_type="full",
+    num_experts=128, experts_per_token=8, moe_d_ff=1536,
+    expert_parallel=True, rope_theta=1e6)

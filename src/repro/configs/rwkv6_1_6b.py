@@ -1,0 +1,9 @@
+"""RWKV6 (Finch) 1.6B: attention-free, data-dependent decay
+[arXiv:2404.05892; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, num_heads=0, num_kv_heads=0,
+    head_dim=64, d_ff=7168, vocab_size=65536,
+    rwkv=True, ssm_headdim=64)

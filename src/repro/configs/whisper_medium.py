@@ -1,0 +1,11 @@
+"""Whisper-medium: encoder-decoder with conv audio frontend (STUB per the
+assignment — input_specs() provides precomputed frame embeddings)
+[arXiv:2212.04356; unverified]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="encdec",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    head_dim=64, d_ff=4096, vocab_size=51865,
+    attn_type="full", enc_layers=24, enc_seq=1500, cross_attn=True,
+    frontend="audio_stub", act="gelu")

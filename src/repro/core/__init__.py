@@ -1,0 +1,8 @@
+"""PASS core: the paper's contribution as composable JAX modules."""
+from .types import (PartitionTree, Synopsis, QueryBatch, QueryResult,
+                    AGG_SUM, AGG_SUMSQ, AGG_COUNT, AGG_MIN, AGG_MAX,
+                    REL_NONE, REL_PARTIAL, REL_COVER)
+from .synopsis import build_synopsis, BuildReport, delta_encode, delta_decode
+from .query import (answer, ground_truth, random_queries,
+                    challenging_queries, relative_error, ci_ratio)
+from .estimators import estimate, classify_leaves, ess, skip_rate

@@ -1,0 +1,180 @@
+"""Baselines: US, ST, AQP++ and KD-US (paper §5.1.3, §5.4).
+
+Uniform sampling (US) and stratified sampling (ST) are expressed as PASS
+synopses (k = 1 / k = B equal-depth leaves): with a single whole-data leaf
+the PASS estimator reduces exactly to §2.1 uniform sampling, and with B
+equal-depth leaves (without the aggregate shortcut — strata are almost never
+fully covered and we disable cover credit) to §2.2 stratified sampling.
+
+AQP++ [36] is implemented per the paper's description: precomputed
+aggregates on a hill-climbed interval partitioning (BP-cube replaced by
+hill-climbing for 1-D, exactly as §5.1.3 states), gap corrected with a
+*global uniform* sample — the key contrast with PASS's per-stratum samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import dp as dp_mod
+from . import partition_tree as pt
+from .synopsis import build_synopsis
+from .types import QueryBatch, QueryResult, AGG_SUM, AGG_COUNT, AGG_MIN, AGG_MAX
+
+
+def uniform_synopsis(c, a, sample_budget: int, seed: int = 0):
+    """US baseline: one stratum = classic uniform sampling (§2.1)."""
+    syn, rep = build_synopsis(c, a, k=1, sample_budget=sample_budget,
+                              method="eq", seed=seed)
+    return syn, rep
+
+
+def stratified_synopsis(c, a, k: int, sample_budget: int, seed: int = 0):
+    """ST baseline: equal-depth strata (§5.1.3)."""
+    syn, rep = build_synopsis(c, a, k=k, sample_budget=sample_budget,
+                              method="eq", seed=seed)
+    return syn, rep
+
+
+@dataclasses.dataclass
+class AQPPP:
+    """AQP++ baseline (1-D and KD variants)."""
+    bound_lo: np.ndarray       # (B, d) partition boxes
+    bound_hi: np.ndarray
+    agg: np.ndarray            # (B, 5) exact partition aggregates
+    sample_c: np.ndarray       # (K, d) global uniform sample
+    sample_a: np.ndarray       # (K,)
+    sample_leaf: np.ndarray    # (K,) partition id of each sample
+    n: int
+
+    def estimate(self, queries: QueryBatch, kind: str = "sum",
+                 lam: float = 2.576) -> QueryResult:
+        q_lo = np.asarray(queries.lo, dtype=np.float64)
+        q_hi = np.asarray(queries.hi, dtype=np.float64)
+        lo, hi = self.bound_lo, self.bound_hi
+        nonempty = np.all(lo <= hi, axis=-1)
+        cover = (np.all(q_lo[:, None, :] <= lo[None], axis=-1)
+                 & np.all(hi[None] <= q_hi[:, None, :], axis=-1)
+                 & nonempty[None])                                  # (Q,B)
+        disjoint = (np.any(q_hi[:, None, :] < lo[None], axis=-1)
+                    | np.any(q_lo[:, None, :] > hi[None], axis=-1)
+                    | ~nonempty[None])
+        partial = ~cover & ~disjoint
+        K = self.sample_a.shape[0]
+        in_q = (np.all(q_lo[:, None, :] <= self.sample_c[None], axis=-1)
+                & np.all(self.sample_c[None] <= q_hi[:, None, :], axis=-1))
+        covered_sample = np.take_along_axis(
+            cover, self.sample_leaf[None].repeat(q_lo.shape[0], 0), axis=1)
+        gap = in_q & ~covered_sample                                 # (Q,K)
+        a = self.sample_a[None]
+        gapf = gap.astype(np.float64)
+        if kind == "sum":
+            exact = (cover * self.agg[None, :, AGG_SUM]).sum(axis=1)
+            phi = gapf * a * self.n
+        elif kind == "count":
+            exact = (cover * self.agg[None, :, AGG_COUNT]).sum(axis=1)
+            phi = gapf * self.n
+        elif kind == "avg":
+            # AQP++ answers AVG as SUM/COUNT of the combined estimate.
+            s = self.estimate(queries, "sum", lam)
+            cnt = self.estimate(queries, "count", lam)
+            denom = np.maximum(np.asarray(cnt.estimate), 1.0)
+            est = np.asarray(s.estimate) / denom
+            # First-order delta-method CI.
+            ci = (np.asarray(s.ci_half) + np.abs(est) * np.asarray(cnt.ci_half)) / denom
+            lob = np.asarray(s.lower) / np.maximum(np.asarray(cnt.upper), 1.0)
+            upb = np.asarray(s.upper) / np.maximum(np.asarray(cnt.lower), 1.0)
+            return QueryResult(jnp.asarray(est, jnp.float32),
+                               jnp.asarray(ci, jnp.float32),
+                               jnp.asarray(lob, jnp.float32),
+                               jnp.asarray(upb, jnp.float32),
+                               s.frac_rows_touched)
+        else:
+            raise ValueError(kind)
+        mean_phi = phi.mean(axis=1)
+        var_phi = np.maximum((phi * phi).mean(axis=1) - mean_phi ** 2, 0.0)
+        est = exact + mean_phi
+        ci = lam * np.sqrt(var_phi / K)
+        # Hard bounds from the partition aggregates (positive-shifted as §2.3).
+        if kind == "sum":
+            p_ub = np.minimum(self.agg[:, AGG_COUNT] * np.maximum(self.agg[:, AGG_MAX], 0),
+                              self.agg[:, AGG_SUM]
+                              - self.agg[:, AGG_COUNT] * np.minimum(self.agg[:, AGG_MIN], 0))
+            p_lb = np.maximum(self.agg[:, AGG_COUNT] * np.minimum(self.agg[:, AGG_MIN], 0),
+                              self.agg[:, AGG_SUM]
+                              - self.agg[:, AGG_COUNT] * np.maximum(self.agg[:, AGG_MAX], 0))
+        else:
+            p_ub = self.agg[:, AGG_COUNT]
+            p_lb = np.zeros_like(p_ub)
+        lower = exact + (partial * p_lb[None]).sum(axis=1)
+        upper = exact + (partial * p_ub[None]).sum(axis=1)
+        touched = (partial * self.agg[None, :, AGG_COUNT]).sum(axis=1) / max(self.n, 1)
+        f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+        return QueryResult(f32(est), f32(ci), f32(lower), f32(upper), f32(touched))
+
+
+def _hill_climb_cuts(c_sorted_vals: np.ndarray, a_sorted: np.ndarray, k: int,
+                     iters: int = 3, candidates: int = 8, seed: int = 0
+                     ) -> np.ndarray:
+    """AQP++'s iterative hill-climbing over interval boundaries [36].
+
+    Objective: sum over partitions of the §4.2.1 SUM variance (the expected
+    gap-estimation error proxy). Moves one boundary at a time to the best of
+    a few local candidates.
+    """
+    n = a_sorted.shape[0]
+    from . import prefix as px
+    s1, s2 = px.prefix_moments(a_sorted)
+    cuts = dp_mod.equal_depth_boundaries(n, k).copy()
+
+    def part_cost(g, w):
+        nn, sq, sqq = px.interval_moments(s1, s2, np.asarray(g), np.asarray(w))
+        return np.maximum(nn * sqq - sq * sq, 0.0) / np.maximum(nn, 1)
+
+    for _ in range(iters):
+        for b in range(1, k):
+            lo, hi = cuts[b - 1], cuts[b + 1]
+            if hi - lo < 2:
+                continue
+            cand = np.unique(np.clip(
+                np.linspace(lo + 1, hi - 1, candidates).astype(np.int64),
+                lo + 1, hi - 1))
+            costs = np.maximum(part_cost(np.full_like(cand, lo), cand),
+                               part_cost(cand, np.full_like(cand, hi)))
+            cuts[b] = cand[int(np.argmin(costs))]
+    return cuts
+
+
+def aqppp_synopsis(c, a, k: int, sample_budget: int, seed: int = 0,
+                   method: str = "hill") -> AQPPP:
+    """Build the AQP++ baseline structure (1-D hill climbing or KD-US)."""
+    c = np.asarray(c, dtype=np.float64)
+    c2 = c[:, None] if c.ndim == 1 else c
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    n, d = c2.shape
+    rng = np.random.default_rng(seed)
+    if d == 1 and method == "hill":
+        order = np.argsort(c2[:, 0], kind="stable")
+        cuts = _hill_climb_cuts(c2[order, 0], a[order], k, seed=seed)
+        ranks = np.empty(n, dtype=np.int64)
+        ranks[order] = np.arange(n)
+        assign = np.searchsorted(cuts[1:-1], ranks, side="right").astype(np.int32)
+        B = k
+    else:
+        # KD-US (§5.4): kd-tree always expanding the shallowest leaf =
+        # balanced equal-count boxes; equivalent to kd median splits.
+        from . import kdtree
+        assign, _ = kdtree.kd_partition(c2, np.ones_like(a), k=k, m=4096,
+                                        kind="count", seed=seed)
+        B = int(assign.max()) + 1
+    agg, lo, hi = pt.leaf_stats(c2, a, assign, B)
+    idx = rng.choice(n, size=min(sample_budget, n), replace=False)
+    return AQPPP(bound_lo=lo, bound_hi=hi, agg=agg,
+                 sample_c=c2[idx], sample_a=a[idx],
+                 sample_leaf=assign[idx].astype(np.int64), n=n)
+
+
+__all__ = ["uniform_synopsis", "stratified_synopsis", "AQPPP",
+           "aqppp_synopsis"]

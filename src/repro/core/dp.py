@@ -1,0 +1,290 @@
+"""Partitioning optimizers (paper §4.3, Appendix A).
+
+Implemented variants (names follow the paper's summary table):
+
+* ``equal_depth_boundaries``  — Lemma A.1: optimal for 1-D COUNT; also the
+  "EQ" baseline of §5.3.
+* ``dp_exact``                — the Naive DP (O(k N^4)) with the exact
+  enumerating oracle. Test/baseline use only.
+* ``dp_monotone``             — "Sampling + Discretization" (the ** algorithm
+  used in the paper's experiments): monotone DP with a vectorized lock-step
+  binary search over the split point (valid by the §4.3 monotonicity
+  argument) and the O(1) discretized variance oracles of §A.2–A.4.
+  O(k m log m) work, vectorized to O(k log m) numpy/JAX steps.
+* ``dp_monotone_jnp``         — the same algorithm as a jit-able jnp function
+  (f32; used on-device for re-optimization, tested against the f64 host
+  path).
+* ``adp_partition``           — end-to-end: uniform sample of m rows → sort →
+  ``dp_monotone`` → value-space thresholds for the full dataset.
+
+Boundary convention: a partitioning of m sorted samples is given by cut
+ranks 0 = c_0 <= c_1 <= ... <= c_k = m; partition j covers sample ranks
+[c_j, c_{j+1}).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import prefix as px
+
+
+# --------------------------------------------------------------------------
+# Baselines
+# --------------------------------------------------------------------------
+
+def equal_depth_boundaries(n: int, k: int) -> np.ndarray:
+    """Equal-size (equal-depth) cut ranks; optimal for COUNT (Lemma A.1)."""
+    return np.round(np.linspace(0, n, k + 1)).astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# Exact DP (tests / Naive DP row of the §4.3 table)
+# --------------------------------------------------------------------------
+
+def dp_exact(values_sorted: np.ndarray, k: int, kind: str,
+             min_len: int = 1) -> tuple[np.ndarray, float]:
+    """O(k n^2) DP over the full exact-oracle table (itself O(n^2) per cell).
+
+    Returns (cut ranks (k+1,), optimal max variance). Small n only.
+    """
+    v = np.asarray(values_sorted, dtype=np.float64)
+    n = v.shape[0]
+    s1, s2 = px.prefix_moments(v)
+    # M[g, w] = max variance of any subquery of partition [g, w)
+    M = np.zeros((n + 1, n + 1), dtype=np.float64)
+    for g in range(n + 1):
+        for w in range(g + 1, n + 1):
+            M[g, w] = px.oracle_exact(s1, s2, g, w, kind, min_len)
+    INF = np.inf
+    A = np.full((n + 1, k + 1), INF)
+    parent = np.zeros((n + 1, k + 1), dtype=np.int64)
+    A[0, :] = 0.0
+    A[:, 0] = INF
+    A[0, 0] = 0.0
+    for j in range(1, k + 1):
+        for i in range(0, n + 1):
+            # h = left cut of the last partition [h, i)
+            best, arg = INF, 0
+            for h in range(0, i + 1):
+                prev = A[h, j - 1] if h > 0 or j == 1 else (0.0 if j >= 1 else INF)
+                prev = A[h, j - 1]
+                cand = max(prev, M[h, i])
+                if cand < best:
+                    best, arg = cand, h
+            A[i, j] = best
+            parent[i, j] = arg
+    cuts = np.zeros(k + 1, dtype=np.int64)
+    cuts[k] = n
+    i = n
+    for j in range(k, 0, -1):
+        i = parent[i, j]
+        cuts[j - 1] = i
+    return cuts, float(A[n, k])
+
+
+# --------------------------------------------------------------------------
+# Monotone DP with discretized oracles (production path, host float64)
+# --------------------------------------------------------------------------
+
+def _make_oracle(values_sorted: np.ndarray, kind: str, delta_frac: float,
+                 scale: float = 1.0):
+    """Return (oracle(g, w) vectorized, win). Host/f64."""
+    v = np.asarray(values_sorted, dtype=np.float64)
+    m = v.shape[0]
+    s1, s2 = px.prefix_moments(v)
+    if kind in ("sum", "count"):
+        vals = np.ones_like(v) if kind == "count" else v
+        if kind == "count":
+            s1, s2 = px.prefix_moments(vals)
+
+        def oracle(g, w):
+            return px.oracle_sum_split(s1, s2, g, w, scale)
+        return oracle, 1
+    elif kind == "avg":
+        win = max(2, int(round(delta_frac * m)))
+        scores = px.window_sqsum(s2, win)
+        table = px.SparseTableArgmax(scores)
+
+        def oracle(g, w):
+            return px.oracle_avg_window(s1, s2, table, win, g, w)
+        return oracle, win
+    raise ValueError(f"unknown query kind: {kind}")
+
+
+def dp_monotone(values_sorted: np.ndarray, k: int, kind: str = "sum",
+                delta_frac: float = 0.01, scale: float = 1.0,
+                ) -> tuple[np.ndarray, float]:
+    """Monotone DP (paper §4.3 "Faster Algorithm With Monotonicity" +
+    §4.3.1 discretized oracles). Returns (cut ranks (k+1,), max variance).
+
+    The binary search over the split point h is run in lock-step for every
+    prefix length i simultaneously; validity follows from the paper's two
+    monotonicity facts: A[h, j-1] non-decreasing and M([h, i)) non-increasing
+    in h.
+    """
+    v = np.asarray(values_sorted, dtype=np.float64)
+    m = v.shape[0]
+    if k <= 1:
+        oracle, _ = _make_oracle(v, kind, delta_frac, scale)
+        return np.array([0, m], dtype=np.int64), float(oracle(np.array([0]), np.array([m]))[0])
+    oracle, _win = _make_oracle(v, kind, delta_frac, scale)
+    i_vec = np.arange(m + 1, dtype=np.int64)
+    A_prev = oracle(np.zeros(m + 1, dtype=np.int64), i_vec)  # j = 1
+    A_prev = np.asarray(A_prev, dtype=np.float64)
+    parents = np.zeros((k + 1, m + 1), dtype=np.int64)
+    steps = int(np.ceil(np.log2(m + 2)))
+    for j in range(2, k + 1):
+        lo = np.zeros(m + 1, dtype=np.int64)
+        hi = i_vec.copy()
+        for _ in range(steps):
+            mid = (lo + hi) // 2
+            pred = A_prev[mid] >= oracle(mid, i_vec)
+            hi = np.where(pred & (lo < hi), mid, hi)
+            lo = np.where(pred | (lo >= hi), lo, np.minimum(mid + 1, hi))
+        h1 = lo
+        h0 = np.maximum(h1 - 1, 0)
+        val1 = np.maximum(A_prev[h1], oracle(h1, i_vec))
+        val0 = np.maximum(A_prev[h0], oracle(h0, i_vec))
+        take0 = val0 < val1
+        A_new = np.where(take0, val0, val1)
+        parents[j] = np.where(take0, h0, h1)
+        A_prev = A_new
+    # Backtrack.
+    cuts = np.zeros(k + 1, dtype=np.int64)
+    cuts[k] = m
+    i = m
+    for j in range(k, 1, -1):
+        i = int(parents[j][i])
+        cuts[j - 1] = i
+    cuts[0] = 0
+    return cuts, float(A_prev[m])
+
+
+# --------------------------------------------------------------------------
+# jit-able monotone DP (SUM/COUNT oracle), f32
+# --------------------------------------------------------------------------
+
+def dp_monotone_jnp(values_sorted: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """SUM-kind monotone DP entirely in jnp (lax control flow), returning
+    (cuts (k+1,) int32, max variance f32). Same algorithm as `dp_monotone`
+    with the Lemma A.3 oracle; used for on-device re-optimization.
+    """
+    v = values_sorted.astype(jnp.float32)
+    m = v.shape[0]
+    s1, s2 = px.prefix_moments_jnp(v)
+
+    def oracle(g, w):
+        g = g.astype(jnp.int32)
+        w = w.astype(jnp.int32)
+        n_i = (w - g).astype(jnp.float32)
+        x = g + (w - g) // 2
+        n1 = (x - g).astype(jnp.float32)
+        sq1 = jnp.take(s1, x) - jnp.take(s1, g)
+        sqq1 = jnp.take(s2, x) - jnp.take(s2, g)
+        n2 = (w - x).astype(jnp.float32)
+        sq2 = jnp.take(s1, w) - jnp.take(s1, x)
+        sqq2 = jnp.take(s2, w) - jnp.take(s2, x)
+        ni = jnp.maximum(n_i, 1.0)
+        v1 = (ni * sqq1 - sq1 * sq1) / ni
+        v2 = (ni * sqq2 - sq2 * sq2) / ni
+        return jnp.where(n_i > 1, jnp.maximum(v1, v2), 0.0)
+
+    i_vec = jnp.arange(m + 1, dtype=jnp.int32)
+    A1 = oracle(jnp.zeros(m + 1, jnp.int32), i_vec)
+    steps = int(np.ceil(np.log2(m + 2)))
+
+    def layer(carry, _):
+        A_prev = carry
+
+        def bs_body(_, state):
+            lo, hi = state
+            mid = (lo + hi) // 2
+            pred = jnp.take(A_prev, mid) >= oracle(mid, i_vec)
+            new_hi = jnp.where(pred & (lo < hi), mid, hi)
+            new_lo = jnp.where(pred | (lo >= hi), lo, jnp.minimum(mid + 1, hi))
+            return new_lo, new_hi
+
+        lo = jnp.zeros(m + 1, jnp.int32)
+        hi = i_vec
+        lo, hi = jax.lax.fori_loop(0, steps, bs_body, (lo, hi))
+        h1 = lo
+        h0 = jnp.maximum(h1 - 1, 0)
+        val1 = jnp.maximum(jnp.take(A_prev, h1), oracle(h1, i_vec))
+        val0 = jnp.maximum(jnp.take(A_prev, h0), oracle(h0, i_vec))
+        take0 = val0 < val1
+        A_new = jnp.where(take0, val0, val1)
+        parent = jnp.where(take0, h0, h1)
+        return A_new, parent
+
+    A_final, parents = jax.lax.scan(layer, A1, None, length=k - 1)
+
+    def backtrack(j, state):
+        i, cuts = state
+        # parents row for DP layer j+2 is parents[j]; iterate j = k-2 .. 0
+        row = parents[k - 2 - j]
+        i_new = jnp.take(row, i)
+        cuts = cuts.at[k - 1 - j].set(i_new)
+        return i_new, cuts
+
+    cuts0 = jnp.zeros(k + 1, jnp.int32).at[k].set(m)
+    _, cuts = jax.lax.fori_loop(0, k - 1, backtrack, (jnp.int32(m), cuts0))
+    return cuts, A_final[m]
+
+
+# --------------------------------------------------------------------------
+# End-to-end ADP: sample -> optimize -> value thresholds
+# --------------------------------------------------------------------------
+
+def cuts_to_thresholds(sample_c_sorted: np.ndarray, cuts: np.ndarray) -> np.ndarray:
+    """Convert sample-rank cuts to k-1 value thresholds usable on full data.
+
+    Threshold i is the midpoint between the last sample of partition i and
+    the first sample of partition i+1 (robust to re-application on the full
+    dataset). Duplicate/empty cuts yield duplicated thresholds (empty
+    leaves), which the padded synopsis handles.
+    """
+    c = np.asarray(sample_c_sorted, dtype=np.float64)
+    m = c.shape[0]
+    inner = np.asarray(cuts[1:-1], dtype=np.int64)
+    lo_idx = np.clip(inner - 1, 0, m - 1)
+    hi_idx = np.clip(inner, 0, m - 1)
+    return 0.5 * (c[lo_idx] + c[hi_idx])
+
+
+def adp_partition(c: np.ndarray, a: np.ndarray, k: int, m: int,
+                  kind: str = "sum", delta_frac: float = 0.01,
+                  seed: int = 0) -> tuple[np.ndarray, np.ndarray, float]:
+    """The paper's ** algorithm (Sampling + Discretization), 1-D.
+
+    Draws m uniform sample rows, sorts by predicate value, runs the monotone
+    DP with the discretized oracle, and maps the resulting cuts back to
+    value-space thresholds. Returns (thresholds (k-1,), leaf assignment of
+    every row (N,), achieved sample-space max variance).
+    """
+    c = np.asarray(c).reshape(-1)
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    n = c.shape[0]
+    rng = np.random.default_rng(seed)
+    m_eff = min(m, n)
+    idx = rng.choice(n, size=m_eff, replace=False)
+    cs, as_ = c[idx], a[idx]
+    order = np.argsort(cs, kind="stable")
+    cs, as_ = cs[order], as_[order]
+    if kind == "count":
+        cuts = equal_depth_boundaries(m_eff, k)  # Lemma A.1 (optimal)
+        vmax = 0.0
+    else:
+        scale = (n / max(m_eff, 1)) ** 2
+        cuts, vmax = dp_monotone(as_, k, kind=kind, delta_frac=delta_frac,
+                                 scale=scale)
+    thresholds = cuts_to_thresholds(cs, cuts)
+    assign = np.searchsorted(thresholds, c, side="right").astype(np.int32)
+    return thresholds, assign, vmax
+
+
+__all__ = [
+    "equal_depth_boundaries", "dp_exact", "dp_monotone", "dp_monotone_jnp",
+    "cuts_to_thresholds", "adp_partition",
+]

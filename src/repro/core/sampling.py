@@ -1,0 +1,93 @@
+"""Uniform / stratified / reservoir sampling (paper §2.1, §2.2, §4.5 updates)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def uniform_sample(c: np.ndarray, a: np.ndarray, size: int, seed: int = 0
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Uniform sample without replacement; returns (c_s, a_s, idx)."""
+    n = a.shape[0]
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(n, size=min(size, n), replace=False)
+    c = np.asarray(c)
+    return c[idx], np.asarray(a)[idx], idx
+
+
+def stratified_sample(c: np.ndarray, a: np.ndarray, assign: np.ndarray,
+                      k: int, s_per_leaf: int, seed: int = 0
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Per-leaf uniform samples (the strata of §3.2), padded to fixed shape.
+
+    Returns (sample_c (k, s, d), sample_a (k, s), valid (k, s) bool,
+    k_per_leaf (k,) int32). Strata smaller than ``s_per_leaf`` are fully
+    sampled (their estimates become exact under the FPC correction).
+    """
+    c = np.asarray(c, dtype=np.float64)
+    if c.ndim == 1:
+        c = c[:, None]
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    assign = np.asarray(assign, dtype=np.int64)
+    d = c.shape[1]
+    rng = np.random.default_rng(seed)
+    sample_c = np.zeros((k, s_per_leaf, d), dtype=np.float64)
+    sample_a = np.zeros((k, s_per_leaf), dtype=np.float64)
+    valid = np.zeros((k, s_per_leaf), dtype=bool)
+    k_per_leaf = np.zeros(k, dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    sorted_assign = assign[order]
+    starts = np.searchsorted(sorted_assign, np.arange(k), side="left")
+    ends = np.searchsorted(sorted_assign, np.arange(k), side="right")
+    for i in range(k):
+        rows = order[starts[i]:ends[i]]
+        if rows.size == 0:
+            continue
+        take = min(s_per_leaf, rows.size)
+        sel = rng.choice(rows, size=take, replace=False)
+        sample_c[i, :take] = c[sel]
+        sample_a[i, :take] = a[sel]
+        valid[i, :take] = True
+        k_per_leaf[i] = take
+    return sample_c, sample_a, valid, k_per_leaf
+
+
+def proportional_allocation(n_rows: np.ndarray, total_budget: int,
+                            min_per_leaf: int = 4) -> np.ndarray:
+    """Sample-budget split across strata proportional to stratum size
+    (Neyman allocation with uniform variance assumption)."""
+    n_rows = np.asarray(n_rows, dtype=np.float64)
+    total = max(n_rows.sum(), 1.0)
+    alloc = np.maximum(np.round(total_budget * n_rows / total), min_per_leaf)
+    alloc = np.minimum(alloc, np.maximum(n_rows, 0))
+    return alloc.astype(np.int64)
+
+
+class ReservoirStratum:
+    """Reservoir sampler for one stratum (Vitter [41]; paper §4.5 dynamic
+    updates). Maintains a uniform sample under insertions; aggregate stats
+    are updated exactly and pushed up the tree by the Synopsis owner."""
+
+    def __init__(self, capacity: int, seed: int = 0):
+        self.capacity = capacity
+        self.rng = np.random.default_rng(seed)
+        self.seen = 0
+        self.c: list[np.ndarray] = []
+        self.a: list[float] = []
+
+    def insert(self, c_row: np.ndarray, a_val: float) -> tuple[bool, int]:
+        """Returns (accepted, replaced_slot or -1)."""
+        self.seen += 1
+        if len(self.a) < self.capacity:
+            self.c.append(np.asarray(c_row, dtype=np.float64))
+            self.a.append(float(a_val))
+            return True, len(self.a) - 1
+        j = int(self.rng.integers(0, self.seen))
+        if j < self.capacity:
+            self.c[j] = np.asarray(c_row, dtype=np.float64)
+            self.a[j] = float(a_val)
+            return True, j
+        return False, -1
+
+
+__all__ = ["uniform_sample", "stratified_sample", "proportional_allocation",
+           "ReservoirStratum"]

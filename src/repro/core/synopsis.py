@@ -1,0 +1,141 @@
+"""End-to-end PASS synopsis construction (paper §3.1, §4.1, §4.5).
+
+The builder consumes the user-facing budgets — construction budget expressed
+as the leaf count k (tau_c in the paper maps to k through the ADP cost
+model) and a query-latency budget expressed as the total sample count K
+(tau_q) — and produces a `Synopsis`:
+
+    1-D : ADP (sampling + discretization DP) or EQ partitioning
+    d-D : KD-PASS greedy max-variance k-d refinement (kdtree.py)
+    then: exact leaf aggregates (segment_reduce), bottom-up tree,
+          per-leaf stratified samples.
+
+Delta encoding (§3.4) is available as a storage transform.
+"""
+from __future__ import annotations
+
+import time
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import dp as dp_mod
+from . import partition_tree as pt
+from . import sampling
+from .types import Synopsis, PartitionTree, AGG_COUNT
+
+
+@dataclasses.dataclass
+class BuildReport:
+    seconds_total: float
+    seconds_partition: float
+    seconds_aggregate: float
+    seconds_sample: float
+    k: int
+    total_samples: int
+    max_variance: float
+
+
+def build_synopsis(c, a, *, k: int = 64, sample_budget: int | None = None,
+                   sample_rate: float | None = 0.005, kind: str = "sum",
+                   method: str = "adp", opt_samples: int = 4096,
+                   delta_frac: float = 0.01, seed: int = 0,
+                   allocation: str = "equal",
+                   ) -> tuple[Synopsis, BuildReport]:
+    """Construct a PASS synopsis over rows (c, a).
+
+    method: 'adp' (paper **), 'eq' (equal depth), 'kd' (multi-D KD-PASS).
+    allocation: 'equal' (paper §5.1.3: K/B per stratum) or 'proportional'.
+    """
+    t0 = time.perf_counter()
+    c = np.asarray(c, dtype=np.float64)
+    c2 = c[:, None] if c.ndim == 1 else c
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    n, d = c2.shape
+    if sample_budget is None:
+        sample_budget = int(np.ceil((sample_rate or 0.005) * n))
+
+    vmax = 0.0
+    if d == 1 and method in ("adp", "eq"):
+        if method == "adp":
+            _, assign, vmax = dp_mod.adp_partition(
+                c2[:, 0], a, k=k, m=opt_samples, kind=kind,
+                delta_frac=delta_frac, seed=seed)
+        else:
+            order = np.argsort(c2[:, 0], kind="stable")
+            ranks = np.empty(n, dtype=np.int64)
+            ranks[order] = np.arange(n)
+            cuts = dp_mod.equal_depth_boundaries(n, k)
+            assign = (np.searchsorted(cuts[1:-1], ranks, side="right")
+                      ).astype(np.int32)
+    else:
+        from . import kdtree
+        assign, _boxes = kdtree.kd_partition(
+            c2, a, k=k, m=opt_samples, kind=kind, delta_frac=delta_frac,
+            seed=seed)
+        k = int(assign.max()) + 1 if assign.size else k
+    t1 = time.perf_counter()
+
+    agg, lo, hi = pt.leaf_stats(c2, a, assign, k)
+    tree = pt.build_tree_from_leaves(agg, lo, hi)
+    t2 = time.perf_counter()
+
+    if allocation == "proportional":
+        per_leaf = sampling.proportional_allocation(agg[:, AGG_COUNT],
+                                                    sample_budget)
+        s_per_leaf = int(per_leaf.max()) if per_leaf.size else 1
+    else:
+        s_per_leaf = max(1, sample_budget // max(k, 1))
+    sample_c, sample_a, valid, k_per_leaf = sampling.stratified_sample(
+        c2, a, assign, k, s_per_leaf, seed=seed + 1)
+    t3 = time.perf_counter()
+
+    syn = Synopsis(
+        leaf_lo=jnp.asarray(lo, jnp.float32),
+        leaf_hi=jnp.asarray(hi, jnp.float32),
+        leaf_agg=jnp.asarray(agg, jnp.float32),
+        n_rows=jnp.asarray(agg[:, AGG_COUNT], jnp.float32),
+        sample_c=jnp.asarray(sample_c, jnp.float32),
+        sample_a=jnp.asarray(sample_a, jnp.float32),
+        sample_valid=jnp.asarray(valid),
+        k_per_leaf=jnp.asarray(k_per_leaf, jnp.int32),
+        tree=PartitionTree(
+            lo=jnp.asarray(tree.lo, jnp.float32),
+            hi=jnp.asarray(tree.hi, jnp.float32),
+            agg=jnp.asarray(tree.agg, jnp.float32),
+            left=jnp.asarray(tree.left), right=jnp.asarray(tree.right),
+            leaf_id=jnp.asarray(tree.leaf_id), level=jnp.asarray(tree.level)),
+        num_leaves=k, d=d, total_rows=n)
+    report = BuildReport(
+        seconds_total=t3 - t0, seconds_partition=t1 - t0,
+        seconds_aggregate=t2 - t1, seconds_sample=t3 - t2, k=k,
+        total_samples=int(k_per_leaf.sum()), max_variance=float(vmax))
+    return syn, report
+
+
+def delta_encode(syn: Synopsis) -> tuple[Synopsis, dict]:
+    """Delta-encode sample values against their stratum mean (§3.4).
+
+    Returns a synopsis whose `sample_a` stores deltas plus a codec dict; a
+    storage benchmark quantifies the dynamic-range shrink. `delta_decode`
+    restores the original synopsis bit-exactly in f32.
+    """
+    mean = syn.leaf_agg[:, 0] / jnp.maximum(syn.leaf_agg[:, AGG_COUNT], 1.0)
+    deltas = jnp.where(syn.sample_valid, syn.sample_a - mean[:, None], 0.0)
+    enc = dataclasses.replace(syn, sample_a=deltas)
+    stats = {
+        "orig_absmax": float(jnp.max(jnp.abs(jnp.where(syn.sample_valid,
+                                                       syn.sample_a, 0.0)))),
+        "delta_absmax": float(jnp.max(jnp.abs(deltas))),
+    }
+    return enc, stats
+
+
+def delta_decode(syn: Synopsis) -> Synopsis:
+    mean = syn.leaf_agg[:, 0] / jnp.maximum(syn.leaf_agg[:, AGG_COUNT], 1.0)
+    vals = jnp.where(syn.sample_valid, syn.sample_a + mean[:, None], 0.0)
+    return dataclasses.replace(syn, sample_a=vals)
+
+
+__all__ = ["build_synopsis", "BuildReport", "delta_encode", "delta_decode"]

@@ -1,0 +1,137 @@
+"""Core pytree types for PASS synopses.
+
+All arrays are fixed-shape so every structure is jit/pjit friendly. Ragged
+strata are padded; validity is carried by masks and true counts, and every
+estimator is mask-weighted so padding is exact (see DESIGN.md §3).
+
+Aggregate layout (the paper's SUM/COUNT/MIN/MAX plus SUMSQ, which we add for
+variance telemetry and delta-encoding — noted in DESIGN.md):
+    agg[..., 0] = SUM
+    agg[..., 1] = SUMSQ
+    agg[..., 2] = COUNT
+    agg[..., 3] = MIN   (+inf for empty)
+    agg[..., 4] = MAX   (-inf for empty)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AGG_SUM, AGG_SUMSQ, AGG_COUNT, AGG_MIN, AGG_MAX = 0, 1, 2, 3, 4
+NUM_AGGS = 5
+
+# Classification codes for leaf-vs-query relation (paper §2.3).
+REL_NONE, REL_PARTIAL, REL_COVER = 0, 1, 2
+
+
+def _dc(cls):
+    """Register a dataclass as a JAX pytree with all fields as children."""
+    fields = [f.name for f in dataclasses.fields(cls)]
+    return jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["lo", "hi", "agg", "left", "right", "leaf_id", "level"],
+         meta_fields=[])
+@dataclasses.dataclass
+class PartitionTree:
+    """Flat-array partition tree (paper §3.2, Definition 3.1).
+
+    Nodes are stored level-major (root first). ``leaf_id[v] >= 0`` iff node v
+    is a leaf; leaves index the stratified-sample arrays of the Synopsis.
+    ``lo``/``hi`` are the *data* bounding boxes of each node (min/max of the
+    predicate columns of the rows it contains), which makes the
+    cover/partial/none classification exact w.r.t. the actual rows.
+    """
+    lo: jax.Array        # (num_nodes, d)
+    hi: jax.Array        # (num_nodes, d)
+    agg: jax.Array       # (num_nodes, NUM_AGGS) float
+    left: jax.Array      # (num_nodes,) int32, -1 if leaf
+    right: jax.Array     # (num_nodes,) int32, -1 if leaf
+    leaf_id: jax.Array   # (num_nodes,) int32, -1 if internal
+    level: jax.Array     # (num_nodes,) int32 depth (root = 0)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.lo.shape[0]
+
+    @property
+    def dims(self) -> int:
+        return self.lo.shape[1]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["leaf_lo", "leaf_hi", "leaf_agg", "n_rows",
+                      "sample_c", "sample_a", "sample_valid", "k_per_leaf",
+                      "tree"],
+         meta_fields=["num_leaves", "d", "total_rows"])
+@dataclasses.dataclass
+class Synopsis:
+    """A complete PASS synopsis: leaf partitions + aggregates + strata.
+
+    ``leaf_lo/leaf_hi`` are per-leaf data bounding boxes (k, d).
+    ``leaf_agg`` are exact per-leaf aggregates (k, NUM_AGGS).
+    ``sample_c`` (k, s, d) / ``sample_a`` (k, s): per-leaf uniform samples
+    (the stratified sample of §3.2); ``sample_valid`` (k, s) masks padding;
+    ``k_per_leaf`` (k,) = true sample count per stratum.
+    ``n_rows`` (k,) = exact row count per leaf (== leaf_agg[:, COUNT], kept
+    as int for weighting). ``tree`` is the aggregate hierarchy.
+    """
+    leaf_lo: jax.Array
+    leaf_hi: jax.Array
+    leaf_agg: jax.Array
+    n_rows: jax.Array
+    sample_c: jax.Array
+    sample_a: jax.Array
+    sample_valid: jax.Array
+    k_per_leaf: jax.Array
+    tree: PartitionTree
+    num_leaves: int
+    d: int
+    total_rows: int
+
+    def storage_floats(self) -> int:
+        """Synopsis size in stored scalars (for BSS accounting, paper §5.1.4)."""
+        return int(sum(np.prod(x.shape) for x in
+                       (self.leaf_lo, self.leaf_hi, self.leaf_agg,
+                        self.sample_c, self.sample_a))
+                   + self.tree.agg.size + self.tree.lo.size + self.tree.hi.size)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["lo", "hi"], meta_fields=[])
+@dataclasses.dataclass
+class QueryBatch:
+    """Rectangular predicates: lo <= C_i <= hi, inclusive (paper §3.1)."""
+    lo: jax.Array  # (Q, d)
+    hi: jax.Array  # (Q, d)
+
+    @property
+    def num_queries(self) -> int:
+        return self.lo.shape[0]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["estimate", "ci_half", "lower", "upper",
+                      "frac_rows_touched"],
+         meta_fields=[])
+@dataclasses.dataclass
+class QueryResult:
+    """Estimates + CLT confidence interval + deterministic hard bounds."""
+    estimate: jax.Array           # (Q,)
+    ci_half: jax.Array            # (Q,) lambda * sqrt(sum w^2 V)
+    lower: jax.Array              # (Q,) deterministic lower bound (§2.3)
+    upper: jax.Array              # (Q,) deterministic upper bound
+    frac_rows_touched: jax.Array  # (Q,) fraction of rows NOT skipped (ESS/skip rate)
+
+
+__all__ = [
+    "PartitionTree", "Synopsis", "QueryBatch", "QueryResult",
+    "AGG_SUM", "AGG_SUMSQ", "AGG_COUNT", "AGG_MIN", "AGG_MAX", "NUM_AGGS",
+    "REL_NONE", "REL_PARTIAL", "REL_COVER",
+]

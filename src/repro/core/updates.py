@@ -1,0 +1,137 @@
+"""Dynamic updates (paper §4.5): insertions with reservoir sampling.
+
+Each inserted row updates, in O(height) time: the exact aggregates of its
+leaf and of every ancestor (SUM/SUMSQ/COUNT exactly; MIN/MAX monotonically),
+the leaf's data bounding box, and — with reservoir probability — one slot
+of the leaf's stratified sample. Estimates remain statistically consistent
+for SUM/COUNT/AVG (Vitter [41]); the paper leaves re-optimization cadence
+(split & merge) as future work, and so do we — `staleness()` exposes the
+drift signal a re-optimization policy would consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from .types import Synopsis, AGG_SUM, AGG_SUMSQ, AGG_COUNT, AGG_MIN, AGG_MAX
+
+
+class UpdatableSynopsis:
+    """Host-side mutable wrapper around an immutable `Synopsis`.
+
+    Batched inserts mutate numpy buffers; `snapshot()` re-materializes the
+    jit-ready immutable synopsis (cheap: array uploads only).
+    """
+
+    def __init__(self, syn: Synopsis, seed: int = 0):
+        self.leaf_lo = np.asarray(syn.leaf_lo, dtype=np.float64).copy()
+        self.leaf_hi = np.asarray(syn.leaf_hi, dtype=np.float64).copy()
+        self.leaf_agg = np.asarray(syn.leaf_agg, dtype=np.float64).copy()
+        self.sample_c = np.asarray(syn.sample_c, dtype=np.float64).copy()
+        self.sample_a = np.asarray(syn.sample_a, dtype=np.float64).copy()
+        self.sample_valid = np.asarray(syn.sample_valid).copy()
+        self.k_per_leaf = np.asarray(syn.k_per_leaf).copy()
+        self.seen = self.leaf_agg[:, AGG_COUNT].astype(np.int64).copy()
+        self.tree_agg = np.asarray(syn.tree.agg, dtype=np.float64).copy()
+        self.tree_lo = np.asarray(syn.tree.lo, dtype=np.float64).copy()
+        self.tree_hi = np.asarray(syn.tree.hi, dtype=np.float64).copy()
+        self._tpl = syn
+        self.rng = np.random.default_rng(seed)
+        self.total_rows = syn.total_rows
+        self.inserts_since_build = 0
+        # leaf node ids in the (heap-layout) tree
+        leaf_id = np.asarray(syn.tree.leaf_id)
+        self.leaf_node = np.full(syn.num_leaves, -1, dtype=np.int64)
+        for v, lid in enumerate(leaf_id):
+            if 0 <= lid < syn.num_leaves:
+                self.leaf_node[lid] = v
+
+    def _route(self, c_row: np.ndarray) -> int:
+        """Leaf whose box contains (or is nearest to) the row."""
+        inside = np.all((self.leaf_lo <= c_row) & (c_row <= self.leaf_hi),
+                        axis=1)
+        hit = np.where(inside)[0]
+        if hit.size:
+            return int(hit[0])
+        # outside every box (new value range): nearest box by L1 distance
+        d = (np.maximum(self.leaf_lo - c_row, 0)
+             + np.maximum(c_row - self.leaf_hi, 0)).sum(axis=1)
+        d = np.where(np.all(self.leaf_lo <= self.leaf_hi, axis=1), d, np.inf)
+        return int(np.argmin(d))
+
+    def insert(self, c_row, a_val: float):
+        c_row = np.atleast_1d(np.asarray(c_row, dtype=np.float64))
+        leaf = self._route(c_row)
+        # exact aggregate + box maintenance, leaf -> root
+        self.leaf_agg[leaf, AGG_SUM] += a_val
+        self.leaf_agg[leaf, AGG_SUMSQ] += a_val * a_val
+        self.leaf_agg[leaf, AGG_COUNT] += 1
+        self.leaf_agg[leaf, AGG_MIN] = min(self.leaf_agg[leaf, AGG_MIN], a_val)
+        self.leaf_agg[leaf, AGG_MAX] = max(self.leaf_agg[leaf, AGG_MAX], a_val)
+        self.leaf_lo[leaf] = np.minimum(self.leaf_lo[leaf], c_row)
+        self.leaf_hi[leaf] = np.maximum(self.leaf_hi[leaf], c_row)
+        v = int(self.leaf_node[leaf])
+        while v >= 0:
+            self.tree_agg[v, AGG_SUM] += a_val
+            self.tree_agg[v, AGG_SUMSQ] += a_val * a_val
+            self.tree_agg[v, AGG_COUNT] += 1
+            self.tree_agg[v, AGG_MIN] = min(self.tree_agg[v, AGG_MIN], a_val)
+            self.tree_agg[v, AGG_MAX] = max(self.tree_agg[v, AGG_MAX], a_val)
+            self.tree_lo[v] = np.minimum(self.tree_lo[v], c_row)
+            self.tree_hi[v] = np.maximum(self.tree_hi[v], c_row)
+            v = (v - 1) // 2 if v > 0 else -1
+        # reservoir (Vitter): uniform leaf sample under inserts
+        self.seen[leaf] += 1
+        cap = self.sample_c.shape[1]
+        kl = int(self.k_per_leaf[leaf])
+        if kl < cap:
+            slot = kl
+            self.k_per_leaf[leaf] = kl + 1
+        else:
+            j = int(self.rng.integers(0, self.seen[leaf]))
+            if j >= cap:
+                slot = -1
+            else:
+                slot = j
+        if slot >= 0:
+            self.sample_c[leaf, slot] = c_row
+            self.sample_a[leaf, slot] = a_val
+            self.sample_valid[leaf, slot] = True
+        self.total_rows += 1
+        self.inserts_since_build += 1
+
+    def insert_batch(self, c_rows, a_vals):
+        c_rows = np.asarray(c_rows, dtype=np.float64)
+        if c_rows.ndim == 1:
+            c_rows = c_rows[:, None]
+        for i in range(c_rows.shape[0]):
+            self.insert(c_rows[i], float(a_vals[i]))
+
+    def staleness(self) -> float:
+        """Fraction of rows inserted since the last (re)build — the signal
+        a split-and-merge re-optimization policy would threshold."""
+        return self.inserts_since_build / max(self.total_rows, 1)
+
+    def snapshot(self) -> Synopsis:
+        t = self._tpl
+        return dataclasses.replace(
+            t,
+            leaf_lo=jnp.asarray(self.leaf_lo, jnp.float32),
+            leaf_hi=jnp.asarray(self.leaf_hi, jnp.float32),
+            leaf_agg=jnp.asarray(self.leaf_agg, jnp.float32),
+            n_rows=jnp.asarray(self.leaf_agg[:, AGG_COUNT], jnp.float32),
+            sample_c=jnp.asarray(self.sample_c, jnp.float32),
+            sample_a=jnp.asarray(self.sample_a, jnp.float32),
+            sample_valid=jnp.asarray(self.sample_valid),
+            k_per_leaf=jnp.asarray(self.k_per_leaf, jnp.int32),
+            tree=dataclasses.replace(
+                t.tree,
+                agg=jnp.asarray(self.tree_agg, jnp.float32),
+                lo=jnp.asarray(self.tree_lo, jnp.float32),
+                hi=jnp.asarray(self.tree_hi, jnp.float32)),
+            total_rows=self.total_rows)
+
+
+__all__ = ["UpdatableSynopsis"]

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the PASS hot paths + jnp references."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Shapes follow the kernel calling convention exactly (including the
+transposed (d_pad, ·) coordinate layouts chosen for TPU lane alignment);
+`ops.py` adapts user-facing shapes to these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_BIG = -3.0e38
+POS_BIG = 3.0e38
+
+
+def segment_reduce_ref(values: jnp.ndarray, seg_ids: jnp.ndarray, k: int
+                       ) -> jnp.ndarray:
+    """Per-segment [sum, sumsq, count, min, max].
+
+    values (N,) f32; seg_ids (N,) int32 in [0, k) or -1 for padding rows.
+    Returns (k, 5) f32; empty segments get [0, 0, 0, +BIG, -BIG].
+    """
+    onehot = (seg_ids[:, None] == jnp.arange(k, dtype=jnp.int32)[None]
+              ).astype(jnp.float32)
+    s = onehot.T @ values
+    ssq = onehot.T @ (values * values)
+    cnt = onehot.sum(axis=0)
+    vmin = jnp.min(jnp.where(onehot > 0, values[:, None], POS_BIG), axis=0)
+    vmax = jnp.max(jnp.where(onehot > 0, values[:, None], NEG_BIG), axis=0)
+    return jnp.stack([s, ssq, cnt, vmin, vmax], axis=-1)
+
+
+def stratified_moments_ref(c_t: jnp.ndarray, a: jnp.ndarray,
+                           leaf: jnp.ndarray, qlo_t: jnp.ndarray,
+                           qhi_t: jnp.ndarray, k: int, d: int
+                           ) -> jnp.ndarray:
+    """Per-(query, stratum) relevant-sample moments [k_pred, sum, sumsq].
+
+    c_t (d_pad, S) transposed sample coords; a (S,) values; leaf (S,) int32
+    stratum id (-1 = padding); qlo_t/qhi_t (d_pad, Q). Only the first `d`
+    coordinate rows participate. Returns (Q, k, 3) f32.
+    """
+    S = a.shape[0]
+    Q = qlo_t.shape[1]
+    pred = jnp.ones((Q, S), dtype=jnp.bool_)
+    for j in range(d):
+        cj = c_t[j][None, :]                    # (1,S)
+        pred = pred & (qlo_t[j][:, None] <= cj) & (cj <= qhi_t[j][:, None])
+    pred = pred & (leaf >= 0)[None, :]
+    predf = pred.astype(jnp.float32)
+    onehot = (leaf[:, None] == jnp.arange(k, dtype=jnp.int32)[None]
+              ).astype(jnp.float32)              # (S,k)
+    kp = predf @ onehot                          # (Q,k)
+    sm = (predf * a[None]) @ onehot
+    sq = (predf * (a * a)[None]) @ onehot
+    return jnp.stack([kp, sm, sq], axis=-1)
+
+
+def query_eval_ref(leaf_lo_t: jnp.ndarray, leaf_hi_t: jnp.ndarray,
+                   leaf_agg: jnp.ndarray, qlo_t: jnp.ndarray,
+                   qhi_t: jnp.ndarray, d: int
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Leaf classification + exact covered-aggregate accumulation.
+
+    leaf_lo_t/leaf_hi_t (d_pad, k) transposed leaf boxes; leaf_agg (k, 8)
+    padded aggregates [sum, sumsq, count, min, max, n_rows, 0, 0];
+    qlo_t/qhi_t (d_pad, Q). Returns:
+      rel     (Q, k) int32: 0 none / 1 partial / 2 cover,
+      exact   (Q, 8) f32:  sum over covered leaves of leaf_agg.
+    """
+    Q = qlo_t.shape[1]
+    k = leaf_lo_t.shape[1]
+    nonempty = jnp.ones((k,), dtype=jnp.bool_)
+    cover = jnp.ones((Q, k), dtype=jnp.bool_)
+    disjoint = jnp.zeros((Q, k), dtype=jnp.bool_)
+    for j in range(d):
+        lo = leaf_lo_t[j][None, :]
+        hi = leaf_hi_t[j][None, :]
+        nonempty = nonempty & (leaf_lo_t[j] <= leaf_hi_t[j])
+        cover = cover & (qlo_t[j][:, None] <= lo) & (hi <= qhi_t[j][:, None])
+        disjoint = disjoint | (qhi_t[j][:, None] < lo) | (qlo_t[j][:, None] > hi)
+    disjoint = disjoint | ~nonempty[None]
+    cover = cover & nonempty[None]
+    rel = jnp.where(cover, 2, jnp.where(disjoint, 0, 1)).astype(jnp.int32)
+    exact = cover.astype(jnp.float32) @ leaf_agg
+    return rel, exact
+
+
+__all__ = ["segment_reduce_ref", "stratified_moments_ref", "query_eval_ref",
+           "NEG_BIG", "POS_BIG"]

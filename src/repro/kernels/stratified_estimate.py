@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: per-(query, stratum) relevant-sample moments.
+
+The PASS query-serving hot path (paper §3.3 "Sample Estimation"): for every
+query q and stratum i, compute over the stratum's samples
+    k_pred = #relevant, s_sum = sum(a), s_sumsq = sum(a^2).
+
+TPU mapping (DESIGN.md §3): the predicate mask pred (BQ, BS) is built in
+VMEM from lane-aligned transposed coordinates (d_pad, BS)/(d_pad, BQ), then
+three MXU matmuls against the one-hot stratum matrix produce the (BQ, BK)
+moment tiles. Samples are stored leaf-major so the one-hot is nearly block
+diagonal; padding samples carry leaf id -1.
+
+Grid: (q_tiles, k_tiles, s_tiles) with the sample dimension innermost
+(sequential accumulation into the (BQ, BK, 3) output tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref, out_ref,
+            *, bk: int, d: int):
+    st = pl.program_id(2)
+    kt = pl.program_id(1)
+    a = a_ref[...]                        # (BS,)
+    leaf = leaf_ref[...]                  # (BS,)
+    bq = qlo_ref.shape[1]
+    bs = a.shape[0]
+    pred = jnp.ones((bq, bs), dtype=jnp.bool_)
+    for j in range(d):
+        cj = c_ref[j, :][None, :]                         # (1, BS)
+        lo = qlo_ref[j, :][:, None]                       # (BQ, 1)
+        hi = qhi_ref[j, :][:, None]
+        pred = pred & (lo <= cj) & (cj <= hi)
+    predf = pred.astype(jnp.float32)
+    k_base = kt * bk
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (bs, bk), 1) + k_base
+    onehot = (leaf[:, None] == k_iota).astype(jnp.float32)  # (BS, BK)
+
+    def mm(lhs):   # (BQ, BS) @ (BS, BK)
+        return jax.lax.dot_general(lhs, onehot, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    kp = mm(predf)
+    sm = mm(predf * a[None, :])
+    sq = mm(predf * (a * a)[None, :])
+    tile = jnp.stack([kp, sm, sq], axis=-1)               # (BQ, BK, 3)
+
+    @pl.when(st == 0)
+    def _init():
+        out_ref[...] = tile
+
+    @pl.when(st != 0)
+    def _acc():
+        out_ref[...] += tile
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "d", "bq", "bk", "bs", "interpret"))
+def stratified_moments(c_t: jnp.ndarray, a: jnp.ndarray, leaf: jnp.ndarray,
+                       qlo_t: jnp.ndarray, qhi_t: jnp.ndarray, k: int, d: int,
+                       bq: int = 128, bk: int = 128, bs: int = 1024,
+                       interpret: bool = True) -> jnp.ndarray:
+    """c_t (d_pad, S) f32; a (S,) f32; leaf (S,) int32 (-1 padding);
+    qlo_t/qhi_t (d_pad, Q). S % bs == 0, Q % bq == 0, k % bk == 0.
+    Returns (Q, k, 3) f32 = [k_pred, sum, sumsq]."""
+    d_pad, S = c_t.shape
+    Q = qlo_t.shape[1]
+    assert S % bs == 0 and Q % bq == 0 and k % bk == 0, (S, bs, Q, bq, k, bk)
+    grid = (Q // bq, k // bk, S // bs)
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_pad, bs), lambda qt, kt, st: (0, st)),
+            pl.BlockSpec((bs,), lambda qt, kt, st: (st,)),
+            pl.BlockSpec((bs,), lambda qt, kt, st: (st,)),
+            pl.BlockSpec((d_pad, bq), lambda qt, kt, st: (0, qt)),
+            pl.BlockSpec((d_pad, bq), lambda qt, kt, st: (0, qt)),
+        ],
+        out_specs=pl.BlockSpec((bq, bk, 3), lambda qt, kt, st: (qt, kt, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q, k, 3), jnp.float32),
+        interpret=interpret,
+    )(c_t, a, leaf, qlo_t, qhi_t)
+
+
+__all__ = ["stratified_moments"]

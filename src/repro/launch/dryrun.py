@@ -1,0 +1,387 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (and persists under artifacts/dryrun/):
+  * memory_analysis()  — proves the program fits per-device HBM,
+  * cost_analysis()    — per-device HLO FLOPs / bytes for §Roofline,
+  * collective bytes   — parsed from the partitioned HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+  * lowering + compile wall time.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+from __future__ import annotations
+
+# The dry-run needs 512 placeholder devices BEFORE any jax initialization —
+# these lines must run before any other import (including `from repro...`),
+# since jax locks the device count on first init.
+# --xla_llvm_disable_expensive_passes only affects CPU *codegen* speed; the
+# HLO-level metrics we harvest (cost_analysis, memory_analysis, collective
+# ops) are computed before LLVM and are unchanged by it.
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512"
+                           + " --xla_llvm_disable_expensive_passes=true")
+
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, ARCHITECTURES, SHAPES
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.models import sharding as shd
+from repro.optim import adamw
+from repro.launch import mesh as mesh_lib
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of an HLO shape string like 'bf16[4,128]{1,0}' (tuples summed)."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in a (partitioned) module."""
+    stats = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(m.group(1))
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+# --------------------------------------------------------------------------
+# Input specs per (arch, shape)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this shape
+    (weak-type-correct, shardable, no device allocation)."""
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    sds = jax.ShapeDtypeStruct
+    if info["step"] in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        if info["step"] == "prefill":
+            batch.pop("labels")
+        if cfg.frontend == "vision_stub":
+            batch["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+        if cfg.enc_layers:
+            batch["enc_embeds"] = sds((B, cfg.enc_seq, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+        return batch
+    # decode: token + pos + caches (+ encoder states)
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, B, S))
+    out = {"token": sds((B, 1), jnp.int32),
+           "pos": sds((), jnp.int32),
+           "caches": caches}
+    if cfg.enc_layers:
+        out["enc_out"] = sds((B, cfg.enc_seq, cfg.d_model),
+                             jnp.dtype(cfg.dtype))
+    return out
+
+
+def _per_device_bytes(mesh, shapes_tree, specs_tree, dtype_bytes=None):
+    """Sum of per-device leaf bytes given a spec tree."""
+    import repro.models.sharding as _s
+    total = 0
+    leaves = jax.tree_util.tree_leaves(shapes_tree)
+    specs = jax.tree_util.tree_leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(leaves, specs):
+        nbytes = (np.prod(leaf.shape) if leaf.shape else 1) * \
+            (dtype_bytes or jnp.dtype(leaf.dtype).itemsize)
+        denom = 1
+        for name in spec:
+            denom *= _s._axis_size(mesh, name) if name else 1
+        total += nbytes / denom
+    return total
+
+
+def analytic_memory(cfg, mesh, shape_name, params_shape, pspecs,
+                    cache_shapes=None, cache_spec_tree=None):
+    """Analytic per-device HBM model (DESIGN.md §4).
+
+    Needed because the XLA *CPU* backend neither honours remat nor
+    activation chunking in its temp accounting (measured: jax.checkpoint
+    changes temp_size by <1%), so `memory_analysis()` wildly overstates the
+    TPU footprint. This model is what a TPU buffer assignment achieves:
+    params + optimizer + gradient working set + remat-saved activations +
+    one layer's transient peak (+ caches for decode).
+    """
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    dp = 1
+    for name, size in mesh.shape.items():
+        if name in ("pod", "data"):
+            dp *= size
+    mp = mesh.shape.get("model", 1)
+    b_loc = max(B // dp, 1)
+    param_b = _per_device_bytes(mesh, params_shape, pspecs)
+    out = {"params_bytes": param_b}
+    if info["step"] == "train":
+        out["opt_bytes"] = _per_device_bytes(mesh, params_shape, pspecs,
+                                             dtype_bytes=8)   # m+v f32
+        out["grad_bytes"] = _per_device_bytes(mesh, params_shape, pspecs,
+                                              dtype_bytes=4)
+        # saved block inputs (bf16, SP-sharded on 'model')
+        out["saved_act_bytes"] = cfg.num_layers * b_loc * S * cfg.d_model * 2 / mp
+        # transient peak: attention chunk + mlp hidden + CE chunk (f32)
+        h_loc = max(cfg.num_heads // mp, 1)
+        attn_t = 3 * b_loc * h_loc * S * 2048 * 4
+        f = max(cfg.moe_d_ff or cfg.d_ff, cfg.d_ff)
+        mlp_t = 2 * b_loc * S * (f // mp if f % mp == 0 else f) * 4
+        ce_t = 2 * b_loc * (S // 8) * (cfg.vocab_size // mp
+                                       if cfg.vocab_size % mp == 0
+                                       else cfg.vocab_size) * 4
+        out["transient_bytes"] = max(attn_t, mlp_t, ce_t)
+    else:
+        if cache_shapes is not None:
+            out["cache_bytes"] = _per_device_bytes(mesh, cache_shapes,
+                                                   cache_spec_tree)
+        h_loc = max(cfg.num_heads // mp, 1) if cfg.num_heads else 1
+        out["transient_bytes"] = 4 * b_loc * h_loc * min(S, 32768) * 4 * 8
+    out["total_bytes"] = float(sum(v for v in out.values()))
+    out["fits_16gb_hbm"] = bool(out["total_bytes"] < 16 * 2**30)
+    return out
+
+
+def runnable(cfg, shape_name: str) -> tuple[bool, str]:
+    """Applies the assignment's skip rules (documented in DESIGN.md §5)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic():
+        return False, "long_500k skipped: pure full attention (DESIGN.md §5)"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Cell lowering
+# --------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               activation_seq_shard: bool = True):
+    """Lower + compile one (arch, shape, mesh) cell. Returns a result dict."""
+    cfg = get_config(arch)
+    ok, why = runnable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    info = SHAPES[shape_name]
+    t0 = time.perf_counter()
+
+    params_shape = jax.eval_shape(
+        partial(M.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    # Inference serves from RESIDENT weights (compute layout — TP-sharded on
+    # 'model', replicated on 'data'): there are no optimizer states, so the
+    # ZeRO-3 storage sharding would only force a full re-gather of every
+    # expert/matrix per decoded token (§Perf iteration 6: 65.9 GB/step of
+    # all-gather on mixtral decode_32k with ZeRO layout).
+    which = "storage" if info["step"] == "train" else "compute"
+    pspecs = shd.param_specs(mesh, params_shape, cfg.expert_parallel,
+                             which=which)
+    p_shard = shd.to_named(mesh, pspecs)
+    result_extra = {"param_layout": which}
+    ins = input_specs(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "step": info["step"], "status": "ok", **result_extra}
+
+    if info["step"] == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt_shape = jax.eval_shape(adamw.init_opt_state, params_shape)
+        ospecs = shd.opt_specs(mesh, pspecs)
+        o_shard = shd.to_named(mesh, ospecs)
+        b_shard = shd.to_named(mesh, shd.batch_specs(mesh, ins))
+
+        def step(params, opt_state, batch):
+            return M.train_step(params, opt_state, batch, cfg, opt_cfg)
+
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        with shd.use_mesh(mesh, cfg.expert_parallel, activation="sp"):
+            lowered = jitted.lower(params_shape, opt_shape, ins)
+    elif info["step"] == "prefill":
+        b_shard = shd.to_named(mesh, shd.batch_specs(mesh, ins))
+
+        def step(params, batch):
+            return M.prefill_step(params, cfg, batch)
+
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                         out_shardings=None)
+        with shd.use_mesh(mesh, cfg.expert_parallel, activation="sp"):
+            lowered = jitted.lower(params_shape, ins)
+    else:  # decode
+        long_ctx = info["global_batch"] == 1
+        c_pspecs = shd.cache_specs(mesh, ins["caches"], long_context=long_ctx,
+                                   q_heads=cfg.num_heads)
+        c_shard = shd.to_named(mesh, c_pspecs)
+        tok_shard = shd.to_named(mesh, shd.batch_specs(mesh, {"t": ins["token"]}))["t"]
+        extra = ()
+        if cfg.enc_layers:
+            enc_spec = shd.to_named(
+                mesh, shd.batch_specs(mesh, {"e": ins["enc_out"]}))["e"]
+
+            def step(params, caches, token, pos, enc_out):
+                return M.serve_step(params, caches, token, pos, cfg,
+                                    enc_out=enc_out)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, c_shard, tok_shard,
+                                           NamedSharding(mesh, P()), enc_spec),
+                             donate_argnums=(1,))
+            extra = (ins["enc_out"],)
+        else:
+            def step(params, caches, token, pos):
+                return M.serve_step(params, caches, token, pos, cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, c_shard, tok_shard,
+                                           NamedSharding(mesh, P())),
+                             donate_argnums=(1,))
+        with shd.use_mesh(mesh, cfg.expert_parallel, activation="none"):
+            lowered = jitted.lower(params_shape, ins["caches"], ins["token"],
+                                   ins["pos"], *extra)
+
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    if info["step"] == "decode":
+        ana = analytic_memory(cfg, mesh, shape_name, params_shape, pspecs,
+                              cache_shapes=ins["caches"],
+                              cache_spec_tree=c_pspecs)
+    else:
+        ana = analytic_memory(cfg, mesh, shape_name, params_shape, pspecs)
+    result.update({
+        "analytic_memory": ana,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": coll,
+        "num_devices": int(np.prod(list(mesh.shape.values()))),
+    })
+    return result
+
+
+def cells(long_only_subquadratic: bool = True):
+    for arch in ARCHITECTURES:
+        for shape in SHAPES:
+            yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose artifact already reports ok/skipped")
+    args = ap.parse_args()
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    if args.all:
+        todo = list(cells())
+    elif args.arch and not args.shape:
+        todo = [(args.arch, s) for s in SHAPES]
+    else:
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path0 = os.path.join(ARTIFACT_DIR, tag + ".json")
+            if args.resume and os.path.exists(path0):
+                with open(path0) as f:
+                    prev = json.load(f)
+                if prev.get("status") in ("ok", "skipped"):
+                    results.append(prev)
+                    print(f"[resume ] {tag}", flush=True)
+                    continue
+            try:
+                res = lower_cell(arch, shape, multi_pod=mp)
+            except Exception as e:  # a failure here is a bug in our system
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            results.append(res)
+            path = os.path.join(ARTIFACT_DIR, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+            status = res["status"]
+            extra = ""
+            if status == "ok":
+                gb = (res["memory"]["argument_bytes"]
+                      + res["memory"]["temp_bytes"]) / 2**30
+                extra = (f"flops/dev={res['flops_per_device']:.3e} "
+                         f"mem/dev={gb:.2f}GiB "
+                         f"coll={res['collectives']['total_bytes']/2**20:.1f}MiB "
+                         f"compile={res['compile_s']}s")
+            elif status == "error":
+                extra = res["error"][:200]
+            else:
+                extra = res["reason"]
+            print(f"[{status:7s}] {tag:60s} {extra}", flush=True)
+    out = args.out or os.path.join(ARTIFACT_DIR, "summary.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

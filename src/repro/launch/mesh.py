@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state. The production topology is a TPU v5e pod of
+16 x 16 = 256 chips; multi-pod doubles it with a leading "pod" axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever devices exist locally, data-major (used by tests/examples)."""
+    n = len(jax.devices())
+    mp = max(1, model_parallel)
+    assert n % mp == 0
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+# TPU v5e per-chip hardware constants (roofline denominators).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+__all__ = ["make_production_mesh", "make_local_mesh",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]

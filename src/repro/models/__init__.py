@@ -1,0 +1,1 @@
+from . import model, transformer, attention, moe, ssm, layers  # noqa: F401

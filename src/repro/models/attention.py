@@ -1,0 +1,230 @@
+"""Attention: GQA with RoPE, sliding-window / local-global variants, logit
+softcapping, QKV bias, KV-cache decode, cross attention.
+
+Layout conventions: activations (B, S, D); q (B, S, KV, G, hd) where
+G = heads per KV group; k/v (B, T, KV, hd). Softmax in f32.
+
+Distributed decode note (DESIGN.md §4): for decode shapes the cache shards
+on the head axis; for long_500k (batch = 1) it shards on the *sequence*
+axis — the logits/softmax reductions over T then lower to per-shard partial
+reductions + psum under GSPMD (verified in the dry-run HLO).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _normal, apply_rope, softcap
+from . import sharding as shd
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, d_model=None, cross=False):
+    d = d_model or cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    dt = jnp.dtype(cfg.dtype)
+    p = {"wq": _normal(ks[0], (d, H, hd), s, dt),
+         "wk": _normal(ks[1], (d, KV, hd), s, dt),
+         "wv": _normal(ks[2], (d, KV, hd), s, dt),
+         "wo": _normal(ks[3], (H, hd, d), 1.0 / np.sqrt(H * hd), dt)}
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((KV, hd), dt)
+        p["bv"] = jnp.zeros((KV, hd), dt)
+    return p
+
+
+def _proj_qkv(params, cfg, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", xkv, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", xkv, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def _attend(cfg, q, k, v, mask):
+    """q (B,S,H,hd), k/v (B,T,KV,hd), mask (B|1, S, T) bool.
+
+    KV heads are broadcast to the full H before the einsum so the head dim
+    stays shardable on 'model' (a reshape across a sharded H would force
+    GSPMD to gather; the broadcast is fused by XLA)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (B, k.shape[1], KV, G, hd)).reshape(
+            B, k.shape[1], H, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (B, v.shape[1], KV, G, hd)).reshape(
+            B, v.shape[1], H, hd)
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = softcap(logits, cfg.softcap)
+    logits = jnp.where(jnp.asarray(mask)[:, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    return out
+
+
+KV_CHUNK = 2048
+
+
+def _attend_chunked(cfg, q, k, v, mask, kv_chunk=KV_CHUNK):
+    """Online-softmax attention over KV chunks (flash-attention recurrence,
+    python-unrolled so HLO FLOPs stay faithful).
+
+    Replaces the (B,H,S,T) f32 logits/probs tensors — the dominant temp
+    buffers in the dense dry-run (EXPERIMENTS.md §Perf) — with
+    (B,H,S,kv_chunk) chunks. Exact same math as `_attend` up to fp
+    reassociation."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, KV, G, hd)
+                             ).reshape(B, T, H, hd)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, T, KV, G, hd)
+                             ).reshape(B, T, H, hd)
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32)
+    m = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    l = jnp.zeros((B, H, S), jnp.float32)
+    acc = jnp.zeros((B, S, H, hd), jnp.float32)
+    n_chunks = (T + kv_chunk - 1) // kv_chunk
+    for ci in range(n_chunks):
+        sl = slice(ci * kv_chunk, min((ci + 1) * kv_chunk, T))
+        kc = k[:, sl].astype(jnp.float32)
+        vc = v[:, sl].astype(jnp.float32)
+        mc = mask[:, :, sl]                              # (1|B, S, Tc)
+        if isinstance(mc, np.ndarray):
+            if not mc.any():
+                continue                                 # fully-masked chunk
+            mc = jnp.asarray(mc)
+        logits = jnp.einsum("bshd,bthd->bhst", qf, kc) * scale
+        logits = softcap(logits, cfg.softcap)
+        logits = jnp.where(mc[:, None], logits, NEG_INF)
+        m_c = jnp.max(logits, axis=-1)                   # (B,H,S)
+        m_new = jnp.maximum(m, m_c)
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * jnp.transpose(corr, (0, 2, 1))[..., None] \
+            + jnp.einsum("bhst,bthd->bshd", p, vc)
+        m = m_new
+    out = acc / jnp.maximum(jnp.transpose(l, (0, 2, 1))[..., None], 1e-30)
+    return out.astype(v.dtype)
+
+
+def causal_mask(S, T, window=0, local=False, offset=0):
+    """(1, S, T) bool. offset = absolute position of query 0 (T - S for
+    suffix queries). window > 0 and local=True limits lookback."""
+    qpos = np.arange(S)[:, None] + offset
+    kpos = np.arange(T)[None, :]
+    m = kpos <= qpos
+    if local and window:
+        m &= kpos > (qpos - window)
+    return m[None]                      # numpy: chunked attention can skip
+                                        # statically-dead chunks
+
+
+def self_attention(params, cfg, x, layer_idx, positions=None):
+    """Full-sequence (train / prefill) self attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = _proj_qkv(params, cfg, x, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # Megatron-SP transition: heads on 'model', sequence gathered.
+    q = shd.constrain(q, "dp", None, "model", None)
+    k = shd.constrain(k, "dp", None, "model", None)
+    v = shd.constrain(v, "dp", None, "model", None)
+    local = (cfg.attn_type == "swa"
+             or (cfg.attn_type == "local_global" and layer_idx % 2 == 0))
+    mask = causal_mask(S, S, cfg.window, local)
+    if S * S > 1 << 22:                   # big shapes: online-softmax chunks
+        out = _attend_chunked(cfg, q, k, v, mask)
+    else:
+        out = _attend(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_cache(cfg, batch, seq_len, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    T = min(seq_len, cfg.window) if cfg.attn_type == "swa" else seq_len
+    return {"k": jnp.zeros((batch, T, KV, hd), dtype),
+            "v": jnp.zeros((batch, T, KV, hd), dtype)}
+
+
+def decode_attention(params, cfg, x, cache, pos, layer_idx):
+    """One-token decode against a filled KV cache.
+
+    x (B, 1, D); cache k/v (B, T, KV, hd) hold positions [0, pos) (for SWA a
+    rolling window of the last `window` positions). Writes the new KV at
+    slot pos % T and attends over valid slots. Returns (out (B,1,D), cache).
+    """
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q, k, v = _proj_qkv(params, cfg, x, x)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    ctx = shd.active()
+    if ctx is not None:
+        mp = ctx["mesh"].shape.get("model", 1)
+        if cfg.num_kv_heads % mp != 0:
+            # cache is sequence-sharded on 'model' (sharding.py it7):
+            # decode attention runs head-replicated — each device scans
+            # its T-shard, softmax reduces via psum (distributed softmax).
+            # Measured (§Perf it7b): minitron decode collectives
+            # 65.5 GB (seq-shard + head-sharded q) and 33.8 GB (hd-shard)
+            # vs ~5 MB with this layout on llama; decode attention is
+            # bandwidth-bound, so replicating its FLOPs on 'model' is free.
+            q = shd.constrain(q, "dp", None, None, None)
+            k = shd.constrain(k, "dp", None, None, None)
+            v = shd.constrain(v, "dp", None, None, None)
+    slot = pos % T
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    kpos = jnp.arange(T)
+    valid = kpos <= slot if T > cfg.window or cfg.attn_type != "swa" else kpos >= 0
+    local = (cfg.attn_type == "swa"
+             or (cfg.attn_type == "local_global" and layer_idx % 2 == 0))
+    if local and cfg.window and cfg.attn_type != "swa":
+        # local_global rolling lookback within a full-length cache
+        valid = valid & (kpos > slot - cfg.window)
+    mask = valid[None, None, :]                    # (1,1,T)
+    out = _attend(cfg, q, ck, cv, mask)
+    ctx = shd.active()
+    if ctx is not None and cfg.num_kv_heads % ctx["mesh"].shape.get("model", 1):
+        # keep the attention epilogue in the replicated layout too — the
+        # H-sharded wo would otherwise pull the whole computation (and the
+        # T-sharded cache) into the head-sharded layout per token.
+        out = shd.constrain(out, "dp", None, None, None)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def cross_attention(params, cfg, x, enc_out):
+    """Decoder cross attention over encoder states (whisper)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", enc_out, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, params["wv"])
+    mask = np.ones((1, x.shape[1], enc_out.shape[1]), bool)
+    out = (_attend_chunked if x.shape[1] * enc_out.shape[1] > 1 << 22
+           else _attend)(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+__all__ = ["init_attention", "self_attention", "decode_attention",
+           "cross_attention", "init_cache", "causal_mask"]

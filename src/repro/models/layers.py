@@ -1,0 +1,96 @@
+"""Shared neural-net building blocks (pure functional JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays; every init function has a
+matching apply function. Compute dtype follows cfg.dtype (bf16 on TPU) with
+f32 accumulation where it matters (norms, softmax, losses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sharding as shd
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _normal(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- Embedding
+def init_embedding(key, vocab, d, dtype):
+    return {"table": _normal(key, (vocab, d), 1.0 / np.sqrt(d), dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits accumulated in f32 (bf16 operands — halves gather traffic)."""
+    return jnp.einsum("...d,vd->...v", x.astype(params["table"].dtype),
+                      params["table"], preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(f)
+    return {"wi": _normal(k1, (d, f), s_in, dtype),
+            "wg": _normal(k2, (d, f), s_in, dtype),
+            "wo": _normal(k3, (f, d), s_out, dtype)}
+
+
+def mlp(params, x, act="silu"):
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    g = jnp.einsum("...d,df->...f", x, params["wg"])
+    h = shd.constrain(h, "dp", None, "model")
+    g = shd.constrain(g, "dp", None, "model")
+    gate = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return jnp.einsum("...f,fd->...d", h * gate, params["wo"])
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x (..., S, H, hd); positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (...,S,hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+__all__ = ["cdtype", "init_rmsnorm", "rmsnorm", "init_embedding", "embed",
+           "unembed", "init_mlp", "mlp", "rope_freqs", "apply_rope",
+           "softcap"]

@@ -1,0 +1,84 @@
+"""Public model API: build, loss, train_step, prefill_step, serve_step.
+
+The cross-entropy is computed in sequence chunks, each wrapped in
+jax.checkpoint, so the full (tokens, vocab) logits tensor is never alive at
+once (peak = one chunk) — the memory plan behind the big-vocab dry-runs
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from ..optim import adamw
+
+LOSS_CHUNKS = 4
+
+
+def init_params(key, cfg):
+    return transformer.init_params(key, cfg)
+
+
+def _chunk_ce(cfg, params, hidden, labels, mask):
+    """Cross entropy of one sequence chunk (recomputed in bwd). `params`
+    must be an argument (not a closure) so jax.checkpoint remats the chunk
+    logits instead of saving them."""
+    logits = transformer.logits_from_hidden(params, cfg, hidden)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def loss_fn(params, cfg, batch):
+    """Mean next-token CE + MoE auxiliaries."""
+    hidden, aux = transformer.forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels)).astype(jnp.float32)
+    S = hidden.shape[1]
+    n = LOSS_CHUNKS if S % LOSS_CHUNKS == 0 else 1
+    step = S // n
+    tot, cnt = 0.0, 0.0
+    ce = transformer.sequential_remat(functools.partial(_chunk_ce, cfg))
+    for i in range(n):
+        sl = slice(i * step, (i + 1) * step)
+        t, c = ce(params, hidden[:, sl], labels[:, sl], mask[:, sl])
+        tot = tot + t
+        cnt = cnt + c
+    loss = tot / jnp.maximum(cnt, 1.0)
+    if aux:
+        loss = loss + 1e-2 * aux["load_balance"] + 1e-3 * aux["router_z"]
+    metrics = {"ce": tot / jnp.maximum(cnt, 1.0), **aux}
+    return loss, metrics
+
+
+def train_step(params, opt_state, batch, cfg, opt_cfg: adamw.AdamWConfig):
+    """One optimizer step (donated params/opt_state in the caller's jit)."""
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch)
+    params, opt_state, opt_metrics = adamw.apply_updates(
+        params, grads, opt_state, opt_cfg)
+    return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+
+def prefill_step(params, cfg, batch):
+    """Full-sequence forward returning last-position logits (inference
+    prefill benchmark shape; cache fill elided in the dry-run — its cost is
+    the forward itself)."""
+    hidden, _ = transformer.forward(params, cfg, batch)
+    return transformer.logits_from_hidden(params, cfg, hidden[:, -1:])
+
+
+def serve_step(params, caches, token, pos, cfg, enc_out=None):
+    """One decode step: returns (next_token (B,1), logits, new caches)."""
+    logits, caches = transformer.decode_step(params, cfg, token, pos, caches,
+                                             enc_out=enc_out)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return nxt, logits, caches
+
+
+__all__ = ["init_params", "loss_fn", "train_step", "prefill_step",
+           "serve_step", "LOSS_CHUNKS"]

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN with top-k routing and grouped-GEMM dispatch.
+
+Dispatch is MegaBlocks-style (sort tokens by expert, equal-capacity groups,
+batched per-expert GEMMs) rather than the GShard (T, E, C) one-hot einsum —
+the dispatch tensors stay O(T * topk) and the per-expert compute is a dense
+(E, C, D) x (E, D, F) batched matmul that the MXU loves. Overflowing tokens
+beyond capacity are dropped (their combine weight is zero), matching
+capacity-factor semantics.
+
+Expert parallelism: the expert dimension shards on the "model" mesh axis
+when cfg.expert_parallel (qwen3: 128 experts / 16). For expert counts below
+the axis size (mixtral: 8) the expert FFN hidden dim shards instead
+(Megatron-style TP) — see configs and sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sharding as shd
+from .layers import _normal
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {"router": _normal(ks[0], (d, e), 1.0 / np.sqrt(d), jnp.float32),
+            "wi": _normal(ks[1], (e, d, f), 1.0 / np.sqrt(d), dt),
+            "wg": _normal(ks[2], (e, d, f), 1.0 / np.sqrt(d), dt),
+            "wo": _normal(ks[3], (e, f, d), 1.0 / np.sqrt(f), dt)}
+
+
+def _dispatch_row(xt, gate, eid, E, K, cap):
+    """Sort-based dispatch for ONE routing group (S tokens), scatter-free.
+
+    Both dispatch and the combine plan are pure gathers (XLA scatter
+    lowering is pathologically slow to compile and bandwidth-hungry;
+    gathers vectorize cleanly on TPU): buf[e, c] = tokens of the c-th
+    assignment of expert e, found by indexing the sorted assignment list at
+    starts[e] + c. Returns (buf (E, cap, D), gath_e (S*K,), gath_c, w)."""
+    S, D = xt.shape
+    flat_e = eid.reshape(-1)                                  # (S*K,)
+    flat_t = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    # ---- dispatch gather: (E, cap) -> sorted position -> token id
+    pos = starts[:, None] + jnp.arange(cap, dtype=starts.dtype)[None]  # (E,cap)
+    ends = jnp.concatenate([starts[1:], jnp.full((1,), S * K,
+                                                 starts.dtype)])
+    slot_valid = pos < ends[:, None]
+    pos_c = jnp.minimum(pos, S * K - 1)
+    tok_for_slot = flat_t[order][pos_c]                        # (E, cap)
+    buf = jnp.where(slot_valid[..., None], xt[tok_for_slot], 0)
+    # ---- combine gather plan: flat assignment -> (expert, slot)
+    inv = jnp.argsort(order, stable=True)                     # sorted pos of i
+    rank = inv - starts[flat_e]                               # slot within expert
+    keep = rank < cap
+    gath_e = flat_e
+    gath_c = jnp.where(keep, rank, 0)
+    w = jnp.where(keep, flat_g, 0.0)
+    return buf.astype(xt.dtype), gath_e, gath_c, w
+
+
+def moe_ffn(params, cfg, x, act="silu"):
+    """x (B, S, D) -> (B, S, D), plus aux losses dict.
+
+    Routing groups are batch rows (GShard 'groups'): the sort/scatter
+    dispatch is vmapped over B, so under data-parallel sharding every
+    device routes only its own tokens (a global-token sort would replicate
+    the dispatch AND the expert GEMMs on every device — the 50x FLOP
+    pathology recorded in EXPERIMENTS.md §Perf iteration 2). Capacity is
+    per group: cap = ceil(cf * K * S / E).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)                       # (B,S,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    cap = max(int(np.ceil(cfg.capacity_factor * K * S / E)), 1)
+
+    buf, gath_e, gath_c, w = jax.vmap(
+        lambda xt, g, e: _dispatch_row(xt, g, e, E, K, cap))(x, gate, eid)
+    # buf (B, E, cap, D): batch on dp; expert dim on 'model' when EP (the
+    # reshard is GSPMD's all-to-all), else FFN hidden dim on 'model'.
+    ep = cfg.expert_parallel
+    buf = shd.constrain(buf, "dp", "model" if ep else None, None, None)
+    h = jnp.einsum("becd,edf->becf", buf, params["wi"])
+    g = jnp.einsum("becd,edf->becf", buf, params["wg"])
+    h = shd.constrain(h, "dp", "model" if ep else None, None,
+                      None if ep else "model")
+    g = shd.constrain(g, "dp", "model" if ep else None, None,
+                      None if ep else "model")
+    gact = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    out_buf = jnp.einsum("becf,efd->becd", h * gact, params["wo"])
+    out_buf = shd.constrain(out_buf, "dp", "model" if ep else None, None, None)
+
+    def _combine_row(ob, ge, gc, wr):
+        gathered = ob[ge, gc]                                 # (S*K, D)
+        contrib = gathered * wr[:, None].astype(gathered.dtype)
+        return contrib.reshape(S, K, -1).sum(axis=1)          # gather + sum
+    yt = jax.vmap(_combine_row)(out_buf, gath_e, gath_c, w)
+
+    # Load-balancing auxiliaries (Switch-style).
+    me = probs.reshape(-1, E).mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[eid.reshape(-1)].add(1.0) \
+        / (B * S * K)
+    aux = {"load_balance": E * jnp.sum(me * ce),
+           "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)}
+    return yt, aux
+
+
+def moe_ffn_dense(params, cfg, x, act="silu"):
+    """Reference dense-dispatch MoE (every token through every expert,
+    masked) — O(E/topk) more FLOPs; used only by smoke tests to validate the
+    grouped-GEMM path."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(B * S, D)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    dense_gate = jnp.zeros_like(probs)
+    dense_gate = dense_gate.at[jnp.arange(xt.shape[0])[:, None], eid].set(gate)
+    h = jnp.einsum("td,edf->tef", xt, params["wi"])
+    g = jnp.einsum("td,edf->tef", xt, params["wg"])
+    gact = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    y = jnp.einsum("tef,efd->ted", h * gact, params["wo"])
+    yt = jnp.einsum("ted,te->td", y.astype(jnp.float32), dense_gate)
+    return yt.astype(x.dtype).reshape(B, S, D)
+
+
+__all__ = ["init_moe", "moe_ffn", "moe_ffn_dense"]

@@ -1,0 +1,261 @@
+"""Sharding rules: storage vs compute layouts, activation constraints.
+
+2-D logical layout (DESIGN.md §4): ``data`` = batch/FSDP axis, ``model`` =
+tensor axis (heads / d_ff / experts / vocab). Multi-pod meshes add a
+leading ``pod`` axis joining the data-parallel group.
+
+Two spec trees per model:
+
+* **storage specs** — how params/optimizer live in HBM: tensor-parallel dim
+  on ``model`` AND a ZeRO/FSDP shard on ``data`` (so 235B-scale states fit:
+  bytes/device = params*(2+8)/256).
+* **compute specs** — the layout a matmul wants: ``model`` only. Each block
+  re-gathers its weights along ``data`` right before use via
+  ``with_sharding_constraint`` (=> GSPMD emits per-layer weight all-gathers,
+  the ZeRO-3 pattern, instead of activation-sized partial all-reduces — the
+  pathology measured in EXPERIMENTS.md §Perf iteration 0). An
+  ``optimization_barrier`` ties each block's gather to the incoming
+  activations so XLA cannot hoist every gather to step start (which would
+  materialize the fully-gathered model).
+
+Every spec is sanitized against shape divisibility: jit inputs must divide
+exactly (llama3.2's 24 q-heads or qwen2.5's 2 KV heads on a 16-way model
+axis stay replicated; their d_ff and vocab dims shard).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, expert_parallel: bool = True,
+             activation: str = "sp"):
+    """Enable in-model sharding constraints (dryrun / production launcher).
+
+    activation: 'sp' shards the residual stream's sequence dim on 'model'
+    between blocks (Megatron sequence parallelism — memory) ; 'dp' keeps it
+    batch-sharded only; 'none' adds no activation constraints.
+    """
+    tok = _ACTIVE.set({"mesh": mesh, "ep": expert_parallel,
+                       "activation": activation})
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active():
+    return _ACTIVE.get()
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def sanitize(mesh: Mesh, spec: P, shape) -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, name in zip(shape, parts):
+        out.append(name if name and dim % _axis_size(mesh, name) == 0 else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# Parameter rules, keyed on (leaf key name, owner), as (storage, compute)
+# --------------------------------------------------------------------------
+
+def _param_rule(path: tuple[str, ...], shape, ep: bool) -> tuple[P, P]:
+    """Returns (storage_spec, compute_spec)."""
+    name = path[-1]
+    owner = path[-2] if len(path) >= 2 else ""
+    r = len(shape)
+    M, D = "model", "data"
+    if name == "table":                       # embedding (V, D)
+        return P(M, D), P(M, None)
+    # MoE rules MUST precede the attention rank-3 rules: expert wg (E,D,F)
+    # and wo (E,F,D) share names/ranks with attention tensors and were
+    # silently matching them (mixtral's expert wo ended up fully replicated
+    # — 28 GiB/device; §Perf iteration 6b).
+    if owner == "moe" or name == "router":
+        if name == "router":
+            return P(D, None), P(None, None)
+        if name in ("wi", "wg"):              # (E, D, F)
+            return (P(M, D, None), P(M, None, None)) if ep \
+                else (P(None, D, M), P(None, None, M))
+        if name == "wo":                      # (E, F, D)
+            return (P(M, None, D), P(M, None, None)) if ep \
+                else (P(None, M, D), P(None, M, None))
+    if name in ("wq", "wk", "wv", "wr", "wg", "w_decay") and r == 3:
+        return P(D, M, None), P(None, M, None)   # (D, H, hd)
+    if name == "wo" and r == 3:
+        return P(M, None, D), P(M, None, None)   # (H, hd, D)
+    if name in ("bq", "bk", "bv", "decay_bias", "bonus_u"):
+        return P(M, None), P(M, None)
+    if name in ("wi", "wg") and r == 2:       # mlp (D, F)
+        return P(D, M), P(None, M)
+    if name == "wo" and r == 2:               # mlp (F, D)
+        return P(M, D), P(M, None)
+    if name in ("w_z", "w_x", "w_B", "w_C", "w_dt"):
+        return P(D, M), P(None, M)
+    if name == "w_out":
+        return P(M, D), P(M, None)
+    if name in ("conv_x", "conv_B", "conv_C"):
+        return P(None, M), P(None, M)
+    if name == "shift_mix":
+        return P(None, D), P(None, None)
+    if name == "norm_scale":
+        return P(M), P(M)
+    return P(), P()                           # norms, scalars
+
+
+def _path_keys(path) -> tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_specs(mesh: Mesh, params_shape, expert_parallel: bool = True,
+                which: str = "storage"):
+    idx = 0 if which == "storage" else 1
+
+    def visit(path, leaf):
+        spec = _param_rule(_path_keys(path), leaf.shape, expert_parallel)[idx]
+        return sanitize(mesh, spec, leaf.shape)
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def opt_specs(mesh: Mesh, pspecs):
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+# --------------------------------------------------------------------------
+# In-model constraint helpers (no-ops outside use_mesh)
+# --------------------------------------------------------------------------
+
+def gather_block(block_params, anchor):
+    """ZeRO-3 weight gather for one block: barrier against `anchor` (the
+    incoming activations) then constrain every leaf to its compute spec.
+    Returns (gathered_params, anchor)."""
+    ctx = active()
+    if ctx is None:
+        return block_params, anchor
+    mesh, ep = ctx["mesh"], ctx["ep"]
+    block_params, anchor = jax.lax.optimization_barrier((block_params, anchor))
+
+    def visit(path, leaf):
+        spec = _param_rule(_path_keys(path), leaf.shape, ep)[1]
+        spec = sanitize(mesh, spec, leaf.shape)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map_with_path(visit, block_params), anchor
+
+
+def constrain_activation(x):
+    """Residual-stream constraint between blocks (B, S, D)."""
+    ctx = active()
+    if ctx is None or ctx["activation"] == "none" or x.ndim != 3:
+        return x
+    mesh = ctx["mesh"]
+    dp = dp_axes(mesh)
+    seq = "model" if ctx["activation"] == "sp" else None
+    spec = sanitize(mesh, P(dp, seq, None), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain(x, *spec_parts):
+    """Generic in-model constraint (no-op outside use_mesh): the Megatron-SP
+    transition points — e.g. q/k/v (B,S,H,hd) -> heads on 'model', MLP
+    hidden (B,S,F) -> F on 'model' — so GSPMD keeps tensor-parallel compute
+    sharded instead of propagating the sequence sharding inward."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    parts = [dp_axes(mesh) if p == "dp" else p for p in spec_parts]
+    spec = sanitize(mesh, P(*parts), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_logits(x):
+    """CE chunk logits (B, s, V): vocab on 'model'."""
+    ctx = active()
+    if ctx is None:
+        return x
+    mesh = ctx["mesh"]
+    spec = sanitize(mesh, P(dp_axes(mesh), None, "model"), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Batch / cache rules
+# --------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, batch_shapes):
+    dp = dp_axes(mesh)
+
+    def visit(leaf):
+        if len(leaf.shape) >= 1:
+            spec = [dp] + [None] * (len(leaf.shape) - 1)
+            return sanitize(mesh, P(*spec), leaf.shape)
+        return P()
+    return jax.tree_util.tree_map(visit, batch_shapes)
+
+
+def cache_specs(mesh: Mesh, cache_shapes, long_context: bool = False,
+                q_heads: int = 0):
+    """KV cache (B, T, KV, hd) / SSM state (B, H, n, hd) / conv (B, 3, C).
+    long_context (batch=1): shard the KV sequence dim on (pod, data) —
+    distributed-softmax decode (DESIGN.md §4).
+
+    When the KV-head dim doesn't divide the model axis (§Perf it7/it7b):
+      * q-heads divisible (minitron 32H/8KV, qwen2.5 16H/2KV, internvl):
+        shard the cache *head_dim* — the logits contraction psums a tiny
+        (B, H, T) f32 and attention compute stays model-parallel;
+      * q-heads not divisible either (llama 24H/8KV — attention is
+        replicated on 'model' regardless): shard the cache *sequence* dim
+        (distributed softmax; measured 3 383 -> 5.4 MiB/step collectives).
+    """
+    dp = dp_axes(mesh)
+    mp = _axis_size(mesh, "model")
+
+    def visit(leaf):
+        shp = leaf.shape
+        if len(shp) == 4 and long_context:
+            return sanitize(mesh, P(None, dp, "model", None), shp)
+        if len(shp) == 4:
+            spec = sanitize(mesh, P(dp, None, "model", None), shp)
+            if spec[2] is None and shp[1] > 1 and shp[1] % mp == 0:
+                spec = sanitize(mesh, P(dp, "model", None, None), shp)
+            return spec
+        if len(shp) == 3:
+            return sanitize(mesh, P(dp, None, "model"), shp)
+        if len(shp) == 2:
+            return sanitize(mesh, P(dp, None), shp)
+        return P()
+    return jax.tree_util.tree_map(visit, cache_shapes)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+__all__ = ["use_mesh", "active", "dp_axes", "sanitize", "param_specs",
+           "opt_specs", "gather_block", "constrain_activation",
+           "constrain_logits", "batch_specs", "cache_specs", "to_named"]

@@ -1,0 +1,255 @@
+"""Sequence-mixing recurrences: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented in *chunked parallel form* for training/prefill — the
+TPU-native adaptation (DESIGN.md §3): within a chunk the pairwise decay
+matrix uses log-space differences (always <= 0, hence exp is stable), across
+chunks a small recurrent state is carried by lax.scan (T/chunk steps, state
+(B, H, dk, dv)). Decode is the O(1) per-token recurrence on the same state.
+
+RWKV6 semantics (per head, key dim n, value dim p):
+    o_t = r_t . (S_{t-1} + (u * k_t) v_t^T),  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with data-dependent decay w_t = exp(-exp(wln_t)) in (0, 1).
+
+Mamba2/SSD semantics (scalar decay per head):
+    h_t = a_t h_{t-1} + (dt_t * x_t) B_t^T,   y_t = C_t . h_t
+with a_t = exp(-softplus(da_t)) in (0, 1); short causal conv on x/B/C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sharding as shd
+from .layers import _normal
+
+CHUNK = 64
+
+
+# ------------------------------------------------------------------ RWKV6
+def init_rwkv(key, cfg):
+    d = cfg.d_model
+    hd = cfg.ssm_headdim
+    H = d // hd
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    s = 1.0 / np.sqrt(d)
+    return {"wr": _normal(ks[0], (d, H, hd), s, dt),
+            "wk": _normal(ks[1], (d, H, hd), s, dt),
+            "wv": _normal(ks[2], (d, H, hd), s, dt),
+            "wg": _normal(ks[3], (d, H, hd), s, dt),
+            "wo": _normal(ks[4], (H, hd, d), s, dt),
+            "w_decay": _normal(ks[5], (d, H, hd), 0.1, jnp.float32),
+            "decay_bias": jnp.full((H, hd), -1.0, jnp.float32),
+            "bonus_u": jnp.zeros((H, hd), jnp.float32),
+            "shift_mix": 0.5 * jnp.ones((4, d), jnp.float32)}
+
+
+def _token_shift(x, mix, last=None):
+    """RWKV token shift: lerp(x_t, x_{t-1}, mix). last (B,1,D) for decode."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1] if last is None \
+        else jnp.concatenate([last, x[:, :-1]], axis=1)
+    return x + mix * (prev - x)
+
+
+def rwkv_mix(params, cfg, x, state=None, last_x=None):
+    """x (B,S,D). Returns (y (B,S,D), (state (B,H,hd,hd), last_x (B,1,D)))."""
+    B, S, D = x.shape
+    hd = cfg.ssm_headdim
+    H = D // hd
+    mix = params["shift_mix"]
+    xr = _token_shift(x, mix[0], last_x)
+    xk = _token_shift(x, mix[1], last_x)
+    xv = _token_shift(x, mix[2], last_x)
+    xw = _token_shift(x, mix[3], last_x)
+    # Projections stay bf16 ACROSS the SP-transition constraint (the
+    # all-gather moves half the bytes — §Perf iteration 5) and upcast to
+    # f32 only for the recurrence math after it.
+    r = shd.constrain(jnp.einsum("bsd,dhk->bshk", xr, params["wr"]),
+                      "dp", None, "model", None).astype(jnp.float32)
+    k = shd.constrain(jnp.einsum("bsd,dhk->bshk", xk, params["wk"]),
+                      "dp", None, "model", None).astype(jnp.float32)
+    v = shd.constrain(jnp.einsum("bsd,dhk->bshk", xv, params["wv"]),
+                      "dp", None, "model", None).astype(jnp.float32)
+    g = shd.constrain(jnp.einsum("bsd,dhk->bshk", xw, params["wg"]),
+                      "dp", None, "model", None)
+    # Clip the PRE-exponent (clipping post-exp leaves a 0 * inf = NaN in the
+    # backward chain when the einsum overflows f32).
+    pre = jnp.clip(jnp.einsum("bsd,dhk->bshk", xw.astype(jnp.float32),
+                              params["w_decay"]) + params["decay_bias"],
+                   -8.0, 2.5)
+    logw = -jnp.exp(pre)                          # in [-12.2, -3e-4]: decay < 1
+    u = params["bonus_u"]
+
+    if S == 1:  # decode fast path
+        s0 = state if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+        kt = k[:, 0]
+        vt = v[:, 0]
+        rt = r[:, 0]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s0) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        s1 = jnp.exp(logw[:, 0])[..., None] * s0 \
+            + kt[..., None] * vt[..., None, :]
+        y = o[:, None].reshape(B, 1, H, hd)
+        out = jnp.einsum("bshk,hkd->bsd", (jax.nn.silu(g) * y.astype(g.dtype)),
+                         params["wo"])
+        return out, (s1, x[:, -1:])
+
+    # ---- chunked parallel scan ----
+    L = CHUNK if S % CHUNK == 0 else (S if S < CHUNK else 1)
+    nC = S // L
+    rs = r.reshape(B, nC, L, H, hd)
+    ks_ = k.reshape(B, nC, L, H, hd)
+    vs = v.reshape(B, nC, L, H, hd)
+    lw = logw.reshape(B, nC, L, H, hd)
+    Lc = jnp.cumsum(lw, axis=2)                       # inclusive per chunk
+    Lprev = Lc - lw                                   # exclusive
+    Lend = Lc[:, :, -1]                               # (B,nC,H,hd)
+    # Intra-chunk pairwise decays: exp(Lprev[t] - Lc[tau]) for tau < t (<=0).
+    # Double-where: the masked (tau >= t) side has diff > 0 whose exp
+    # overflows; it must be neutralized BEFORE exp or bwd sees 0 * inf.
+    diff = Lprev[:, :, :, None] - Lc[:, :, None, :]   # (B,nC,L,L,H,hd)
+    tri = (np.arange(L)[:, None] > np.arange(L)[None, :])[None, None, :, :, None, None]
+    P = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+    att = jnp.einsum("bcthk,bclhk,bctlhk->bcthl", rs, ks_, P)
+    o_intra = jnp.einsum("bcthl,bclhv->bcthv", att, vs)
+    o_bonus = jnp.einsum("bcthk,bcthk,bcthv->bcthv", rs, u[None, None, None] * ks_, vs)
+    # Inter-chunk: state carried across chunks.
+    kdec = ks_ * jnp.exp(Lend[:, :, None] - Lc)       # decay to chunk end
+    chunk_kv = jnp.einsum("bclhk,bclhv->bchkv", kdec, vs)
+    dec_end = jnp.exp(Lend)                            # (B,nC,H,hd)
+
+    def carry(s, inp):
+        ckv, de = inp
+        s_new = de[..., None] * s + ckv
+        return s_new, s
+    s0 = state if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    s_last, s_before = jax.lax.scan(
+        carry, s0, (jnp.moveaxis(chunk_kv, 1, 0), jnp.moveaxis(dec_end, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)            # (B,nC,H,hd,hd)
+    rdec = rs * jnp.exp(Lprev)
+    o_inter = jnp.einsum("bcthk,bchkv->bcthv", rdec, s_before)
+    y = (o_intra + o_bonus + o_inter).reshape(B, S, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", jax.nn.silu(g) * y.astype(g.dtype),
+                     params["wo"])
+    return out, (s_last, x[:, -1:])
+
+
+# ----------------------------------------------------------------- Mamba2
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+    s = 1.0 / np.sqrt(d)
+    # Projections are separate tensors (not one fused w_in) so each output
+    # dim can shard on the "model" axis independently (sharding.py).
+    return {"w_z": _normal(ks[0], (d, di), s, dt),
+            "w_x": _normal(ks[1], (d, di), s, dt),
+            "w_B": _normal(ks[2], (d, n), s, dt),
+            "w_C": _normal(ks[3], (d, n), s, dt),
+            "w_dt": _normal(ks[4], (d, H), s, dt),
+            "conv_x": _normal(ks[5], (4, di), 0.5, jnp.float32),
+            "conv_B": _normal(ks[6], (4, n), 0.5, jnp.float32),
+            "conv_C": _normal(ks[7], (4, n), 0.5, jnp.float32),
+            "a_log": jnp.zeros((H,), jnp.float32),
+            "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+            "d_skip": jnp.ones((H,), jnp.float32),
+            "norm_scale": jnp.ones((di,), jnp.float32),
+            "w_out": _normal(ks[2], (di, d), 1.0 / np.sqrt(di), dt)}
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, width 4. x (B,S,C), w (4,C).
+    state (B,3,C) carries the last 3 inputs for decode."""
+    pad = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype) if state is None \
+        else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(4))
+    return out, xp[:, -3:]
+
+
+def mamba2_mix(params, cfg, x, state=None, conv_state=None):
+    """x (B,S,D) -> (y, (ssm_state (B,H,n,hd), conv_state tuple))."""
+    B, S, D = x.shape
+    di, n, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z = shd.constrain(jnp.einsum("bsd,de->bse", x, params["w_z"]),
+                      "dp", None, "model")
+    xin = shd.constrain(jnp.einsum("bsd,de->bse", x, params["w_x"]),
+                        "dp", None, "model")
+    Bc = jnp.einsum("bsd,dn->bsn", x, params["w_B"])
+    Cc = jnp.einsum("bsd,dn->bsn", x, params["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+    cs = conv_state if conv_state is not None else (None, None, None)
+    xin, cs_x = _causal_conv(xin, params["conv_x"], cs[0])
+    Bc, cs_B = _causal_conv(Bc, params["conv_B"], cs[1])
+    Cc, cs_C = _causal_conv(Cc, params["conv_C"], cs[2])
+    conv_new = (cs_x, cs_B, cs_C)
+    xin = jax.nn.silu(xin)
+    Bc = jax.nn.silu(Bc)
+    Cc = jax.nn.silu(Cc)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    loga = -jnp.exp(params["a_log"])[None, None] * dtv                  # (B,S,H) <= 0
+    xh = xin.reshape(B, S, H, hd).astype(jnp.float32)
+    xdt = xh * dtv[..., None]
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    if S == 1:  # decode
+        s0 = state if state is not None else jnp.zeros((B, H, n, hd), jnp.float32)
+        s1 = jnp.exp(loga[:, 0])[..., None, None] * s0 \
+            + jnp.einsum("bn,bhp->bhnp", Bf[:, 0], xdt[:, 0])
+        y = jnp.einsum("bn,bhnp->bhp", Cf[:, 0], s1)
+        y = y + params["d_skip"][None, :, None] * xh[:, 0]
+        y = y.reshape(B, 1, di)
+    else:
+        L = CHUNK if S % CHUNK == 0 else (S if S < CHUNK else 1)
+        nC = S // L
+        lg = loga.reshape(B, nC, L, H)
+        Lc = jnp.cumsum(lg, axis=2)
+        Lprev = Lc - lg
+        Lend = Lc[:, :, -1]
+        xc = xdt.reshape(B, nC, L, H, hd)
+        Bb = Bf.reshape(B, nC, L, n)
+        Cb = Cf.reshape(B, nC, L, n)
+        tri = (np.arange(L)[:, None] >= np.arange(L)[None, :])[None, None, :, :, None]
+        # include tau == t (the current token contributes via dt * x B C);
+        # double-where as above so the masked exp never overflows in bwd.
+        diff_inc = Lc[:, :, :, None] - Lc[:, :, None, :]
+        P = jnp.where(tri, jnp.exp(jnp.where(tri, diff_inc, 0.0)), 0.0)
+        scores = jnp.einsum("bctn,bcln->bctl", Cb, Bb)
+        att = scores[..., None] * P                           # (B,nC,L,L,H)
+        y = jnp.einsum("bctlh,bclhp->bcthp", att, xc)
+        kdec = Bb[..., None] * jnp.exp(Lend[:, :, None] - Lc)[..., None, :]  # (B,nC,L,n,H)
+        chunk_kv = jnp.einsum("bclnh,bclhp->bchnp", kdec, xc)
+        dec_end = jnp.exp(Lend)
+
+        def carry(s, inp):
+            ckv, de = inp
+            return de[..., None, None] * s + ckv, s
+        s0 = state if state is not None else jnp.zeros((B, H, n, hd), jnp.float32)
+        s1, s_before = jax.lax.scan(
+            carry, s0, (jnp.moveaxis(chunk_kv, 1, 0), jnp.moveaxis(dec_end, 1, 0)))
+        s_before = jnp.moveaxis(s_before, 0, 1)
+        # h_t sees the incoming state decayed by all steps up to and
+        # including t: exp(Lc), inclusive (unlike RWKV, which reads S_{t-1}).
+        y_inter = jnp.einsum("bctn,bcth,bchnp->bcthp",
+                             Cb, jnp.exp(Lc), s_before)
+        y = (y + y_inter).reshape(B, S, H, hd)
+        y = y + params["d_skip"][None, None, :, None] * xh
+        y = y.reshape(B, S, di)
+        conv_new = conv_new  # (B,3,C)
+
+    # gated RMSNorm (Mamba2)
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yz * yz, axis=-1, keepdims=True)
+    yz = yz * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"]
+    out = jnp.einsum("bse,ed->bsd", yz.astype(x.dtype), params["w_out"])
+    if S == 1:
+        return out, (s1, conv_new)
+    return out, (s1, conv_new)
+
+
+__all__ = ["init_rwkv", "rwkv_mix", "init_mamba2", "mamba2_mix", "CHUNK"]

@@ -1,0 +1,316 @@
+"""Model assembly: blocks for every architecture family + forward passes.
+
+Families (configs/base.py):
+  dense / vlm      : [attn + mlp] x L (vlm prepends stub patch embeddings)
+  moe              : [attn + moe_ffn] x L
+  ssm (rwkv)       : [rwkv_mix + mlp] x L
+  hybrid (zamba2)  : mamba2 blocks, plus ONE shared attention block applied
+                     every cfg.attn_every layers (weights reused — zamba2)
+  encdec (whisper) : encoder [attn + mlp] x enc_layers over stub frame
+                     embeddings; decoder adds cross attention.
+
+Layers are python-unrolled (DESIGN.md: XLA cost_analysis counts scan bodies
+once, so the dry-run/roofline path must unroll; lax control flow remains in
+the sequence dimension of the SSM scans where trip counts don't carry model
+FLOPs... they do carry them, so SSM chunk scans are also lowered unrolled
+via static chunk loops in ssm.py's einsum formulation).
+
+Activation checkpointing: cfg.remat == "block" wraps every block in
+jax.checkpoint (recompute-all policy) — saved residual-stream tensors can
+additionally be sequence-sharded (sharding.py activation rules).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import sharding as shd
+from .layers import (init_rmsnorm, rmsnorm, init_embedding, embed, unembed,
+                     init_mlp, mlp, softcap)
+
+
+# --------------------------------------------------------------------------
+# Block init
+# --------------------------------------------------------------------------
+
+def _init_block(key, cfg, layer_idx):
+    ks = jax.random.split(key, 4)
+    fam = cfg.family
+    p = {"norm1": init_rmsnorm(cfg.d_model),
+         "norm2": init_rmsnorm(cfg.d_model)}
+    if fam in ("dense", "vlm", "encdec"):
+        p["attn"] = attn.init_attention(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype))
+        if cfg.cross_attn:
+            p["xattn"] = attn.init_attention(ks[2], cfg, cross=True)
+            p["norm_x"] = init_rmsnorm(cfg.d_model)
+    elif fam == "moe":
+        p["attn"] = attn.init_attention(ks[0], cfg)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    elif fam == "ssm":
+        p["rwkv"] = ssm_mod.init_rwkv(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype))
+    elif fam == "hybrid":
+        p["mamba"] = ssm_mod.init_mamba2(ks[0], cfg)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, cfg.num_layers + 8)
+    params = {"embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                      jnp.dtype(cfg.dtype)),
+              "final_norm": init_rmsnorm(cfg.d_model),
+              "layers": [_init_block(ks[2 + i], cfg, i)
+                         for i in range(cfg.num_layers)]}
+    if cfg.family == "hybrid" and cfg.shared_attn:
+        params["shared_attn"] = {
+            "norm1": init_rmsnorm(cfg.d_model),
+            "norm2": init_rmsnorm(cfg.d_model),
+            "attn": attn.init_attention(ks[1], cfg),
+            "mlp": init_mlp(jax.random.split(ks[1])[0], cfg.d_model,
+                            cfg.d_ff, jnp.dtype(cfg.dtype)),
+        }
+    if cfg.enc_layers:
+        eks = jax.random.split(ks[-1], cfg.enc_layers + 1)
+        enc_cfg = cfg  # same dims
+        params["encoder"] = {
+            "layers": [
+                {"norm1": init_rmsnorm(cfg.d_model),
+                 "norm2": init_rmsnorm(cfg.d_model),
+                 "attn": attn.init_attention(eks[i], enc_cfg),
+                 "mlp": init_mlp(eks[-1], cfg.d_model, cfg.d_ff,
+                                 jnp.dtype(cfg.dtype))}
+                for i in range(cfg.enc_layers)],
+            "norm": init_rmsnorm(cfg.d_model)}
+    return params
+
+
+# --------------------------------------------------------------------------
+# Block apply (full-sequence: train / prefill)
+# --------------------------------------------------------------------------
+
+def _block_fwd_args(cfg, layer_idx, p, x, enc_out, shared):
+    return _block_fwd(p, cfg, layer_idx, x, enc_out, shared)
+
+
+def sequential_remat(fn):
+    """Activation checkpointing with *scheduling-safe* recomputation.
+
+    Equivalent to jax.checkpoint(policy=nothing_saveable) except the
+    backward recompute is tied to the incoming cotangent with an
+    optimization_barrier. Without the barrier the recompute of every layer
+    depends only on that layer's saved inputs (available at step start), so
+    XLA's scheduler may hoist ALL recomputations ahead of the backward pass
+    and keep every layer's attention internals alive simultaneously —
+    measured as ~5 GiB/layer on the dry-run (EXPERIMENTS.md §Perf it.1).
+    The barrier forces layer-by-layer backward scheduling and flat memory.
+    """
+    @jax.custom_vjp
+    def wrapped(*args):
+        return fn(*args)
+
+    def fwd(*args):
+        return fn(*args), args
+
+    def bwd(res, ct):
+        res, ct = jax.lax.optimization_barrier((res, ct))
+        _, vjp = jax.vjp(fn, *res)
+        return vjp(ct)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+def _block_fwd(p, cfg, layer_idx, x, enc_out, shared):
+    fam = cfg.family
+    aux = None
+    # ZeRO-3: gather this block's weights along the data axis, anchored to
+    # the incoming activations; constrain the residual stream (SP).
+    x = shd.constrain_activation(x)
+    p, x = shd.gather_block(p, x)
+    if shared is not None:
+        shared, x = shd.gather_block(shared, x)
+    if fam in ("dense", "vlm", "encdec", "moe"):
+        x = x + attn.self_attention(p["attn"], cfg, rmsnorm(p["norm1"], x,
+                                                            cfg.norm_eps),
+                                    layer_idx)
+        if cfg.cross_attn and enc_out is not None:
+            x = x + attn.cross_attention(p["xattn"], cfg,
+                                         rmsnorm(p["norm_x"], x, cfg.norm_eps),
+                                         enc_out)
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if fam == "moe":
+            y, aux = moe_mod.moe_ffn(p["moe"], cfg, h, cfg.act)
+        else:
+            y = mlp(p["mlp"], h, cfg.act)
+        x = x + y
+    elif fam == "ssm":
+        y, _ = ssm_mod.rwkv_mix(p["rwkv"], cfg,
+                                rmsnorm(p["norm1"], x, cfg.norm_eps))
+        x = x + y
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.act)
+    elif fam == "hybrid":
+        y, _ = ssm_mod.mamba2_mix(p["mamba"], cfg,
+                                  rmsnorm(p["norm1"], x, cfg.norm_eps))
+        x = x + y
+        if shared is not None and cfg.attn_every \
+                and (layer_idx + 1) % cfg.attn_every == 0:
+            x = x + attn.self_attention(shared["attn"], cfg,
+                                        rmsnorm(shared["norm1"], x,
+                                                cfg.norm_eps), layer_idx)
+            x = x + mlp(shared["mlp"],
+                        rmsnorm(shared["norm2"], x, cfg.norm_eps), cfg.act)
+    return x, aux
+
+
+def _encoder_fwd(params, cfg, enc_embeds):
+    """Non-causal encoder over stub frame embeddings (whisper)."""
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    for p in params["encoder"]["layers"]:
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = attn._proj_qkv(p["attn"], cfg, h, h)
+        mask = jnp.ones((1, x.shape[1], x.shape[1]), bool)
+        o = attn._attend(cfg, q, k, v, mask)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.act)
+    return rmsnorm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg, batch):
+    """Full-sequence forward -> (hidden (B, S, D), aux dict)."""
+    tokens = batch["tokens"]
+    emb, _ = shd.gather_block(params["embed"], tokens)
+    x = embed(emb, tokens)
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+    enc_out = None
+    if cfg.enc_layers and "enc_embeds" in batch:
+        enc_out = _encoder_fwd(params, cfg, batch["enc_embeds"])
+    shared = params.get("shared_attn")
+    aux_losses = []
+
+    for i, p in enumerate(params["layers"]):
+        # params/x are explicit ARGUMENTS of the checkpointed fn: tracers
+        # captured by closure would be treated as residuals and their
+        # downstream intermediates saved instead of rematerialized.
+        blk = functools.partial(_block_fwd_args, cfg, i)
+        if cfg.remat == "block":
+            blk = sequential_remat(blk)
+        x, aux = blk(p, x, enc_out, shared)
+        if aux is not None:
+            aux_losses.append(aux)
+
+    x = shd.constrain_activation(x)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    aux = {}
+    if aux_losses:
+        aux["load_balance"] = sum(a["load_balance"] for a in aux_losses) \
+            / len(aux_losses)
+        aux["router_z"] = sum(a["router_z"] for a in aux_losses) \
+            / len(aux_losses)
+    return x, aux
+
+
+def logits_from_hidden(params, cfg, x):
+    emb, _ = shd.gather_block(params["embed"], x)
+    lg = shd.constrain_logits(unembed(emb, x))
+    return softcap(lg, 30.0) if cfg.softcap else lg
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+
+def init_caches(cfg, batch, seq_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    caches = []
+    for i in range(cfg.num_layers):
+        fam = cfg.family
+        c = {}
+        if fam in ("dense", "vlm", "encdec", "moe"):
+            c["attn"] = attn.init_cache(cfg, batch, seq_len, dtype)
+        elif fam == "ssm":
+            hd = cfg.ssm_headdim
+            H = cfg.d_model // hd
+            c["state"] = jnp.zeros((batch, H, hd, hd), jnp.float32)
+            c["last_x"] = jnp.zeros((batch, 1, cfg.d_model), dtype)
+        elif fam == "hybrid":
+            c["state"] = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                                    cfg.ssm_headdim), jnp.float32)
+            c["conv"] = (jnp.zeros((batch, 3, cfg.d_inner), jnp.float32),
+                         jnp.zeros((batch, 3, cfg.ssm_state), jnp.float32),
+                         jnp.zeros((batch, 3, cfg.ssm_state), jnp.float32))
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                c["attn"] = attn.init_cache(cfg, batch, seq_len, dtype)
+        caches.append(c)
+    return caches
+
+
+def decode_step(params, cfg, token, pos, caches, enc_out=None):
+    """One-token decode. token (B, 1) int32; pos scalar int32 (same position
+    across the batch — continuous batching offsets handled by the server).
+    Returns (logits (B, 1, V), new caches)."""
+    emb, _ = shd.gather_block(params["embed"], token)
+    x = embed(emb, token)
+    shared = params.get("shared_attn")
+    new_caches = []
+    for i, (p, c) in enumerate(zip(params["layers"], caches)):
+        nc = dict(c)
+        p, x = shd.gather_block(p, x)
+        if shared is not None:
+            shared_g, x = shd.gather_block(shared, x)
+        else:
+            shared_g = None
+        fam = cfg.family
+        if fam in ("dense", "vlm", "encdec", "moe"):
+            h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+            o, nc["attn"] = attn.decode_attention(p["attn"], cfg, h,
+                                                  c["attn"], pos, i)
+            x = x + o
+            if cfg.cross_attn and enc_out is not None:
+                x = x + attn.cross_attention(p["xattn"], cfg,
+                                             rmsnorm(p["norm_x"], x,
+                                                     cfg.norm_eps), enc_out)
+            h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+            if fam == "moe":
+                y, _ = moe_mod.moe_ffn(p["moe"], cfg, h, cfg.act)
+            else:
+                y = mlp(p["mlp"], h, cfg.act)
+            x = x + y
+        elif fam == "ssm":
+            y, (st, lx) = ssm_mod.rwkv_mix(p["rwkv"], cfg,
+                                           rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                           state=c["state"], last_x=c["last_x"])
+            nc["state"], nc["last_x"] = st, lx
+            x = x + y
+            x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.act)
+        elif fam == "hybrid":
+            y, (st, cv) = ssm_mod.mamba2_mix(p["mamba"], cfg,
+                                             rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                             state=c["state"],
+                                             conv_state=c["conv"])
+            nc["state"], nc["conv"] = st, cv
+            x = x + y
+            if shared_g is not None and cfg.attn_every \
+                    and (i + 1) % cfg.attn_every == 0:
+                h = rmsnorm(shared_g["norm1"], x, cfg.norm_eps)
+                o, nc["attn"] = attn.decode_attention(shared_g["attn"], cfg, h,
+                                                      c["attn"], pos, i)
+                x = x + o
+                x = x + mlp(shared_g["mlp"],
+                            rmsnorm(shared_g["norm2"], x, cfg.norm_eps), cfg.act)
+        new_caches.append(nc)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_caches
+
+
+__all__ = ["init_params", "forward", "logits_from_hidden", "init_caches",
+           "decode_step"]

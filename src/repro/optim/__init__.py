@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, init_opt_state, apply_updates  # noqa: F401

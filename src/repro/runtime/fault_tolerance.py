@@ -1,0 +1,116 @@
+"""Fault-tolerance runtime: straggler detection, heartbeats, elastic remesh.
+
+On a real cluster these hooks bind to the launcher (GKE/Borg restarts, TPU
+health events). In this container they are exercised by unit tests and the
+train loop's simulated-failure mode — the *logic* (detection thresholds,
+restart bookkeeping, resharding) is the deliverable; the transport is a
+file-based heartbeat protocol that any orchestrator can poll.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EMA step-time tracker with deviation flagging (DESIGN.md §4).
+
+    At pod scale the same EMA runs per host on its own step times; a host
+    whose time exceeds ema * threshold for `patience` consecutive steps is
+    reported for preemptive restart / traffic draining. Mitigation actions
+    are pluggable callbacks.
+    """
+    alpha: float = 0.1
+    threshold: float = 2.0
+    patience: int = 3
+    ema: float = 0.0
+    slow_streak: int = 0
+    flagged: int = 0
+
+    def observe(self, step_time: float) -> bool:
+        """Returns True if this step flags a straggler event."""
+        if self.ema == 0.0:
+            self.ema = step_time
+            return False
+        is_slow = step_time > self.threshold * self.ema
+        # slow steps do not poison the baseline
+        if not is_slow:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * step_time
+            self.slow_streak = 0
+            return False
+        self.slow_streak += 1
+        if self.slow_streak >= self.patience:
+            self.flagged += 1
+            self.slow_streak = 0
+            return True
+        return False
+
+
+class Heartbeat:
+    """File-based liveness protocol: each host touches its beat file every
+    step; the orchestrator (or rank 0) calls `dead_hosts` with a timeout."""
+
+    def __init__(self, directory: str, host_id: int):
+        self.dir = directory
+        self.host_id = host_id
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self, step: int):
+        path = os.path.join(self.dir, f"host_{self.host_id:04d}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": time.time()}, f)
+        os.replace(tmp, path)
+
+    def dead_hosts(self, timeout_s: float) -> list[int]:
+        now = time.time()
+        dead = []
+        for name in os.listdir(self.dir):
+            if not name.startswith("host_") or not name.endswith(".json"):
+                continue
+            with open(os.path.join(self.dir, name)) as f:
+                info = json.load(f)
+            if now - info["time"] > timeout_s:
+                dead.append(int(name[5:9]))
+        return sorted(dead)
+
+
+def elastic_mesh(preferred_model_parallel: int = 16):
+    """Re-derive the largest valid (data, model) mesh from the devices that
+    are *currently* healthy — the elastic-restart path. Keeps the model
+    axis at the preferred size when divisible, otherwise the largest
+    power-of-two divisor (tensor-parallel groups must stay intact)."""
+    n = len(jax.devices())
+    mp = preferred_model_parallel
+    while mp > 1 and n % mp:
+        mp //= 2
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+@dataclasses.dataclass
+class RestartState:
+    """Bookkeeping persisted across restarts (crash-count backoff)."""
+    restarts: int = 0
+    last_step: int = 0
+
+    @staticmethod
+    def load(path: str) -> "RestartState":
+        if os.path.exists(path):
+            with open(path) as f:
+                d = json.load(f)
+            return RestartState(**d)
+        return RestartState()
+
+    def save(self, path: str):
+        with open(path + ".tmp", "w") as f:
+            json.dump(dataclasses.asdict(self), f)
+        os.replace(path + ".tmp", path)
+
+
+__all__ = ["StragglerMonitor", "Heartbeat", "elastic_mesh", "RestartState"]

@@ -1,0 +1,11 @@
+"""Test-session defaults.
+
+The kernel dispatch runs the pure-jnp reference by default (interpret-mode
+Pallas executes the kernel body per grid step in Python — too slow for the
+whole suite); tests/test_kernels.py opts into the Pallas interpreter
+explicitly. The 512-device dry-run flag is intentionally NOT set here —
+smoke tests must see one device (assignment spec).
+"""
+import os
+
+os.environ.setdefault("REPRO_KERNEL_BACKEND", "jnp")

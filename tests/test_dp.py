@@ -1,0 +1,122 @@
+"""Partitioning-optimizer tests: DP optimality, oracle approximation bounds,
+monotonicity (paper §4.3, Lemmas A.1/A.3/A.5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp as dp_mod
+from repro.core import prefix as px
+
+
+def brute_force_partition(vals, k, kind, min_len=1):
+    """Enumerate all cut placements (tiny n only)."""
+    n = len(vals)
+    s1, s2 = px.prefix_moments(vals)
+    best = (np.inf, None)
+    import itertools
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        cuts = (0,) + cuts + (n,)
+        worst = max(px.oracle_exact(s1, s2, cuts[i], cuts[i + 1], kind,
+                                    min_len) for i in range(k))
+        if worst < best[0]:
+            best = (worst, cuts)
+    return best
+
+
+@pytest.mark.parametrize("kind", ["sum", "avg"])
+def test_dp_exact_matches_brute_force(kind):
+    rng = np.random.default_rng(0)
+    vals = np.sort(rng.normal(5, 2, 14))
+    cuts, v = dp_mod.dp_exact(vals, 3, kind)
+    bf_v, _ = brute_force_partition(vals, 3, kind)
+    assert v == pytest.approx(bf_v, rel=1e-9), (v, bf_v)
+
+
+def test_count_equal_depth_optimal():
+    """Lemma A.1: equal-size partitions are optimal for COUNT in 1-D."""
+    rng = np.random.default_rng(1)
+    vals = rng.normal(0, 1, 24)
+    cuts, v = dp_mod.dp_exact(np.ones_like(vals), 4, "count")
+    eq = dp_mod.equal_depth_boundaries(24, 4)
+    s1, s2 = px.prefix_moments(np.ones(24))
+    eq_v = max(px.oracle_exact(s1, s2, eq[i], eq[i + 1], "count")
+               for i in range(4))
+    assert eq_v <= v * (1 + 1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(10, 60), st.integers(0, 10_000))
+def test_sum_split_oracle_quarter_approx(n, seed):
+    """Lemma A.3: the median-split oracle is >= 1/4 of the exact max."""
+    rng = np.random.default_rng(seed)
+    vals = rng.lognormal(0, 1, n)
+    s1, s2 = px.prefix_moments(vals)
+    approx = float(px.oracle_sum_split(s1, s2, np.array([0]),
+                                       np.array([n]))[0])
+    exact = px.oracle_exact(s1, s2, 0, n, "sum")
+    assert approx <= exact * (1 + 1e-9)
+    assert approx >= exact / 4 * (1 - 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(40, 120), st.integers(0, 10_000))
+def test_avg_window_oracle_quarter_approx(n, seed):
+    """Lemma A.5: the delta-window RMQ oracle is >= 1/4 of the exact max
+    over queries of length >= win (the 'meaningful' class)."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(3, 2, n)
+    s1, s2 = px.prefix_moments(vals)
+    win = max(2, n // 20)
+    scores = px.window_sqsum(s2, win)
+    table = px.SparseTableArgmax(scores)
+    approx = float(px.oracle_avg_window(s1, s2, table, win,
+                                        np.array([0]), np.array([n]))[0])
+    exact = px.oracle_exact(s1, s2, 0, n, "avg", min_len=win)
+    if n >= 2 * win:
+        assert approx >= exact / 4 * (1 - 1e-9)
+
+
+def test_variance_monotonicity():
+    """§4.3: growing the partition can only grow a fixed query's variance."""
+    rng = np.random.default_rng(3)
+    vals = rng.normal(0, 1, 100)
+    s1, s2 = px.prefix_moments(vals)
+    # query = [40, 50) inside partitions [30,60) and [10,90)
+    nq, sq, sqq = px.interval_moments(s1, s2, 40, 50)
+    v_small = px.v_avg(30, nq, sq, sqq)
+    v_big = px.v_avg(80, nq, sq, sqq)
+    assert v_small <= v_big + 1e-12
+
+
+def test_monotone_dp_close_to_exact():
+    """The O(km log m) DP lands within its proven factor of the exact DP."""
+    rng = np.random.default_rng(4)
+    vals = np.sort(rng.lognormal(0, 1, 48))
+    _, v_exact = dp_mod.dp_exact(vals, 4, "sum")
+    _, v_mono = dp_mod.dp_monotone(vals, 4, "sum")
+    # 2*sqrt(2) error factor on the error => 8x on variance; allow that.
+    assert v_mono <= 8 * v_exact + 1e-9
+    assert v_mono >= v_exact / 8 - 1e-9
+
+
+def test_dp_monotone_jnp_matches_host():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(5)
+    vals = np.sort(rng.normal(10, 2, 64))
+    cuts_np, v_np = dp_mod.dp_monotone(vals, 4, "sum")
+    cuts_j, v_j = dp_mod.dp_monotone_jnp(jnp.asarray(vals, jnp.float32), 4)
+    assert np.asarray(v_j) == pytest.approx(v_np, rel=1e-3)
+    assert np.array_equal(np.asarray(cuts_j), cuts_np)
+
+
+def test_adp_partition_end_to_end():
+    rng = np.random.default_rng(6)
+    c = rng.uniform(0, 100, 5000)
+    a = np.where(c > 80, rng.normal(50, 10, 5000), 0.0)
+    thresholds, assign, vmax = dp_mod.adp_partition(c, a, k=8, m=1024,
+                                                    kind="sum")
+    assert assign.min() >= 0 and assign.max() <= 7
+    assert len(thresholds) == 7
+    # the high-variance region (c > 80) should receive several partitions
+    hi = np.unique(assign[c > 80])
+    assert len(hi) >= 3

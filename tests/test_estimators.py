@@ -1,0 +1,155 @@
+"""Estimator correctness: exactness on aligned queries, hard-bound
+containment (hypothesis property), CI coverage, FPC, unbiasedness."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_synopsis, answer, ground_truth
+from repro.core.types import QueryBatch
+from repro.core.query import random_queries
+
+
+def _make(seed=0, n=20000, k=16, rate=0.02, method="eq"):
+    rng = np.random.default_rng(seed)
+    # snap to the f32 grid: the synopsis stores coordinates/boxes in f32,
+    # so f64 test data off that grid flips boundary rows vs the oracle.
+    c = np.sort(rng.uniform(0, 100, n)).astype(np.float32).astype(np.float64)
+    a = rng.lognormal(0, 1, n) * (1 + np.sin(c / 5))
+    syn, _ = build_synopsis(c, a, k=k, sample_rate=rate, method=method,
+                            seed=seed)
+    return c, a, syn
+
+
+def test_aligned_query_exact():
+    """A query predicate aligned with partition boundaries has 0 error
+    (paper §2.3: 'answered exactly with a depth-first search')."""
+    c, a, syn = _make()
+    lo = np.asarray(syn.leaf_lo)[:, 0]
+    hi = np.asarray(syn.leaf_hi)[:, 0]
+    # union of leaves 3..8
+    q = QueryBatch(lo=jnp.asarray([[lo[3]]]), hi=jnp.asarray([[hi[8]]]))
+    for kind in ("sum", "count", "avg"):
+        res = answer(syn, q, kind=kind)
+        gt = ground_truth(c, a, q, kind=kind)
+        assert float(res.estimate[0]) == pytest.approx(gt[0], rel=2e-5)
+        assert float(res.ci_half[0]) == pytest.approx(0.0, abs=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.floats(0.01, 0.9), st.floats(0.02, 0.5))
+def test_hard_bounds_always_contain_truth(seed, start, width):
+    """§2.3: the deterministic bounds are a 100% confidence interval."""
+    c, a, syn = _make(seed=7)  # fixed synopsis; queries vary
+    rng = np.random.default_rng(seed)
+    lo_v = start * 100
+    hi_v = min(lo_v + width * 100, 100.0)
+    q = QueryBatch(lo=jnp.asarray([[lo_v]], jnp.float32),
+                   hi=jnp.asarray([[hi_v]], jnp.float32))
+    for kind in ("sum", "count", "avg"):
+        gt = ground_truth(c, a, q, kind=kind)
+        if kind == "avg" and ground_truth(c, a, q, "count")[0] == 0:
+            continue
+        res = answer(syn, q, kind=kind)
+        # f32 slack on the bounds
+        slack = 1e-4 * max(abs(gt[0]), 1.0) + 1e-3
+        assert float(res.lower[0]) <= gt[0] + slack, kind
+        assert float(res.upper[0]) >= gt[0] - slack, kind
+
+
+def test_full_sampling_is_exact():
+    """FPC: sampling 100% of each stratum collapses the CI to ~0 and the
+    estimate to the truth (paper footnote 1)."""
+    rng = np.random.default_rng(3)
+    n = 2000
+    c = np.sort(rng.uniform(0, 10, n)).astype(np.float32).astype(np.float64)
+    a = rng.normal(5, 2, n).astype(np.float32).astype(np.float64)
+    syn, _ = build_synopsis(c, a, k=4, sample_budget=n, method="eq")
+    qs = random_queries(c, 20, seed=1)
+    for kind in ("sum", "count", "avg"):
+        res = answer(syn, qs, kind=kind)
+        gt = ground_truth(c, a, qs, kind=kind)
+        np.testing.assert_allclose(np.asarray(res.estimate), gt, rtol=2e-3)
+        assert np.all(np.asarray(res.ci_half) <= 2e-2 * np.maximum(np.abs(gt), 1))
+
+
+def test_ci_coverage():
+    """~99% nominal CLT intervals should cover the truth in most trials."""
+    rng = np.random.default_rng(4)
+    n = 50000
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.gamma(2, 10, n)
+    qs = random_queries(c, 100, seed=5, min_frac=0.05, max_frac=0.4)
+    hits = total = 0
+    for seed in range(5):
+        syn, _ = build_synopsis(c, a, k=16, sample_rate=0.01, method="eq",
+                                seed=seed)
+        res = answer(syn, qs, kind="sum", lam=2.576)
+        gt = ground_truth(c, a, qs, kind="sum")
+        est = np.asarray(res.estimate, dtype=np.float64)
+        ci = np.asarray(res.ci_half, dtype=np.float64)
+        hits += int(np.sum(np.abs(est - gt) <= ci + 1e-6))
+        total += len(gt)
+    assert hits / total >= 0.90, hits / total
+
+
+def test_unbiasedness_sum():
+    """Mean estimate over many sample draws approaches the truth: the bias
+    must be statistically indistinguishable from 0 (within 3 standard
+    errors of the empirical mean — the estimator is Horvitz-Thompson
+    unbiased, but 30 draws of a lognormal population converge slowly)."""
+    rng = np.random.default_rng(6)
+    n = 20000
+    c = np.sort(rng.uniform(0, 100, n)).astype(np.float32).astype(np.float64)
+    a = rng.lognormal(0, 1, n).astype(np.float32).astype(np.float64)
+    q = QueryBatch(lo=jnp.asarray([[13.0]], jnp.float32),
+                   hi=jnp.asarray([[61.0]], jnp.float32))
+    gt = ground_truth(c, a, q, kind="sum")[0]
+    ests = []
+    for seed in range(30):
+        syn, _ = build_synopsis(c, a, k=8, sample_rate=0.01, method="eq",
+                                seed=seed)
+        ests.append(float(answer(syn, q, kind="sum").estimate[0]))
+    sem = np.std(ests, ddof=1) / np.sqrt(len(ests))
+    assert abs(np.mean(ests) - gt) <= 3 * sem + 1e-3 * abs(gt)
+
+
+def test_zero_variance_rule():
+    """§3.4: partial strata with MIN == MAX answer AVG exactly."""
+    n = 4000
+    c = np.arange(n, dtype=np.float64)
+    a = np.full(n, 7.0)
+    syn, _ = build_synopsis(c, a, k=4, sample_rate=0.01, method="eq")
+    q = QueryBatch(lo=jnp.asarray([[100.5]], jnp.float32),
+                   hi=jnp.asarray([[3100.5]], jnp.float32))
+    res = answer(syn, q, kind="avg", avg_mode="stratum", zero_var_rule=True)
+    assert float(res.estimate[0]) == pytest.approx(7.0, rel=1e-6)
+    assert float(res.ci_half[0]) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_min_max_queries():
+    rng = np.random.default_rng(8)
+    n = 30000
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.normal(0, 10, n)
+    syn, _ = build_synopsis(c, a, k=16, sample_rate=0.05, method="eq")
+    qs = random_queries(c, 30, seed=2, min_frac=0.1, max_frac=0.5)
+    for kind in ("min", "max"):
+        res = answer(syn, qs, kind=kind)
+        gt = ground_truth(c, a, qs, kind=kind)
+        lo = np.asarray(res.lower, dtype=np.float64)
+        hi = np.asarray(res.upper, dtype=np.float64)
+        ok = (lo <= gt + 1e-3) & (gt <= hi + 1e-3)
+        assert np.all(ok), kind
+
+
+def test_ess_and_skip_rate():
+    from repro.core.estimators import ess, skip_rate
+    c, a, syn = _make(k=32)
+    qs = random_queries(c, 50, seed=3, min_frac=0.02, max_frac=0.2)
+    e = np.asarray(ess(syn, qs))
+    s = np.asarray(skip_rate(syn, qs))
+    assert np.all(e >= 0) and np.all(e <= int(np.asarray(syn.k_per_leaf).sum()))
+    # 1-D interval: at most 2 partial leaves
+    assert np.all(e <= 2 * np.asarray(syn.k_per_leaf).max() + 1e-6)
+    assert np.all(s >= 1 - 2 * np.asarray(syn.n_rows).max() / syn.total_rows - 1e-6)

@@ -1,0 +1,87 @@
+"""Partition-tree invariants (Definition 3.1) + MCF fidelity: the recursive
+Algorithm 1 and the vectorized classification return identical frontiers."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import build_synopsis
+from repro.core import partition_tree as pt
+from repro.core.estimators import classify_leaves
+from repro.core.types import REL_COVER, REL_PARTIAL, AGG_COUNT, AGG_SUM
+
+
+def _data(seed=0, n=5000):
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0, 50, n))
+    a = rng.normal(10, 4, n)
+    return c, a
+
+
+def test_tree_invariants():
+    c, a = _data()
+    syn, _ = build_synopsis(c, a, k=12, sample_rate=0.02, method="eq")
+    tree = syn.tree
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    agg = np.asarray(tree.agg)
+    for v in range(tree.num_nodes):
+        if left[v] < 0:
+            continue
+        l, r = left[v], right[v]
+        # children partition the parent: counts and sums add up
+        assert agg[v, AGG_COUNT] == agg[l, AGG_COUNT] + agg[r, AGG_COUNT]
+        np.testing.assert_allclose(agg[v, AGG_SUM],
+                                   agg[l, AGG_SUM] + agg[r, AGG_SUM],
+                                   rtol=1e-6)
+    # root covers everything
+    assert agg[0, AGG_COUNT] == len(c)
+
+
+def test_mcf_reference_matches_vectorized():
+    c, a = _data(1)
+    syn, _ = build_synopsis(c, a, k=16, sample_rate=0.02, method="eq")
+    tree = syn.tree
+    leaf_id = np.asarray(tree.leaf_id)
+    agg = np.asarray(tree.agg)
+    rng = np.random.default_rng(2)
+    for _ in range(25):
+        lo = rng.uniform(0, 40)
+        hi = lo + rng.uniform(0.5, 10)
+        cover_nodes, partial_nodes, visited = pt.mcf_reference(
+            tree, np.array([lo]), np.array([hi]))
+        # expand covered internal nodes to leaves
+        def leaves_under(v):
+            left = np.asarray(tree.left)
+            if left[v] < 0:
+                return [leaf_id[v]]
+            return leaves_under(left[v]) + leaves_under(int(np.asarray(tree.right)[v]))
+        mcf_cover = sorted(x for v in cover_nodes for x in leaves_under(v)
+                           if x < syn.num_leaves
+                           and agg[np.where(leaf_id == x)[0][0], AGG_COUNT] > 0)
+        mcf_partial = sorted(leaf_id[v] for v in partial_nodes
+                             if leaf_id[v] < syn.num_leaves)
+        rel = np.asarray(classify_leaves(
+            syn.leaf_lo, syn.leaf_hi,
+            jnp.asarray([[lo]], jnp.float32), jnp.asarray([[hi]], jnp.float32)))[0]
+        vec_cover = sorted(np.where(rel == REL_COVER)[0])
+        vec_partial = sorted(np.where(rel == REL_PARTIAL)[0])
+        assert mcf_cover == list(vec_cover), (mcf_cover, vec_cover)
+        assert mcf_partial == list(vec_partial)
+
+
+def test_mcf_visit_count_sublinear():
+    """Selective queries visit O(gamma log B) nodes, not O(B)."""
+    c, a = _data(3, n=20000)
+    syn, _ = build_synopsis(c, a, k=256, sample_rate=0.01, method="eq")
+    lo, hi = 10.0, 10.4   # very selective
+    _, _, visited = pt.mcf_reference(syn.tree, np.array([lo]), np.array([hi]))
+    assert visited < 100, visited          # vs 511 nodes in the tree
+
+
+def test_leaf_stats_empty_leaves():
+    c = np.array([0.0, 1.0, 2.0])
+    a = np.array([5.0, 6.0, 7.0])
+    assign = np.array([0, 0, 3])
+    agg, lo, hi = pt.leaf_stats(c, a, assign, 5)
+    assert agg[1, AGG_COUNT] == 0 and agg[4, AGG_COUNT] == 0
+    assert np.isinf(lo[1, 0]) and lo[1, 0] > 0     # inverted box
+    assert agg[3, AGG_SUM] == 7.0

@@ -1,0 +1,69 @@
+"""Query-layer tests: multi-dim KD-PASS, workload shift, delta encoding,
+challenging-query generation."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (build_synopsis, answer, ground_truth, random_queries,
+                        relative_error, delta_encode, delta_decode)
+from repro.core.types import QueryBatch
+from repro.data import synthetic
+
+
+def test_kd_pass_multidim_accuracy():
+    c, a = synthetic.nyc_taxi(scale=0.003, dims=3)
+    syn, _ = build_synopsis(c, a, k=64, sample_rate=0.05, method="kd")
+    qs = random_queries(c, 60, seed=1, min_frac=0.2, max_frac=0.6)
+    gt = ground_truth(c, a, qs, kind="sum")
+    keep = np.abs(gt) > 1e-9
+    err = relative_error(answer(syn, qs, kind="sum"), gt)[keep]
+    assert np.median(err) < 0.2, np.median(err)
+    # hard bounds hold in multi-D too
+    res = answer(syn, qs, kind="sum")
+    slack = 1e-4 * np.abs(gt) + 1e-2
+    assert np.all(np.asarray(res.lower)[keep] <= (gt + slack)[keep])
+    assert np.all(np.asarray(res.upper)[keep] >= (gt - slack)[keep])
+
+
+def test_workload_shift_unbounded_dims():
+    """A synopsis built on 2 predicate columns still answers queries that
+    constrain only one of them (paper §5.4.1): unconstrained dims get
+    +-inf bounds and classification stays exact."""
+    c, a = synthetic.nyc_taxi(scale=0.003, dims=2)
+    syn, _ = build_synopsis(c, a, k=32, sample_rate=0.05, method="kd")
+    qs1 = random_queries(c[:, :1], 40, seed=3, min_frac=0.1, max_frac=0.5)
+    lo = np.full((40, 2), -np.inf, np.float32)
+    hi = np.full((40, 2), np.inf, np.float32)
+    lo[:, 0] = np.asarray(qs1.lo)[:, 0]
+    hi[:, 0] = np.asarray(qs1.hi)[:, 0]
+    qs = QueryBatch(jnp.asarray(lo), jnp.asarray(hi))
+    gt = ground_truth(c, a, qs, kind="sum")
+    keep = np.abs(gt) > 1e-9
+    err = relative_error(answer(syn, qs, kind="sum"), gt)[keep]
+    assert np.median(err) < 0.25, np.median(err)
+
+
+def test_delta_encoding_roundtrip_and_range():
+    rng = np.random.default_rng(5)
+    c = np.sort(rng.uniform(0, 10, 20000))
+    a = 1000.0 + np.sin(c) * 3 + rng.normal(0, 0.5, 20000)
+    syn, _ = build_synopsis(c, a, k=32, sample_rate=0.02, method="eq")
+    enc, stats = delta_encode(syn)
+    dec = delta_decode(enc)
+    valid = np.asarray(syn.sample_valid)
+    np.testing.assert_allclose(np.asarray(dec.sample_a)[valid],
+                               np.asarray(syn.sample_a)[valid], atol=1e-2)
+    # per-stratum deltas have far smaller dynamic range than raw values
+    assert stats["delta_absmax"] < 0.05 * stats["orig_absmax"]
+
+
+def test_challenging_queries_harder_than_random():
+    from repro.core.query import challenging_queries
+    c, a = synthetic.adversarial(n=100_000)
+    syn, _ = build_synopsis(c, a, k=32, sample_rate=0.005, method="eq")
+    hard = challenging_queries(c, a, 150, seed=7)
+    easy = random_queries(c, 150, seed=7)
+    def med(qs):
+        gt = ground_truth(c, a, qs, kind="sum")
+        keep = np.abs(gt) > 1e-9
+        return np.median(relative_error(answer(syn, qs, kind="sum"), gt)[keep])
+    assert med(hard) > med(easy)

@@ -1,0 +1,72 @@
+"""Dynamic updates (paper §4.5): exactness of maintained aggregates and
+statistical consistency of the reservoir samples after inserts."""
+import numpy as np
+import pytest
+
+from repro.core import build_synopsis, answer, ground_truth, random_queries
+from repro.core.updates import UpdatableSynopsis
+from repro.core.types import AGG_COUNT, AGG_SUM
+
+
+def test_insert_maintains_exact_aggregates_and_answers():
+    rng = np.random.default_rng(0)
+    n = 20000
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.lognormal(0, 1, n)
+    syn, _ = build_synopsis(c, a, k=16, sample_rate=0.05, method="eq")
+    upd = UpdatableSynopsis(syn, seed=1)
+
+    c_new = rng.uniform(0, 100, 2000)
+    a_new = rng.lognormal(0.5, 1, 2000)
+    upd.insert_batch(c_new, a_new)
+    assert upd.staleness() == pytest.approx(2000 / 22000)
+
+    syn2 = upd.snapshot()
+    # aggregates exact after inserts
+    assert float(np.asarray(syn2.leaf_agg)[:, AGG_COUNT].sum()) == 22000
+    assert float(np.asarray(syn2.leaf_agg)[:, AGG_SUM].sum()) \
+        == pytest.approx(a.sum() + a_new.sum(), rel=1e-5)
+    # tree root consistent with leaves
+    assert float(np.asarray(syn2.tree.agg)[0, AGG_COUNT]) == 22000
+
+    # query accuracy on the union dataset stays sane
+    c_all = np.concatenate([c, c_new])
+    a_all = np.concatenate([a, a_new])
+    qs = random_queries(c_all, 100, seed=3, min_frac=0.1, max_frac=0.5)
+    gt = ground_truth(c_all, a_all, qs, kind="sum")
+    res = answer(syn2, qs, kind="sum")
+    keep = np.abs(gt) > 1e-9
+    rel = np.abs(np.asarray(res.estimate)[keep] - gt[keep]) / np.abs(gt[keep])
+    assert np.median(rel) < 0.1
+    # hard bounds still valid
+    slack = 1e-4 * np.abs(gt) + 1e-2
+    assert np.all(np.asarray(res.lower)[keep] <= (gt + slack)[keep])
+    assert np.all(np.asarray(res.upper)[keep] >= (gt - slack)[keep])
+
+
+def test_out_of_range_insert_extends_boxes():
+    rng = np.random.default_rng(2)
+    c = np.sort(rng.uniform(0, 10, 5000))
+    a = rng.normal(0, 1, 5000)
+    syn, _ = build_synopsis(c, a, k=8, sample_rate=0.05, method="eq")
+    upd = UpdatableSynopsis(syn)
+    upd.insert(np.array([99.0]), 5.0)       # far outside every box
+    syn2 = upd.snapshot()
+    assert float(np.asarray(syn2.leaf_hi).max()) >= 99.0
+    assert syn2.total_rows == 5001
+
+
+def test_reservoir_uniformity():
+    """After many inserts the reservoir is (approximately) a uniform sample:
+    the mean of sampled values tracks the stratum mean."""
+    rng = np.random.default_rng(3)
+    c = np.sort(rng.uniform(0, 1, 2000))
+    a = np.zeros(2000)                       # stratum starts all-zero
+    syn, _ = build_synopsis(c, a, k=1, sample_budget=200, method="eq")
+    upd = UpdatableSynopsis(syn, seed=4)
+    new_vals = rng.normal(10, 1, 6000)
+    upd.insert_batch(rng.uniform(0, 1, 6000), new_vals)
+    syn2 = upd.snapshot()
+    vals = np.asarray(syn2.sample_a)[np.asarray(syn2.sample_valid)]
+    # population mean = (2000*0 + 6000*10)/8000 = 7.5
+    assert np.mean(vals) == pytest.approx(7.5, abs=1.2)
