@@ -24,6 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                   # jax >= 0.5 exposes it at top level
+    _shard_map = jax.shard_map
+except AttributeError:                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .types import Synopsis, QueryBatch, AGG_MIN, AGG_MAX, NUM_AGGS
 from ..kernels import ops as kops
 
@@ -54,7 +59,7 @@ def build_leaf_aggregates(mesh: Mesh, values: jnp.ndarray,
         return jnp.concatenate([sums, mins[:, None], maxs[:, None]], axis=1)
 
     row_spec = P(data_axes)
-    return jax.shard_map(shard_fn, mesh=mesh,
+    return _shard_map(shard_fn, mesh=mesh,
                          in_specs=(row_spec, row_spec),
                          out_specs=P())(values, assign)
 
@@ -76,7 +81,7 @@ def serve_queries_sharded(mesh: Mesh, syn: Synopsis, queries: QueryBatch,
         return res.estimate, res.ci_half, res.lower, res.upper
 
     qspec = P(axes)
-    est, ci, lo, hi = jax.shard_map(
+    est, ci, lo, hi = _shard_map(
         shard_fn, mesh=mesh, in_specs=(qspec, qspec),
         out_specs=(qspec,) * 4)(queries.lo, queries.hi)
     return est, ci, lo, hi
@@ -128,7 +133,7 @@ def serve_samples_sharded(mesh: Mesh, syn: Synopsis, queries: QueryBatch,
     in_specs = (P(None, sample_axis, None), P(None, sample_axis),
                 P(None, sample_axis), P())
     # k_per_leaf refers to the GLOBAL stratum sample count.
-    return jax.shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+    return _shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
                          out_specs=(P(), P()))(
         syn.sample_c, syn.sample_a, syn.sample_valid, syn.k_per_leaf)
 

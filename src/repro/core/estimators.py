@@ -1,79 +1,29 @@
-"""Vectorized PASS query estimation (paper §2.2, §2.3, §3.3, §3.4).
+"""Compatibility shim over the layered query engine (``repro.engine``).
 
-This is the TPU-native query engine: all B leaves are classified against all
-Q queries at once (level-synchronous MCF — see DESIGN.md §3), the exact part
-is a masked matmul over leaf aggregates, and the sampled part is a masked
-moment reduction over the stratified samples. Everything here is pure jnp
-and jit-able; `kernels/ops.py` provides Pallas implementations of the two
-hot reductions with identical semantics.
+The vectorized PASS estimators used to live here as one monolithic
+``estimate()``; the engine now splits them into plan / execute / assemble
+layers (see DESIGN.md §3-§4):
 
-Estimator semantics follow the paper exactly:
-  * SUM/COUNT: per-stratum Horvitz-Thompson scaling (phi of §2.1), weights 1.
-  * AVG: stratum means weighted by w_i = N_i / N_q over relevant strata
-    (§2.2), where a partial stratum is relevant iff it has >= 1 relevant
-    sampled tuple.
-  * CLT confidence intervals with the finite-population correction
-    (§2.1.1 footnote 1).
-  * Deterministic hard bounds from SUM/COUNT/MIN/MAX (§2.3) — generalized to
-    possibly-negative values (DESIGN.md §3; equals the paper's bounds when
-    all values are positive).
-  * 0-variance rule for AVG (§3.4): partial strata with MIN == MAX behave as
-    covered.
+  * planning + cached relation masks — ``engine.planner``
+  * shared artifacts (one classification + one moment pass per batch,
+    through the kernel-backend registry) — ``engine.executor``
+  * per-kind estimates/CIs/hard bounds — ``engine.assemble``
+
+This module keeps the original public surface: ``estimate`` answers one
+kind (delegating to the engine, so a loop over kinds costs one artifact
+pass per kind — use ``engine.answer(syn, queries, kinds=...)`` to share),
+``classify_leaves``/``sample_moments`` re-export the pure-jnp reference
+semantics now owned by ``kernels.backends``, and ``ess``/``skip_rate``
+share one cached classification per (synopsis, batch) pair.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
-from .types import (Synopsis, QueryBatch, QueryResult,
-                    AGG_SUM, AGG_COUNT, AGG_MIN, AGG_MAX,
-                    REL_NONE, REL_PARTIAL, REL_COVER)
-
-_BIG = jnp.float32(3.4e38)
+from ..kernels.backends import classify_leaves, sample_moments  # noqa: F401
+from .types import Synopsis, QueryBatch, QueryResult, REL_PARTIAL
 
 
-def classify_leaves(leaf_lo, leaf_hi, q_lo, q_hi):
-    """(k,d) boxes vs (Q,d) rectangles -> (Q,k) int32 relation codes."""
-    nonempty = jnp.all(leaf_lo <= leaf_hi, axis=-1)          # (k,)
-    ql = q_lo[:, None, :]                                    # (Q,1,d)
-    qh = q_hi[:, None, :]
-    disjoint = (jnp.any(qh < leaf_lo[None], axis=-1)
-                | jnp.any(ql > leaf_hi[None], axis=-1)
-                | ~nonempty[None])
-    cover = (jnp.all(ql <= leaf_lo[None], axis=-1)
-             & jnp.all(leaf_hi[None] <= qh, axis=-1)
-             & nonempty[None])
-    return jnp.where(cover, REL_COVER,
-                     jnp.where(disjoint, REL_NONE, REL_PARTIAL)).astype(jnp.int32)
-
-
-def sample_moments(sample_c, sample_a, sample_valid, q_lo, q_hi):
-    """Per-(query, stratum) relevant-sample moments.
-
-    Returns (k_pred, s_sum, s_sumsq), each (Q, k) f32. Pure-jnp reference
-    semantics for the `stratified_estimate` Pallas kernel.
-    """
-    # pred: (Q, k, s)
-    inside = (jnp.all(q_lo[:, None, None, :] <= sample_c[None], axis=-1)
-              & jnp.all(sample_c[None] <= q_hi[:, None, None, :], axis=-1))
-    pred = (inside & sample_valid[None]).astype(jnp.float32)
-    a = sample_a.astype(jnp.float32)[None]
-    k_pred = jnp.sum(pred, axis=-1)
-    s_sum = jnp.sum(pred * a, axis=-1)
-    s_sumsq = jnp.sum(pred * a * a, axis=-1)
-    return k_pred, s_sum, s_sumsq
-
-
-def _fpc(n_rows, k_leaf):
-    """Finite population correction (N-K)/(N-1), clamped to [0, 1]."""
-    n = jnp.maximum(n_rows, 1.0)
-    return jnp.clip((n - k_leaf) / jnp.maximum(n - 1.0, 1.0), 0.0, 1.0)
-
-
-@partial(jax.jit, static_argnames=("kind", "use_fpc", "zero_var_rule",
-                                   "use_aggregates", "avg_mode"))
 def estimate(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
              lam: float = 2.576, use_fpc: bool = True,
              zero_var_rule: bool = True, use_aggregates: bool = True,
@@ -93,176 +43,30 @@ def estimate(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
     N_i weighting (biased when boundary strata are cut asymmetrically; kept
     for fidelity tests).
     """
-    leaf_agg = syn.leaf_agg.astype(jnp.float32)
-    n_rows = syn.n_rows.astype(jnp.float32)           # (k,)
-    k_leaf = syn.k_per_leaf.astype(jnp.float32)       # (k,)
-    from ..kernels import ops as kops
-    if kops.backend() == "pallas":
-        rel, _ = kops.query_eval_op(syn.leaf_lo, syn.leaf_hi, leaf_agg,
-                                    queries.lo, queries.hi)
-    else:
-        rel = classify_leaves(syn.leaf_lo, syn.leaf_hi, queries.lo, queries.hi)
-    cover = (rel == REL_COVER)
-    partial_m = (rel == REL_PARTIAL)
-    if not use_aggregates:
-        partial_m = cover | partial_m
-        cover = jnp.zeros_like(cover)
+    from .. import engine
+    return engine.answer(syn, queries, kinds=(kind,), lam=lam,
+                         use_fpc=use_fpc, zero_var_rule=zero_var_rule,
+                         use_aggregates=use_aggregates,
+                         avg_mode=avg_mode)[kind]
 
-    if kops.backend() == "pallas":
-        k, s, d = syn.sample_c.shape
-        leaf_ids = jnp.where(syn.sample_valid.reshape(k * s),
-                             jnp.repeat(jnp.arange(k, dtype=jnp.int32), s),
-                             -1)
-        mom = kops.stratified_moments_op(
-            syn.sample_c.reshape(k * s, d), syn.sample_a.reshape(k * s),
-            leaf_ids, queries.lo, queries.hi, k)
-        k_pred, s_sum, s_sumsq = mom[..., 0], mom[..., 1], mom[..., 2]
-    else:
-        k_pred, s_sum, s_sumsq = sample_moments(
-            syn.sample_c, syn.sample_a, syn.sample_valid,
-            queries.lo, queries.hi)
 
-    leaf_sum = leaf_agg[:, AGG_SUM][None]              # (1,k)
-    leaf_cnt = leaf_agg[:, AGG_COUNT][None]
-    leaf_min = leaf_agg[:, AGG_MIN][None]
-    leaf_max = leaf_agg[:, AGG_MAX][None]
-    Ni = n_rows[None]
-    Ki = jnp.maximum(k_leaf[None], 1.0)
-    fpc = _fpc(Ni, k_leaf[None]) if use_fpc else jnp.ones_like(Ni)
-
-    coverf = cover.astype(jnp.float32)
-    partf = partial_m.astype(jnp.float32)
-    touched = jnp.sum(partf * Ni, axis=1) / max(syn.total_rows, 1)
-
-    if kind in ("sum", "count"):
-        if kind == "sum":
-            exact = jnp.sum(coverf * leaf_sum, axis=1)
-            est_part = Ni / Ki * s_sum
-            mean_phi = s_sum / Ki                       # E[pred*a]
-            mean_phi2 = s_sumsq / Ki                    # E[pred*a^2]
-        else:
-            exact = jnp.sum(coverf * leaf_cnt, axis=1)
-            est_part = Ni / Ki * k_pred
-            mean_phi = k_pred / Ki
-            mean_phi2 = k_pred / Ki
-        est = exact + jnp.sum(partf * est_part, axis=1)
-        var_phi = Ni * Ni * jnp.maximum(mean_phi2 - mean_phi ** 2, 0.0)
-        v_i = var_phi / Ki * fpc
-        ci = lam * jnp.sqrt(jnp.sum(partf * v_i, axis=1))
-        # Hard bounds (§2.3, sign-generalized).
-        if kind == "sum":
-            p_ub = jnp.minimum(Ni * jnp.maximum(leaf_max, 0.0),
-                               leaf_sum - Ni * jnp.minimum(leaf_min, 0.0))
-            p_lb = jnp.maximum(Ni * jnp.minimum(leaf_min, 0.0),
-                               leaf_sum - Ni * jnp.maximum(leaf_max, 0.0))
-        else:
-            p_ub = leaf_cnt
-            p_lb = jnp.zeros_like(leaf_cnt)
-        if use_aggregates:
-            lower = exact + jnp.sum(partf * p_lb, axis=1)
-            upper = exact + jnp.sum(partf * p_ub, axis=1)
-        else:
-            lower = jnp.full_like(est, -_BIG)
-            upper = jnp.full_like(est, _BIG)
-        return QueryResult(est, ci, lower, upper, touched)
-
-    if kind == "avg":
-        zv = (leaf_min == leaf_max) & (leaf_cnt > 0)
-        # 0-variance rule (§3.4): only sound with whole-stratum weighting —
-        # the ratio path already credits zv strata with zero value-variance.
-        promote_zv = zero_var_rule and avg_mode == "stratum"
-        cover_like = cover | (partial_m & zv) if promote_zv else cover
-        sampled = partial_m & ~cover_like & (k_pred >= 1.0)
-        relevant = cover_like | sampled
-        relf = relevant.astype(jnp.float32)
-        sampf = sampled.astype(jnp.float32)
-        mean_cover = leaf_sum / jnp.maximum(leaf_cnt, 1.0)
-        mean_samp = s_sum / jnp.maximum(k_pred, 1.0)
-        mean_i = jnp.where(cover_like, mean_cover, mean_samp)
-        kp = jnp.maximum(k_pred, 1.0)
-
-        if avg_mode == "stratum":
-            # Paper-literal §2.2 weights: w_i = N_i / N_q over relevant strata.
-            Nq = jnp.maximum(jnp.sum(relf * Ni, axis=1, keepdims=True), 1.0)
-            w = relf * Ni / Nq                           # (Q,k)
-            est = jnp.sum(w * mean_i * relf, axis=1)
-            e_phi2 = (Ki / kp) ** 2 * (s_sumsq / Ki)
-            var_phi = jnp.maximum(e_phi2 - mean_samp ** 2, 0.0)
-            v_i = var_phi / Ki * fpc
-            ci = lam * jnp.sqrt(jnp.sum(sampf * (w ** 2) * v_i, axis=1))
-        else:
-            # Ratio estimator: AVG = est-SUM / est-COUNT, with the §2.2
-            # w_i = N̂_{i,q}/N̂_q weighting (exact counts on covered strata).
-            s_hat_i = jnp.where(cover_like, leaf_sum, Ni / Ki * s_sum) * relf
-            c_hat_i = jnp.where(cover_like, leaf_cnt, Ni / Ki * k_pred) * relf
-            S = jnp.sum(s_hat_i, axis=1)
-            C = jnp.maximum(jnp.sum(c_hat_i, axis=1), 1.0)
-            est = S / C
-            p = k_pred / Ki
-            var_s = Ni * Ni * jnp.maximum(s_sumsq / Ki - (s_sum / Ki) ** 2, 0.0) / Ki * fpc
-            var_c = Ni * Ni * jnp.maximum(p - p * p, 0.0) / Ki * fpc
-            cov_sc = Ni * Ni * (s_sum / Ki) * (1.0 - p) / Ki * fpc
-            VS = jnp.sum(sampf * var_s, axis=1)
-            VC = jnp.sum(sampf * var_c, axis=1)
-            CSC = jnp.sum(sampf * cov_sc, axis=1)
-            var_ratio = jnp.maximum(VS - 2 * est * CSC + est * est * VC, 0.0) / (C * C)
-            ci = lam * jnp.sqrt(var_ratio)
-
-        # Hard bounds (§2.3): any relevant stratum counts.
-        if use_aggregates:
-            has_cover = jnp.any(cover_like, axis=1)
-            c_sum = jnp.sum(cover_like.astype(jnp.float32) * leaf_sum, axis=1)
-            c_cnt = jnp.sum(cover_like.astype(jnp.float32) * leaf_cnt, axis=1)
-            avg_cover = c_sum / jnp.maximum(c_cnt, 1.0)
-            p_any = jnp.any(partial_m & ~cover_like, axis=1)
-            pmax = jnp.max(jnp.where(partial_m & ~cover_like, leaf_max, -_BIG), axis=1)
-            pmin = jnp.min(jnp.where(partial_m & ~cover_like, leaf_min, _BIG), axis=1)
-            upper = jnp.where(has_cover & p_any, jnp.maximum(avg_cover, pmax),
-                              jnp.where(has_cover, avg_cover, pmax))
-            lower = jnp.where(has_cover & p_any, jnp.minimum(avg_cover, pmin),
-                              jnp.where(has_cover, avg_cover, pmin))
-        else:
-            lower = jnp.full_like(est, -_BIG)
-            upper = jnp.full_like(est, _BIG)
-        return QueryResult(est, ci, lower, upper, touched)
-
-    if kind in ("min", "max"):
-        sign = 1.0 if kind == "min" else -1.0
-        key_leaf = leaf_min if kind == "min" else leaf_max
-        # Relevant-sample extreme per stratum.
-        inside = (jnp.all(queries.lo[:, None, None, :] <= syn.sample_c[None], axis=-1)
-                  & jnp.all(syn.sample_c[None] <= queries.hi[:, None, None, :], axis=-1)
-                  & syn.sample_valid[None])
-        a = syn.sample_a.astype(jnp.float32)[None]
-        samp_ext = jnp.min(jnp.where(inside, sign * a, _BIG), axis=-1)  # (Q,k)
-        cover_ext = jnp.where(cover, sign * key_leaf, _BIG)
-        part_samp_ext = jnp.where(partial_m, samp_ext, _BIG)
-        est_s = jnp.minimum(jnp.min(cover_ext, axis=1),
-                            jnp.min(part_samp_ext, axis=1))
-        # Bounds: the true extreme lies between the optimistic leaf extreme
-        # over all relevant strata and the observed estimate.
-        opt = jnp.min(jnp.where(cover | partial_m, sign * key_leaf, _BIG), axis=1)
-        est = sign * est_s
-        lower = jnp.where(sign > 0, sign * opt, sign * est_s)
-        upper = jnp.where(sign > 0, sign * est_s, sign * opt)
-        ci = jnp.abs(upper - lower) * 0.5  # deterministic envelope, not CLT
-        return QueryResult(est, ci, lower, upper, touched)
-
-    raise ValueError(f"unknown kind: {kind}")
+def _partial_mask(syn: Synopsis, queries: QueryBatch) -> jnp.ndarray:
+    from ..engine import planner
+    rel = planner.relation_masks(syn, queries)
+    return (rel == REL_PARTIAL).astype(jnp.float32)
 
 
 def ess(syn: Synopsis, queries: QueryBatch) -> jnp.ndarray:
     """Effective-sampling-size numerator: samples processed per query
     (paper §5.1.4) = sum of stratum sample counts over partial leaves."""
-    rel = classify_leaves(syn.leaf_lo, syn.leaf_hi, queries.lo, queries.hi)
-    partf = (rel == REL_PARTIAL).astype(jnp.float32)
+    partf = _partial_mask(syn, queries)
     return jnp.sum(partf * syn.k_per_leaf.astype(jnp.float32)[None], axis=1)
 
 
 def skip_rate(syn: Synopsis, queries: QueryBatch) -> jnp.ndarray:
-    """Fraction of tuples safely skipped (paper §5.1.2)."""
-    rel = classify_leaves(syn.leaf_lo, syn.leaf_hi, queries.lo, queries.hi)
-    partf = (rel == REL_PARTIAL).astype(jnp.float32)
+    """Fraction of tuples safely skipped (paper §5.1.2). Shares one cached
+    classification with ``ess`` for the same (synopsis, batch) objects."""
+    partf = _partial_mask(syn, queries)
     return 1.0 - jnp.sum(partf * syn.n_rows.astype(jnp.float32)[None], axis=1) \
         / max(syn.total_rows, 1)
 

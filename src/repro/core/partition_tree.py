@@ -101,17 +101,19 @@ def build_tree_from_leaves(leaf_agg: np.ndarray, leaf_lo: np.ndarray,
     agg[K - 1:] = agg_pad
     lo[K - 1:] = lo_pad
     hi[K - 1:] = hi_pad
-    leaf_id[K - 1:] = np.arange(K, dtype=np.int32)
+    # Real leaves get ids 0..k-1; padded empty slots get -1 so downstream
+    # consumers can never index past the k true strata.
+    ids = np.arange(K, dtype=np.int32)
+    ids[k:] = -1
+    leaf_id[K - 1:] = ids
     for v in range(K - 2, -1, -1):
         l, r = 2 * v + 1, 2 * v + 2
         left[v], right[v] = l, r
         agg[v] = combine_aggs(agg[l][None], agg[r][None])[0]
         lo[v] = np.minimum(lo[l], lo[r])
         hi[v] = np.maximum(hi[l], hi[r])
-    depth = int(np.log2(K))
     for v in range(num_nodes):
         level[v] = int(np.floor(np.log2(v + 1)))
-    _ = depth
     return PartitionTree(lo=lo, hi=hi, agg=agg, left=left, right=right,
                          leaf_id=leaf_id, level=level)
 

@@ -1,7 +1,8 @@
 """Public query API, ground truth, and workload generators (paper §5.1).
 
 `answer` is the user-facing entry: classify + estimate + CI + hard bounds
-through the jit'd vectorized engine (estimators.py). `ground_truth` computes
+through the layered engine (repro.engine; estimators.py remains the
+single-kind shim). `ground_truth` computes
 exact answers with chunked host scans for benchmark scoring. Workload
 generators reproduce the paper's query distributions: random rectangles
 anchored on data values (§5.1.2) and "challenging" queries drawn from the
@@ -12,18 +13,31 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from . import estimators
 from .types import Synopsis, QueryBatch, QueryResult
 
 
 def answer(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
            lam: float = 2.576, use_fpc: bool = True,
            zero_var_rule: bool = True, use_aggregates: bool = True,
-           avg_mode: str = "ratio") -> QueryResult:
-    return estimators.estimate(syn, queries, kind=kind, lam=lam,
-                               use_fpc=use_fpc, zero_var_rule=zero_var_rule,
-                               use_aggregates=use_aggregates,
-                               avg_mode=avg_mode)
+           avg_mode: str = "ratio", kinds=None, backend: str | None = None,
+           plan=None):
+    """Single-kind compatibility entry over the layered engine.
+
+    Pass ``kinds=(...)`` to answer several aggregate kinds from one shared
+    classification + moment pass; the result is then a ``{kind:
+    QueryResult}`` dict (see ``repro.engine.answer``). ``backend`` selects a
+    registered kernel backend per call; ``plan`` injects a planner
+    ``QueryPlan``.
+    """
+    from .. import engine
+    multi = kinds is not None
+    if not multi:
+        kinds = (kind,)
+    out = engine.answer(syn, queries, kinds=kinds, lam=lam, use_fpc=use_fpc,
+                        zero_var_rule=zero_var_rule,
+                        use_aggregates=use_aggregates, avg_mode=avg_mode,
+                        backend=backend, plan=plan)
+    return out if multi else out[kind]
 
 
 # --------------------------------------------------------------------------

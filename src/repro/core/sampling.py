@@ -15,13 +15,16 @@ def uniform_sample(c: np.ndarray, a: np.ndarray, size: int, seed: int = 0
 
 
 def stratified_sample(c: np.ndarray, a: np.ndarray, assign: np.ndarray,
-                      k: int, s_per_leaf: int, seed: int = 0
+                      k: int, s_per_leaf, seed: int = 0
                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Per-leaf uniform samples (the strata of §3.2), padded to fixed shape.
 
-    Returns (sample_c (k, s, d), sample_a (k, s), valid (k, s) bool,
-    k_per_leaf (k,) int32). Strata smaller than ``s_per_leaf`` are fully
-    sampled (their estimates become exact under the FPC correction).
+    ``s_per_leaf`` is either a scalar (every stratum gets the same budget)
+    or a (k,) integer array of true per-stratum budgets (proportional
+    allocation); arrays are padded to the max budget and masked by
+    ``valid``. Returns (sample_c (k, s, d), sample_a (k, s), valid (k, s)
+    bool, k_per_leaf (k,) int32). Strata smaller than their budget are
+    fully sampled (their estimates become exact under the FPC correction).
     """
     c = np.asarray(c, dtype=np.float64)
     if c.ndim == 1:
@@ -29,10 +32,13 @@ def stratified_sample(c: np.ndarray, a: np.ndarray, assign: np.ndarray,
     a = np.asarray(a, dtype=np.float64).reshape(-1)
     assign = np.asarray(assign, dtype=np.int64)
     d = c.shape[1]
+    per_leaf = np.broadcast_to(np.asarray(s_per_leaf, dtype=np.int64),
+                               (k,)).copy()
+    s_pad = max(1, int(per_leaf.max()) if per_leaf.size else 1)
     rng = np.random.default_rng(seed)
-    sample_c = np.zeros((k, s_per_leaf, d), dtype=np.float64)
-    sample_a = np.zeros((k, s_per_leaf), dtype=np.float64)
-    valid = np.zeros((k, s_per_leaf), dtype=bool)
+    sample_c = np.zeros((k, s_pad, d), dtype=np.float64)
+    sample_a = np.zeros((k, s_pad), dtype=np.float64)
+    valid = np.zeros((k, s_pad), dtype=bool)
     k_per_leaf = np.zeros(k, dtype=np.int32)
     order = np.argsort(assign, kind="stable")
     sorted_assign = assign[order]
@@ -40,9 +46,9 @@ def stratified_sample(c: np.ndarray, a: np.ndarray, assign: np.ndarray,
     ends = np.searchsorted(sorted_assign, np.arange(k), side="right")
     for i in range(k):
         rows = order[starts[i]:ends[i]]
-        if rows.size == 0:
+        if rows.size == 0 or per_leaf[i] <= 0:
             continue
-        take = min(s_per_leaf, rows.size)
+        take = min(int(per_leaf[i]), rows.size)
         sel = rng.choice(rows, size=take, replace=False)
         sample_c[i, :take] = c[sel]
         sample_a[i, :take] = a[sel]
@@ -54,12 +60,47 @@ def stratified_sample(c: np.ndarray, a: np.ndarray, assign: np.ndarray,
 def proportional_allocation(n_rows: np.ndarray, total_budget: int,
                             min_per_leaf: int = 4) -> np.ndarray:
     """Sample-budget split across strata proportional to stratum size
-    (Neyman allocation with uniform variance assumption)."""
+    (Neyman allocation with uniform variance assumption).
+
+    The returned (k,) allocation always satisfies ``alloc <= n_rows``
+    per stratum and ``alloc.sum() <= total_budget`` overall; the
+    ``min_per_leaf`` floor is honored only while the budget allows it
+    (largest-remainder rounding distributes the rest).
+    """
     n_rows = np.asarray(n_rows, dtype=np.float64)
-    total = max(n_rows.sum(), 1.0)
-    alloc = np.maximum(np.round(total_budget * n_rows / total), min_per_leaf)
-    alloc = np.minimum(alloc, np.maximum(n_rows, 0))
-    return alloc.astype(np.int64)
+    cap = np.maximum(n_rows, 0).astype(np.int64)
+    budget = int(total_budget)
+    alloc = np.zeros(cap.shape[0], dtype=np.int64)
+    floors = np.minimum(min_per_leaf, cap)
+    if floors.sum() <= budget:
+        alloc = floors.copy()
+    else:
+        # Budget can't honor the floor everywhere: seed the largest strata.
+        for i in np.argsort(-n_rows, kind="stable"):
+            if budget - alloc.sum() <= 0:
+                break
+            alloc[i] = min(cap[i], 1)
+    rem = budget - int(alloc.sum())
+    while rem > 0:
+        headroom = cap - alloc
+        w = np.where(headroom > 0, np.maximum(n_rows, 0), 0.0)
+        if w.sum() <= 0:
+            break
+        share = rem * w / w.sum()
+        extra = np.minimum(np.floor(share).astype(np.int64), headroom)
+        if extra.sum() == 0:
+            # Hand out the last units by largest fractional share.
+            for i in np.argsort(-share, kind="stable"):
+                if rem <= 0:
+                    break
+                if alloc[i] < cap[i]:
+                    alloc[i] += 1
+                    rem -= 1
+            break
+        alloc += extra
+        rem -= int(extra.sum())
+    assert alloc.sum() <= total_budget
+    return alloc
 
 
 class ReservoirStratum:

@@ -82,13 +82,15 @@ def build_synopsis(c, a, *, k: int = 64, sample_budget: int | None = None,
     t2 = time.perf_counter()
 
     if allocation == "proportional":
-        per_leaf = sampling.proportional_allocation(agg[:, AGG_COUNT],
-                                                    sample_budget)
-        s_per_leaf = int(per_leaf.max()) if per_leaf.size else 1
+        s_per_leaf = sampling.proportional_allocation(agg[:, AGG_COUNT],
+                                                      sample_budget)
     else:
         s_per_leaf = max(1, sample_budget // max(k, 1))
     sample_c, sample_a, valid, k_per_leaf = sampling.stratified_sample(
         c2, a, assign, k, s_per_leaf, seed=seed + 1)
+    if allocation == "proportional":
+        assert int(k_per_leaf.sum()) <= sample_budget, \
+            (int(k_per_leaf.sum()), sample_budget)
     t3 = time.perf_counter()
 
     syn = Synopsis(

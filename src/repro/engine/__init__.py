@@ -1,0 +1,21 @@
+"""Layered PASS query engine: plan -> execute -> assemble (DESIGN.md §3-§4).
+
+* :mod:`planner`  — Minimal Coverage Frontier over internal tree nodes,
+  batched level-synchronously over the query batch.
+* :mod:`executor` — shared per-batch artifacts (relation masks, exact
+  frontier aggregates, stratified moments) computed once per batch through
+  the kernel-backend registry.
+* :mod:`assemble` — every requested aggregate kind derived from the shared
+  artifacts: ``answer(syn, queries, kinds=("sum", "count", "avg"))``.
+
+``core.estimators`` remains a thin compatibility shim over this package.
+"""
+from .planner import QueryPlan, plan_queries, relation_masks
+from .executor import Artifacts, artifacts, compute_artifacts, OP_COUNTS, \
+    reset_op_counts
+from .assemble import answer, assemble, KINDS
+
+__all__ = ["QueryPlan", "plan_queries", "relation_masks",
+           "Artifacts", "artifacts", "compute_artifacts",
+           "OP_COUNTS", "reset_op_counts",
+           "answer", "assemble", "KINDS"]

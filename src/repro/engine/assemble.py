@@ -1,0 +1,229 @@
+"""Answer assembly: derive every requested aggregate kind from the shared
+executor artifacts (paper §2.2, §2.3, §3.3, §3.4; DESIGN.md §3).
+
+Estimator semantics follow the paper exactly:
+  * SUM/COUNT: per-stratum Horvitz-Thompson scaling (phi of §2.1), with the
+    exact part read from the executor's covered-aggregate accumulation.
+  * AVG: stratum means weighted by w_i = N_i / N_q over relevant strata
+    (§2.2), where a partial stratum is relevant iff it has >= 1 relevant
+    sampled tuple; 'ratio' mode answers AVG as est-SUM / est-COUNT with a
+    delta-method CI.
+  * CLT confidence intervals with the finite-population correction
+    (§2.1.1 footnote 1).
+  * Deterministic hard bounds from SUM/COUNT/MIN/MAX (§2.3) — generalized to
+    possibly-negative values (DESIGN.md §3; equals the paper's bounds when
+    all values are positive).
+  * 0-variance rule for AVG (§3.4): partial strata with MIN == MAX behave as
+    covered.
+
+`answer` is the serving entry point: one classification + one moment pass
+answers the whole ``kinds`` tuple, so a 3-aggregate request costs one
+artifact stage instead of three.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import (Synopsis, QueryBatch, QueryResult,
+                          AGG_SUM, AGG_COUNT, AGG_MIN, AGG_MAX)
+from . import executor as _executor
+from .executor import Artifacts
+
+_BIG = jnp.float32(3.4e38)
+
+KINDS = ("sum", "count", "avg", "min", "max")
+
+
+def _fpc(n_rows, k_leaf):
+    """Finite population correction (N-K)/(N-1), clamped to [0, 1]."""
+    n = jnp.maximum(n_rows, 1.0)
+    return jnp.clip((n - k_leaf) / jnp.maximum(n - 1.0, 1.0), 0.0, 1.0)
+
+
+def assemble(syn: Synopsis, art: Artifacts, kind: str = "sum",
+             lam: float = 2.576, use_fpc: bool = True,
+             zero_var_rule: bool = True, use_aggregates: bool = True,
+             avg_mode: str = "ratio") -> QueryResult:
+    """Derive one aggregate kind's QueryResult from shared artifacts."""
+    leaf_agg = syn.leaf_agg.astype(jnp.float32)
+    n_rows = syn.n_rows.astype(jnp.float32)           # (k,)
+    k_leaf = syn.k_per_leaf.astype(jnp.float32)       # (k,)
+    cover = art.cover
+    partial_m = art.partial
+    k_pred, s_sum, s_sumsq = art.k_pred, art.s_sum, art.s_sumsq
+
+    leaf_sum = leaf_agg[:, AGG_SUM][None]              # (1,k)
+    leaf_cnt = leaf_agg[:, AGG_COUNT][None]
+    leaf_min = leaf_agg[:, AGG_MIN][None]
+    leaf_max = leaf_agg[:, AGG_MAX][None]
+    Ni = n_rows[None]
+    Ki = jnp.maximum(k_leaf[None], 1.0)
+    fpc = _fpc(Ni, k_leaf[None]) if use_fpc else jnp.ones_like(Ni)
+
+    partf = partial_m.astype(jnp.float32)
+    touched = art.touched
+
+    if kind in ("sum", "count"):
+        if kind == "sum":
+            exact = art.exact[:, AGG_SUM]
+            est_part = Ni / Ki * s_sum
+            mean_phi = s_sum / Ki                       # E[pred*a]
+            mean_phi2 = s_sumsq / Ki                    # E[pred*a^2]
+        else:
+            exact = art.exact[:, AGG_COUNT]
+            est_part = Ni / Ki * k_pred
+            mean_phi = k_pred / Ki
+            mean_phi2 = k_pred / Ki
+        est = exact + jnp.sum(partf * est_part, axis=1)
+        var_phi = Ni * Ni * jnp.maximum(mean_phi2 - mean_phi ** 2, 0.0)
+        v_i = var_phi / Ki * fpc
+        ci = lam * jnp.sqrt(jnp.sum(partf * v_i, axis=1))
+        # Hard bounds (§2.3, sign-generalized).
+        if kind == "sum":
+            p_ub = jnp.minimum(Ni * jnp.maximum(leaf_max, 0.0),
+                               leaf_sum - Ni * jnp.minimum(leaf_min, 0.0))
+            p_lb = jnp.maximum(Ni * jnp.minimum(leaf_min, 0.0),
+                               leaf_sum - Ni * jnp.maximum(leaf_max, 0.0))
+        else:
+            p_ub = leaf_cnt
+            p_lb = jnp.zeros_like(leaf_cnt)
+        if use_aggregates:
+            lower = exact + jnp.sum(partf * p_lb, axis=1)
+            upper = exact + jnp.sum(partf * p_ub, axis=1)
+        else:
+            lower = jnp.full_like(est, -_BIG)
+            upper = jnp.full_like(est, _BIG)
+        return QueryResult(est, ci, lower, upper, touched)
+
+    if kind == "avg":
+        zv = (leaf_min == leaf_max) & (leaf_cnt > 0)
+        # 0-variance rule (§3.4): only sound with whole-stratum weighting —
+        # the ratio path already credits zv strata with zero value-variance.
+        promote_zv = zero_var_rule and avg_mode == "stratum"
+        cover_like = cover | (partial_m & zv) if promote_zv else cover
+        sampled = partial_m & ~cover_like & (k_pred >= 1.0)
+        relevant = cover_like | sampled
+        relf = relevant.astype(jnp.float32)
+        sampf = sampled.astype(jnp.float32)
+        mean_cover = leaf_sum / jnp.maximum(leaf_cnt, 1.0)
+        mean_samp = s_sum / jnp.maximum(k_pred, 1.0)
+        mean_i = jnp.where(cover_like, mean_cover, mean_samp)
+        kp = jnp.maximum(k_pred, 1.0)
+
+        if avg_mode == "stratum":
+            # Paper-literal §2.2 weights: w_i = N_i / N_q over relevant strata.
+            Nq = jnp.maximum(jnp.sum(relf * Ni, axis=1, keepdims=True), 1.0)
+            w = relf * Ni / Nq                           # (Q,k)
+            est = jnp.sum(w * mean_i * relf, axis=1)
+            e_phi2 = (Ki / kp) ** 2 * (s_sumsq / Ki)
+            var_phi = jnp.maximum(e_phi2 - mean_samp ** 2, 0.0)
+            v_i = var_phi / Ki * fpc
+            ci = lam * jnp.sqrt(jnp.sum(sampf * (w ** 2) * v_i, axis=1))
+        else:
+            # Ratio estimator: AVG = est-SUM / est-COUNT, with the §2.2
+            # w_i = N̂_{i,q}/N̂_q weighting (exact counts on covered strata).
+            s_hat_i = jnp.where(cover_like, leaf_sum, Ni / Ki * s_sum) * relf
+            c_hat_i = jnp.where(cover_like, leaf_cnt, Ni / Ki * k_pred) * relf
+            S = jnp.sum(s_hat_i, axis=1)
+            C = jnp.maximum(jnp.sum(c_hat_i, axis=1), 1.0)
+            est = S / C
+            p = k_pred / Ki
+            var_s = Ni * Ni * jnp.maximum(s_sumsq / Ki - (s_sum / Ki) ** 2, 0.0) / Ki * fpc
+            var_c = Ni * Ni * jnp.maximum(p - p * p, 0.0) / Ki * fpc
+            cov_sc = Ni * Ni * (s_sum / Ki) * (1.0 - p) / Ki * fpc
+            VS = jnp.sum(sampf * var_s, axis=1)
+            VC = jnp.sum(sampf * var_c, axis=1)
+            CSC = jnp.sum(sampf * cov_sc, axis=1)
+            var_ratio = jnp.maximum(VS - 2 * est * CSC + est * est * VC, 0.0) / (C * C)
+            ci = lam * jnp.sqrt(var_ratio)
+
+        # Hard bounds (§2.3): any relevant stratum counts.
+        if use_aggregates:
+            has_cover = jnp.any(cover_like, axis=1)
+            c_sum = jnp.sum(cover_like.astype(jnp.float32) * leaf_sum, axis=1)
+            c_cnt = jnp.sum(cover_like.astype(jnp.float32) * leaf_cnt, axis=1)
+            avg_cover = c_sum / jnp.maximum(c_cnt, 1.0)
+            p_any = jnp.any(partial_m & ~cover_like, axis=1)
+            pmax = jnp.max(jnp.where(partial_m & ~cover_like, leaf_max, -_BIG), axis=1)
+            pmin = jnp.min(jnp.where(partial_m & ~cover_like, leaf_min, _BIG), axis=1)
+            upper = jnp.where(has_cover & p_any, jnp.maximum(avg_cover, pmax),
+                              jnp.where(has_cover, avg_cover, pmax))
+            lower = jnp.where(has_cover & p_any, jnp.minimum(avg_cover, pmin),
+                              jnp.where(has_cover, avg_cover, pmin))
+        else:
+            lower = jnp.full_like(est, -_BIG)
+            upper = jnp.full_like(est, _BIG)
+        return QueryResult(est, ci, lower, upper, touched)
+
+    if kind in ("min", "max"):
+        sign = 1.0 if kind == "min" else -1.0
+        key_leaf = leaf_min if kind == "min" else leaf_max
+        # Relevant-sample extreme per stratum (from the shared extreme pass).
+        samp_ext = art.samp_min if kind == "min" else -art.samp_max
+        cover_ext = jnp.where(cover, sign * key_leaf, _BIG)
+        part_samp_ext = jnp.where(partial_m, samp_ext, _BIG)
+        est_s = jnp.minimum(jnp.min(cover_ext, axis=1),
+                            jnp.min(part_samp_ext, axis=1))
+        # Bounds: the true extreme lies between the optimistic leaf extreme
+        # over all relevant strata and the observed estimate.
+        opt = jnp.min(jnp.where(cover | partial_m, sign * key_leaf, _BIG), axis=1)
+        est = sign * est_s
+        lower = jnp.where(sign > 0, sign * opt, sign * est_s)
+        upper = jnp.where(sign > 0, sign * est_s, sign * opt)
+        ci = jnp.abs(upper - lower) * 0.5  # deterministic envelope, not CLT
+        return QueryResult(est, ci, lower, upper, touched)
+
+    raise ValueError(f"unknown kind: {kind}")
+
+
+_assemble_jit = jax.jit(assemble, static_argnames=(
+    "kind", "use_fpc", "zero_var_rule", "use_aggregates", "avg_mode"))
+
+
+@partial(jax.jit, static_argnames=("kinds", "use_fpc", "zero_var_rule",
+                                   "use_aggregates", "avg_mode",
+                                   "backend_name"))
+def _answer_jit(syn, queries, lam, plan_masks, kinds, use_fpc,
+                zero_var_rule, use_aggregates, avg_mode, backend_name):
+    """One compiled program per (kinds, flags): a single artifact stage
+    feeding every requested kind's epilogue."""
+    art = _executor.compute_artifacts(syn, queries, kinds,
+                                      use_aggregates=use_aggregates,
+                                      backend_name=backend_name,
+                                      plan_masks=plan_masks)
+    return {k: assemble(syn, art, k, lam, use_fpc, zero_var_rule,
+                        use_aggregates, avg_mode)
+            for k in kinds}
+
+
+def answer(syn: Synopsis, queries: QueryBatch, kinds=("sum",), *,
+           lam: float = 2.576, use_fpc: bool = True,
+           zero_var_rule: bool = True, use_aggregates: bool = True,
+           avg_mode: str = "ratio", backend: str | None = None,
+           plan=None) -> dict[str, QueryResult]:
+    """Answer a batch of rectangular aggregate queries for every requested
+    aggregate kind from one shared artifact pass.
+
+    Returns ``{kind: QueryResult}``. ``backend`` picks a registered kernel
+    backend per call; ``plan`` substitutes a planner QueryPlan's frontier for
+    the batched leaf classification. ``use_aggregates=False`` disables the
+    exact-cover shortcut and deterministic bounds (the ST/US baselines).
+    """
+    if isinstance(kinds, str):
+        kinds = (kinds,)
+    kinds = tuple(kinds)
+    for k in kinds:
+        if k not in KINDS:
+            raise ValueError(f"unknown kind: {k}")
+    _executor.count_artifact_pass(kinds)
+    plan_masks = _executor.plan_to_masks(plan)
+    from ..kernels.registry import get_backend
+    return _answer_jit(syn, queries, lam, plan_masks, kinds, use_fpc,
+                       zero_var_rule, use_aggregates, avg_mode,
+                       get_backend(backend).name)
+
+
+__all__ = ["assemble", "answer", "KINDS"]

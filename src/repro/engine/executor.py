@@ -1,0 +1,165 @@
+"""Query executor: computes the shared per-batch artifacts exactly once
+(DESIGN.md §3).
+
+One ``Artifacts`` bundle answers *every* aggregate kind: the leaf relation
+masks and the exact covered-aggregate accumulation come from a single
+``query_eval`` backend call (the Pallas kernel's MXU matmul output is
+consumed here instead of being discarded), the stratified sample moments
+from a single ``stratified_moments`` call, and the relevant-sample extremes
+(only needed for MIN/MAX) from a single pass. The assembler then derives
+each requested kind's estimate/CI/bounds from these artifacts without
+touching the samples again.
+
+``OP_COUNTS`` tracks *executions* of each artifact stage (incremented in
+the eager wrapper around the jit'd stage), so tests can assert that a
+3-kind ``answer()`` performs one classification + one moment pass where a
+loop of legacy ``estimate()`` calls performs three.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import (Synopsis, QueryBatch, NUM_AGGS,
+                          REL_PARTIAL, REL_COVER)
+from ..kernels.registry import get_backend
+
+# Execution counters for the artifact stages (see module docstring).
+OP_COUNTS = {"classify": 0, "moments": 0, "extremes": 0}
+
+
+def reset_op_counts():
+    for key in OP_COUNTS:
+        OP_COUNTS[key] = 0
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["rel", "cover", "partial", "exact",
+                      "k_pred", "s_sum", "s_sumsq", "samp_min", "samp_max",
+                      "touched"],
+         meta_fields=[])
+@dataclasses.dataclass
+class Artifacts:
+    """Shared per-(query batch) artifacts; every field is (Q, ...)-shaped.
+
+    ``exact`` is the covered-leaf aggregate accumulation (Q, NUM_AGGS) —
+    its SUM/SUMSQ/COUNT columns are the exact part of the answer (MIN/MAX
+    columns are matmul sums and not meaningful). Moment fields are None when
+    no sampled kind was requested; extreme fields are None unless MIN/MAX
+    was requested.
+    """
+    rel: jax.Array                 # (Q, k) int32
+    cover: jax.Array               # (Q, k) bool
+    partial: jax.Array             # (Q, k) bool
+    exact: jax.Array               # (Q, NUM_AGGS) f32
+    k_pred: jax.Array | None       # (Q, k) f32
+    s_sum: jax.Array | None        # (Q, k) f32
+    s_sumsq: jax.Array | None      # (Q, k) f32
+    samp_min: jax.Array | None     # (Q, k) f32
+    samp_max: jax.Array | None     # (Q, k) f32
+    touched: jax.Array             # (Q,) f32 fraction of rows not skipped
+
+
+def _needs_moments(kinds) -> bool:
+    return any(k in ("sum", "count", "avg") for k in kinds)
+
+
+def _needs_extremes(kinds) -> bool:
+    return any(k in ("min", "max") for k in kinds)
+
+
+def compute_artifacts(syn: Synopsis, queries: QueryBatch, kinds,
+                      use_aggregates: bool = True,
+                      backend_name: str | None = None,
+                      plan_masks=None) -> Artifacts:
+    """Traceable artifact computation (one classify + one moment pass).
+
+    ``plan_masks``: optional (cover_leaf_mask, partial_leaf_mask, exact_agg)
+    triple from a planner :class:`QueryPlan` — when given, the frontier
+    descent's classification replaces the batched leaf classification and
+    its internal-node exact aggregates replace the kernel accumulation.
+    """
+    be = get_backend(backend_name)
+    if plan_masks is not None:
+        cover, partial_m, exact = plan_masks
+        cover = jnp.asarray(cover)
+        partial_m = jnp.asarray(partial_m)
+        exact = jnp.asarray(exact, jnp.float32)
+        rel = jnp.where(cover, REL_COVER,
+                        jnp.where(partial_m, REL_PARTIAL, 0)).astype(jnp.int32)
+    else:
+        rel, exact = be.query_eval(syn.leaf_lo, syn.leaf_hi, syn.leaf_agg,
+                                   queries.lo, queries.hi)
+        exact = exact[:, :NUM_AGGS]
+        cover = (rel == REL_COVER)
+        partial_m = (rel == REL_PARTIAL)
+
+    if not use_aggregates:
+        # Classic stratified sampling (§2.2): every relevant stratum is
+        # estimated from its samples and the exact shortcut is disabled.
+        partial_m = cover | partial_m
+        cover = jnp.zeros_like(cover)
+        exact = jnp.zeros_like(exact)
+
+    n_rows = syn.n_rows.astype(jnp.float32)[None]            # (1, k)
+    touched = (jnp.sum(partial_m.astype(jnp.float32) * n_rows, axis=1)
+               / max(syn.total_rows, 1))
+
+    k_pred = s_sum = s_sumsq = None
+    if _needs_moments(kinds):
+        k_pred, s_sum, s_sumsq = be.stratified_moments(
+            syn.sample_c, syn.sample_a, syn.sample_valid,
+            queries.lo, queries.hi)
+    samp_min = samp_max = None
+    if _needs_extremes(kinds):
+        samp_min, samp_max = be.sample_extremes(
+            syn.sample_c, syn.sample_a, syn.sample_valid,
+            queries.lo, queries.hi)
+    return Artifacts(rel=rel, cover=cover, partial=partial_m, exact=exact,
+                     k_pred=k_pred, s_sum=s_sum, s_sumsq=s_sumsq,
+                     samp_min=samp_min, samp_max=samp_max, touched=touched)
+
+
+@partial(jax.jit, static_argnames=("kinds", "use_aggregates", "backend_name"))
+def _artifacts_jit(syn, queries, kinds, use_aggregates, backend_name,
+                   plan_masks):
+    return compute_artifacts(syn, queries, kinds,
+                             use_aggregates=use_aggregates,
+                             backend_name=backend_name, plan_masks=plan_masks)
+
+
+def count_artifact_pass(kinds) -> None:
+    """Record one execution of the artifact stage for ``kinds`` (one
+    classification, plus one moment/extreme pass when a kind needs it)."""
+    OP_COUNTS["classify"] += 1
+    if _needs_moments(kinds):
+        OP_COUNTS["moments"] += 1
+    if _needs_extremes(kinds):
+        OP_COUNTS["extremes"] += 1
+
+
+def plan_to_masks(plan):
+    """Convert a planner QueryPlan to the (cover, partial, exact) device
+    triple consumed by :func:`compute_artifacts`; None passes through."""
+    if plan is None:
+        return None
+    return (jnp.asarray(plan.cover_leaf_mask),
+            jnp.asarray(plan.partial_leaf_mask),
+            jnp.asarray(plan.exact_agg, jnp.float32))
+
+
+def artifacts(syn: Synopsis, queries: QueryBatch, kinds,
+              use_aggregates: bool = True, backend: str | None = None,
+              plan=None) -> Artifacts:
+    """Eager entry: one jit'd artifact-stage execution per call."""
+    kinds = tuple(kinds)
+    count_artifact_pass(kinds)
+    return _artifacts_jit(syn, queries, kinds, use_aggregates,
+                          get_backend(backend).name, plan_to_masks(plan))
+
+
+__all__ = ["Artifacts", "compute_artifacts", "artifacts", "plan_to_masks",
+           "count_artifact_pass", "OP_COUNTS", "reset_op_counts"]

@@ -1,0 +1,204 @@
+"""Query planner: the Minimal Coverage Frontier over internal tree nodes
+(paper §3.2 Algorithm 1, batched; DESIGN.md §3).
+
+The planner walks the aggregate tree with a *level-synchronous* descent that
+is vectorized over all Q queries at once: a frontier of live (query, node)
+pairs starts at the root, each level classifies every live pair against the
+node data bounding boxes in one numpy pass, covered pairs retire into the
+frontier (their exact aggregates are combined immediately from the internal
+node summaries — the O(gamma log B) exact path, no leaf expansion), disjoint
+pairs are pruned with their whole subtrees, and partial internal pairs fan
+out to their children. The visited-node set (and count) is exactly the one
+the paper's recursive Algorithm 1 touches — ``mcf_reference`` node-for-node,
+proved in tests/test_planner.py.
+
+The planner also owns the cached leaf relation masks used by the
+``ess``/``skip_rate`` telemetry (one classification per (synopsis, batch)
+pair instead of one per metric).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.types import (Synopsis, PartitionTree, QueryBatch, NUM_AGGS,
+                          AGG_SUM, AGG_SUMSQ, AGG_COUNT, AGG_MIN, AGG_MAX)
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """Result of the frontier descent for a batch of Q queries over a
+    k-leaf tree.
+
+    ``covered_nodes[q]`` / ``partial_leaves[q]`` are the MCF of query q:
+    covered *node* ids (internal or leaf) and partial *leaf* ids.
+    ``cover_leaf_mask`` / ``partial_leaf_mask`` are the (Q, k) leaf-level
+    expansions consumed by the executor; ``exact_agg`` is the (Q, NUM_AGGS)
+    mergeable-summary combine over each query's covered nodes (SUM/SUMSQ/
+    COUNT add, MIN/MAX combine). ``visited`` counts classified nodes per
+    query; ``frontier_size`` = |covered| + |partial|.
+    """
+    covered_nodes: list[np.ndarray]
+    partial_leaves: list[np.ndarray]
+    cover_leaf_mask: np.ndarray      # (Q, k) bool
+    partial_leaf_mask: np.ndarray    # (Q, k) bool
+    exact_agg: np.ndarray            # (Q, NUM_AGGS) f64
+    visited: np.ndarray              # (Q,) int64
+    frontier_size: np.ndarray        # (Q,) int64
+    num_leaves: int
+
+    @property
+    def num_queries(self) -> int:
+        return self.cover_leaf_mask.shape[0]
+
+
+def _subtree_leaf_ranges(left: np.ndarray, right: np.ndarray,
+                         leaf_id: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-node [first, last] leaf *slot* range (inclusive), bottom-up.
+
+    Leaves are ordered by slot in the trees ``build_tree_from_leaves``
+    produces, so every subtree spans a contiguous slot range. Slot i maps to
+    leaf id i (padded slots carry leaf_id -1 but still occupy their slot).
+    """
+    n = left.shape[0]
+    first = np.zeros(n, dtype=np.int64)
+    last = np.zeros(n, dtype=np.int64)
+    is_leaf = left < 0
+    # Leaf slots in node order: leaves appear left-to-right.
+    slots = np.cumsum(is_leaf) - 1
+    first[is_leaf] = slots[is_leaf]
+    last[is_leaf] = slots[is_leaf]
+    for v in range(n - 1, -1, -1):
+        if left[v] >= 0:
+            first[v] = first[left[v]]
+            last[v] = last[right[v]]
+    return first, last
+
+
+def plan_queries(tree: PartitionTree, q_lo, q_hi, num_leaves: int,
+                 zero_variance_rule: bool = False) -> QueryPlan:
+    """Batched MCF descent. q_lo/q_hi are (Q, d) arrays (any float dtype).
+
+    ``zero_variance_rule``: stop descending at partial nodes whose values
+    are constant (MIN == MAX, §3.4) — matches ``mcf_reference``'s flag, but
+    those nodes retire as *partial* (their leaves still answer from samples
+    unless the assembler promotes them).
+    """
+    lo = np.asarray(tree.lo, dtype=np.float64)
+    hi = np.asarray(tree.hi, dtype=np.float64)
+    agg = np.asarray(tree.agg, dtype=np.float64)
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    leaf_id = np.asarray(tree.leaf_id)
+    q_lo = np.asarray(q_lo, dtype=np.float64)
+    q_hi = np.asarray(q_hi, dtype=np.float64)
+    Q = q_lo.shape[0]
+    k = int(num_leaves)
+
+    first_slot, last_slot = _subtree_leaf_ranges(left, right, leaf_id)
+
+    cover_mask = np.zeros((Q, k), dtype=bool)
+    partial_mask = np.zeros((Q, k), dtype=bool)
+    exact = np.zeros((Q, NUM_AGGS), dtype=np.float64)
+    exact[:, AGG_MIN] = np.inf
+    exact[:, AGG_MAX] = -np.inf
+    visited = np.zeros(Q, dtype=np.int64)
+    covered_nodes: list[list[int]] = [[] for _ in range(Q)]
+    partial_leaves: list[list[int]] = [[] for _ in range(Q)]
+
+    qi = np.arange(Q, dtype=np.int64)          # live pair: query index
+    node = np.zeros(Q, dtype=np.int64)         # live pair: node id
+    while qi.size:
+        visited += np.bincount(qi, minlength=Q)
+        nlo, nhi = lo[node], hi[node]          # (M, d)
+        ql, qh = q_lo[qi], q_hi[qi]
+        nonempty = np.all(nlo <= nhi, axis=-1)
+        disjoint = (np.any(qh < nlo, axis=-1) | np.any(ql > nhi, axis=-1)
+                    | ~nonempty)
+        cover = (np.all(ql <= nlo, axis=-1) & np.all(nhi <= qh, axis=-1)
+                 & nonempty & ~disjoint)
+        partial = ~cover & ~disjoint
+        is_leaf = left[node] < 0
+        if zero_variance_rule:
+            zv = ((agg[node, AGG_MIN] == agg[node, AGG_MAX])
+                  & (agg[node, AGG_COUNT] > 0))
+            stop_partial = partial & (is_leaf | zv)
+        else:
+            stop_partial = partial & is_leaf
+
+        for m in np.nonzero(cover)[0]:
+            q, v = int(qi[m]), int(node[m])
+            covered_nodes[q].append(v)
+            a, b = first_slot[v], last_slot[v]
+            cover_mask[q, a:min(b + 1, k)] = True
+            exact[q, AGG_SUM] += agg[v, AGG_SUM]
+            exact[q, AGG_SUMSQ] += agg[v, AGG_SUMSQ]
+            exact[q, AGG_COUNT] += agg[v, AGG_COUNT]
+            exact[q, AGG_MIN] = min(exact[q, AGG_MIN], agg[v, AGG_MIN])
+            exact[q, AGG_MAX] = max(exact[q, AGG_MAX], agg[v, AGG_MAX])
+        for m in np.nonzero(stop_partial)[0]:
+            q, v = int(qi[m]), int(node[m])
+            if leaf_id[v] >= 0:                 # a real leaf stratum
+                partial_leaves[q].append(int(leaf_id[v]))
+                partial_mask[q, leaf_id[v]] = True
+            else:                # zv-stopped internal node: expand to leaves
+                a, b = first_slot[v], last_slot[v]
+                for s in range(a, min(b + 1, k)):
+                    partial_leaves[q].append(s)
+                    partial_mask[q, s] = True
+
+        expand = partial & ~stop_partial
+        qi_next = np.concatenate([qi[expand], qi[expand]])
+        node_next = np.concatenate([left[node[expand]],
+                                    right[node[expand]]]).astype(np.int64)
+        qi, node = qi_next, node_next
+
+    return QueryPlan(
+        covered_nodes=[np.asarray(sorted(v), dtype=np.int64)
+                       for v in covered_nodes],
+        partial_leaves=[np.asarray(sorted(v), dtype=np.int64)
+                        for v in partial_leaves],
+        cover_leaf_mask=cover_mask, partial_leaf_mask=partial_mask,
+        exact_agg=exact, visited=visited,
+        frontier_size=np.asarray([len(covered_nodes[q]) + len(partial_leaves[q])
+                                  for q in range(Q)], dtype=np.int64),
+        num_leaves=k)
+
+
+# --------------------------------------------------------------------------
+# Cached leaf relation masks (shared by ess / skip_rate telemetry)
+# --------------------------------------------------------------------------
+
+_REL_CACHE: list[tuple] = []
+_REL_CACHE_MAX = 8
+
+
+def relation_masks(syn: Synopsis, queries: QueryBatch,
+                   backend: str | None = None):
+    """(Q, k) int32 relation codes, cached by (synopsis, batch) identity.
+
+    Repeated telemetry calls on the same objects (ess then skip_rate) cost a
+    single classification. The cache holds strong references to its keys so
+    object ids cannot be recycled while an entry lives.
+    """
+    from . import executor
+    for syn_ref, q_ref, b_name, rel in _REL_CACHE:
+        if syn_ref is syn and q_ref is queries and b_name == backend:
+            return rel
+    from ..kernels.registry import get_backend
+    executor.OP_COUNTS["classify"] += 1
+    rel, _ = get_backend(backend).query_eval(
+        syn.leaf_lo, syn.leaf_hi, syn.leaf_agg, queries.lo, queries.hi)
+    _REL_CACHE.append((syn, queries, backend, rel))
+    if len(_REL_CACHE) > _REL_CACHE_MAX:
+        _REL_CACHE.pop(0)
+    return rel
+
+
+def clear_relation_cache():
+    _REL_CACHE.clear()
+
+
+__all__ = ["QueryPlan", "plan_queries", "relation_masks",
+           "clear_relation_cache"]

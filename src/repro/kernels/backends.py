@@ -1,0 +1,271 @@
+"""The three registered kernel backends: ``pallas`` | ``jnp`` | ``ref``.
+
+Each backend exposes the same user-shape API (DESIGN.md §4):
+
+* ``query_eval(leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi)``
+    -> (rel (Q, k) int32, exact (Q, A) f32)
+  classifies every leaf against every query AND accumulates the exact
+  covered-aggregate sums in the same pass (the MXU matmul of the Pallas
+  kernel; the engine consumes ``exact`` instead of recomputing it).
+* ``stratified_moments(sample_c, sample_a, sample_valid, q_lo, q_hi)``
+    -> (k_pred, s_sum, s_sumsq), each (Q, k) f32
+  per-(query, stratum) relevant-sample moments over the synopsis-shaped
+  (k, s, ·) sample arrays.
+* ``stratified_moments_flat(...)`` — the flattened (S, ·) calling
+  convention kept for the public ``ops.py`` wrappers.
+* ``segment_reduce(values, seg_ids, k)`` -> (k, 5) per-segment aggregates.
+* ``sample_extremes(...)`` -> per-(query, stratum) relevant-sample MIN/MAX
+  (shared broadcast implementation — no Pallas kernel exists for it yet).
+
+``pallas`` runs the TPU kernels (interpret mode off-TPU), ``ref`` runs the
+kernel-convention oracles of ``ref.py`` through the identical padding
+adapters, and ``jnp`` is the broadcast formulation that is fastest on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .registry import register_backend
+from .segment_reduce import segment_reduce as _segment_reduce_pallas
+from .stratified_estimate import stratified_moments as _strat_pallas
+from .query_eval import query_eval as _query_eval_pallas
+
+D_PAD = 8
+
+# Relation codes — must match core.types (kernels stay import-free of core).
+REL_NONE, REL_PARTIAL, REL_COVER = 0, 1, 2
+
+_BIG = jnp.float32(3.4e38)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jnp.ndarray, mult: int, axis: int, fill=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _transpose_coords(c: jnp.ndarray) -> jnp.ndarray:
+    """(N, d) -> (D_PAD, N) with padded dims filled so they never filter."""
+    c_t = jnp.swapaxes(c, 0, 1)
+    return _pad_axis(c_t, D_PAD, 0, fill=0.0)
+
+
+# --------------------------------------------------------------------------
+# Pure-jnp broadcast formulations (also the semantic references for the
+# kernels; re-exported by core.estimators for compatibility)
+# --------------------------------------------------------------------------
+
+def classify_leaves(leaf_lo, leaf_hi, q_lo, q_hi):
+    """(k,d) boxes vs (Q,d) rectangles -> (Q,k) int32 relation codes."""
+    nonempty = jnp.all(leaf_lo <= leaf_hi, axis=-1)          # (k,)
+    ql = q_lo[:, None, :]                                    # (Q,1,d)
+    qh = q_hi[:, None, :]
+    disjoint = (jnp.any(qh < leaf_lo[None], axis=-1)
+                | jnp.any(ql > leaf_hi[None], axis=-1)
+                | ~nonempty[None])
+    cover = (jnp.all(ql <= leaf_lo[None], axis=-1)
+             & jnp.all(leaf_hi[None] <= qh, axis=-1)
+             & nonempty[None])
+    return jnp.where(cover, REL_COVER,
+                     jnp.where(disjoint, REL_NONE, REL_PARTIAL)).astype(jnp.int32)
+
+
+def sample_moments(sample_c, sample_a, sample_valid, q_lo, q_hi):
+    """Per-(query, stratum) relevant-sample moments.
+
+    Returns (k_pred, s_sum, s_sumsq), each (Q, k) f32. Pure-jnp reference
+    semantics for the `stratified_estimate` Pallas kernel.
+    """
+    # pred: (Q, k, s)
+    inside = (jnp.all(q_lo[:, None, None, :] <= sample_c[None], axis=-1)
+              & jnp.all(sample_c[None] <= q_hi[:, None, None, :], axis=-1))
+    pred = (inside & sample_valid[None]).astype(jnp.float32)
+    a = sample_a.astype(jnp.float32)[None]
+    k_pred = jnp.sum(pred, axis=-1)
+    s_sum = jnp.sum(pred * a, axis=-1)
+    s_sumsq = jnp.sum(pred * a * a, axis=-1)
+    return k_pred, s_sum, s_sumsq
+
+
+def _flat_leaf_ids(sample_valid: jnp.ndarray) -> jnp.ndarray:
+    k, s = sample_valid.shape
+    return jnp.where(sample_valid.reshape(k * s),
+                     jnp.repeat(jnp.arange(k, dtype=jnp.int32), s), -1)
+
+
+# --------------------------------------------------------------------------
+# Backend classes
+# --------------------------------------------------------------------------
+
+class KernelBackend:
+    """Uniform op surface; subclasses fill in the hot paths."""
+
+    name = "base"
+
+    # -- classification + exact accumulation --------------------------------
+    def query_eval(self, leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi,
+                   bq: int = 128, bk: int = 128):
+        raise NotImplementedError
+
+    # -- stratified moments --------------------------------------------------
+    def stratified_moments(self, sample_c, sample_a, sample_valid,
+                           q_lo, q_hi, **kw):
+        k, s, d = sample_c.shape
+        mom = self.stratified_moments_flat(
+            sample_c.reshape(k * s, d), sample_a.reshape(k * s),
+            _flat_leaf_ids(sample_valid), q_lo, q_hi, k, **kw)
+        return mom[..., 0], mom[..., 1], mom[..., 2]
+
+    def stratified_moments_flat(self, sample_c, sample_a, sample_leaf,
+                                q_lo, q_hi, k: int, bq: int = 128,
+                                bk: int = 128, bs: int = 1024):
+        raise NotImplementedError
+
+    # -- segment reduction ---------------------------------------------------
+    def segment_reduce(self, values, seg_ids, k: int, bn: int = 2048,
+                       bk: int = 256):
+        v = _pad_axis(values.astype(jnp.float32), bn, 0)
+        ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
+        return _ref.segment_reduce_ref(v, ids, k)[:, :5]
+
+    # -- relevant-sample extremes (shared broadcast implementation) ----------
+    def sample_extremes(self, sample_c, sample_a, sample_valid, q_lo, q_hi):
+        """Per-(query, stratum) MIN/MAX over relevant samples; irrelevant
+        strata read +BIG / -BIG. Returns (samp_min, samp_max), each (Q, k)."""
+        inside = (jnp.all(q_lo[:, None, None, :] <= sample_c[None], axis=-1)
+                  & jnp.all(sample_c[None] <= q_hi[:, None, None, :], axis=-1)
+                  & sample_valid[None])
+        a = sample_a.astype(jnp.float32)[None]
+        samp_min = jnp.min(jnp.where(inside, a, _BIG), axis=-1)
+        samp_max = jnp.max(jnp.where(inside, a, -_BIG), axis=-1)
+        return samp_min, samp_max
+
+
+def _pad_query_eval_inputs(leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi, bq, bk):
+    # Empty-leaf boxes (lo > hi) must stay inverted after padding.
+    lo_t = _pad_axis(_transpose_coords(leaf_lo.astype(jnp.float32)), bk, 1,
+                     fill=1.0)
+    hi_t = _pad_axis(_transpose_coords(leaf_hi.astype(jnp.float32)), bk, 1,
+                     fill=-1.0)
+    agg = _pad_axis(_pad_axis(leaf_agg.astype(jnp.float32), 8, 1), bk, 0)
+    qlo_t = _pad_axis(_transpose_coords(q_lo.astype(jnp.float32)), bq, 1,
+                      fill=1.0)
+    qhi_t = _pad_axis(_transpose_coords(q_hi.astype(jnp.float32)), bq, 1,
+                      fill=-1.0)
+    return lo_t, hi_t, agg, qlo_t, qhi_t
+
+
+def _pad_moment_inputs(sample_c, sample_a, sample_leaf, q_lo, q_hi, bq, bs):
+    c_t = _pad_axis(_transpose_coords(sample_c.astype(jnp.float32)), bs, 1)
+    a = _pad_axis(sample_a.astype(jnp.float32), bs, 0)
+    leaf = _pad_axis(sample_leaf.astype(jnp.int32), bs, 0, fill=-1)
+    qlo_t = _pad_axis(_transpose_coords(q_lo.astype(jnp.float32)), bq, 1,
+                      fill=1.0)
+    qhi_t = _pad_axis(_transpose_coords(q_hi.astype(jnp.float32)), bq, 1,
+                      fill=-1.0)
+    return c_t, a, leaf, qlo_t, qhi_t
+
+
+@register_backend("pallas")
+class PallasBackend(KernelBackend):
+    """Pallas TPU kernels (compiled on TPU, interpret mode elsewhere)."""
+
+    def query_eval(self, leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi,
+                   bq: int = 128, bk: int = 128):
+        k, d = leaf_lo.shape
+        Q, A = q_lo.shape[0], leaf_agg.shape[1]
+        lo_t, hi_t, agg, qlo_t, qhi_t = _pad_query_eval_inputs(
+            leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi, bq, bk)
+        rel, exact = _query_eval_pallas(lo_t, hi_t, agg, qlo_t, qhi_t, d,
+                                        bq=bq, bk=bk, interpret=_interpret())
+        return rel[:Q, :k], exact[:Q, :A]
+
+    def stratified_moments_flat(self, sample_c, sample_a, sample_leaf,
+                                q_lo, q_hi, k: int, bq: int = 128,
+                                bk: int = 128, bs: int = 1024):
+        d = sample_c.shape[1]
+        Q = q_lo.shape[0]
+        c_t, a, leaf, qlo_t, qhi_t = _pad_moment_inputs(
+            sample_c, sample_a, sample_leaf, q_lo, q_hi, bq, bs)
+        k_pad = k + ((-k) % bk)
+        out = _strat_pallas(c_t, a, leaf, qlo_t, qhi_t, k_pad, d,
+                            bq=bq, bk=bk, bs=bs, interpret=_interpret())
+        return out[:Q, :k]
+
+    def segment_reduce(self, values, seg_ids, k: int, bn: int = 2048,
+                       bk: int = 256):
+        v = _pad_axis(values.astype(jnp.float32), bn, 0)
+        ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
+        k_pad = k + ((-k) % bk)
+        out = _segment_reduce_pallas(v, ids, k_pad, bn=bn, bk=bk,
+                                     interpret=_interpret())
+        return out[:k, :5]
+
+
+@register_backend("ref")
+class RefBackend(KernelBackend):
+    """The ref.py oracles through the exact Pallas padding adapters —
+    value-identical to ``pallas`` without the interpreter overhead."""
+
+    def query_eval(self, leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi,
+                   bq: int = 128, bk: int = 128):
+        k, d = leaf_lo.shape
+        Q, A = q_lo.shape[0], leaf_agg.shape[1]
+        lo_t, hi_t, agg, qlo_t, qhi_t = _pad_query_eval_inputs(
+            leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi, bq, bk)
+        rel, exact = _ref.query_eval_ref(lo_t, hi_t, agg, qlo_t, qhi_t, d)
+        return rel[:Q, :k], exact[:Q, :A]
+
+    def stratified_moments_flat(self, sample_c, sample_a, sample_leaf,
+                                q_lo, q_hi, k: int, bq: int = 128,
+                                bk: int = 128, bs: int = 1024):
+        d = sample_c.shape[1]
+        Q = q_lo.shape[0]
+        c_t, a, leaf, qlo_t, qhi_t = _pad_moment_inputs(
+            sample_c, sample_a, sample_leaf, q_lo, q_hi, bq, bs)
+        return _ref.stratified_moments_ref(c_t, a, leaf, qlo_t, qhi_t, k, d)[:Q]
+
+
+@register_backend("jnp")
+class JnpBackend(KernelBackend):
+    """Broadcast jnp formulation — the CPU-fast default off-TPU."""
+
+    def query_eval(self, leaf_lo, leaf_hi, leaf_agg, q_lo, q_hi,
+                   bq: int = 128, bk: int = 128):
+        rel = classify_leaves(leaf_lo, leaf_hi, q_lo, q_hi)
+        cover = (rel == REL_COVER).astype(jnp.float32)
+        exact = cover @ leaf_agg.astype(jnp.float32)
+        return rel, exact
+
+    def stratified_moments(self, sample_c, sample_a, sample_valid,
+                           q_lo, q_hi, **kw):
+        return sample_moments(sample_c, sample_a, sample_valid, q_lo, q_hi)
+
+    def stratified_moments_flat(self, sample_c, sample_a, sample_leaf,
+                                q_lo, q_hi, k: int, bq: int = 128,
+                                bk: int = 128, bs: int = 1024):
+        pred = (jnp.all(q_lo[:, None, :] <= sample_c[None], axis=-1)
+                & jnp.all(sample_c[None] <= q_hi[:, None, :], axis=-1)
+                & (sample_leaf >= 0)[None])
+        predf = pred.astype(jnp.float32)
+        a = sample_a.astype(jnp.float32)
+        onehot = (sample_leaf[:, None] == jnp.arange(k, dtype=jnp.int32)[None]
+                  ).astype(jnp.float32)            # (S, k)
+        kp = predf @ onehot
+        sm = (predf * a[None]) @ onehot
+        sq = (predf * (a * a)[None]) @ onehot
+        return jnp.stack([kp, sm, sq], axis=-1)
+
+
+__all__ = ["KernelBackend", "PallasBackend", "RefBackend", "JnpBackend",
+           "classify_leaves", "sample_moments", "D_PAD"]

@@ -1,123 +1,58 @@
-"""Public jit'd wrappers for the PASS Pallas kernels.
+"""Public wrappers for the PASS kernel ops, dispatched through the backend
+registry (DESIGN.md §4).
 
-Handles user-facing shapes (padding to block multiples, coordinate
-transposition to the lane-aligned (d_pad, ·) layout) and backend dispatch:
-
-* on TPU the kernels run compiled (interpret=False),
-* elsewhere (this CPU container) they run under ``interpret=True`` for
-  validation, or fall through to the pure-jnp reference when
-  ``REPRO_KERNEL_BACKEND=jnp`` (the default for speed — the interpreter
-  executes the kernel body per grid step in Python).
-
-Every wrapper is shape/value-equivalent to its `ref.py` oracle; the kernel
-test suite sweeps shapes and dtypes against the oracles.
+Each op takes an optional ``backend`` name (``pallas | jnp | ref``) for
+per-call selection; ``None`` resolves via ``REPRO_KERNEL_BACKEND`` or the
+platform default. Shape adaptation (padding to block multiples, coordinate
+transposition to the lane-aligned (d_pad, ·) layout) lives with the backends
+in ``backends.py``; every backend is shape/value-equivalent to the `ref.py`
+oracles and the kernel test suite sweeps shapes and dtypes against them.
 """
 from __future__ import annotations
 
-import os
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from . import ref as _ref
-from .segment_reduce import segment_reduce as _segment_reduce_pallas
-from .stratified_estimate import stratified_moments as _strat_pallas
-from .query_eval import query_eval as _query_eval_pallas
+from . import backends as _backends  # noqa: F401  (registers the backends)
+from .registry import get_backend, default_backend_name
 
-D_PAD = 8
+D_PAD = _backends.D_PAD
 
 
 def backend() -> str:
-    env = os.environ.get("REPRO_KERNEL_BACKEND")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "jnp"
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_axis(x: jnp.ndarray, mult: int, axis: int, fill=0):
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=fill)
-
-
-def _transpose_coords(c: jnp.ndarray) -> jnp.ndarray:
-    """(N, d) -> (D_PAD, N) with padded dims filled so they never filter."""
-    c_t = jnp.swapaxes(c, 0, 1)
-    return _pad_axis(c_t, D_PAD, 0, fill=0.0)
+    """Resolved default backend name (kept for compatibility)."""
+    return default_backend_name()
 
 
 def segment_reduce_op(values: jnp.ndarray, seg_ids: jnp.ndarray, k: int,
-                      bn: int = 2048, bk: int = 256) -> jnp.ndarray:
+                      bn: int = 2048, bk: int = 256,
+                      backend: str | None = None) -> jnp.ndarray:
     """Per-segment [sum, sumsq, count, min, max] over rows. Returns (k, 5)."""
-    v = _pad_axis(values.astype(jnp.float32), bn, 0)
-    ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
-    if backend() == "pallas":
-        k_pad = k + ((-k) % bk)
-        out = _segment_reduce_pallas(v, ids, k_pad, bn=bn, bk=bk,
-                                     interpret=_interpret())
-        return out[:k, :5]
-    return _ref.segment_reduce_ref(v, ids, k)[:, :5]
+    return get_backend(backend).segment_reduce(values, seg_ids, k,
+                                               bn=bn, bk=bk)
 
 
 def stratified_moments_op(sample_c: jnp.ndarray, sample_a: jnp.ndarray,
                           sample_leaf: jnp.ndarray, q_lo: jnp.ndarray,
                           q_hi: jnp.ndarray, k: int,
-                          bq: int = 128, bk: int = 128, bs: int = 1024
-                          ) -> jnp.ndarray:
+                          bq: int = 128, bk: int = 128, bs: int = 1024,
+                          backend: str | None = None) -> jnp.ndarray:
     """Flattened-sample moments. sample_c (S, d), sample_a (S,), sample_leaf
     (S,) int32 (-1 pad); q_lo/q_hi (Q, d). Returns (Q, k, 3)."""
-    d = sample_c.shape[1]
-    Q = q_lo.shape[0]
-    c_t = _pad_axis(_transpose_coords(sample_c.astype(jnp.float32)), bs, 1)
-    a = _pad_axis(sample_a.astype(jnp.float32), bs, 0)
-    leaf = _pad_axis(sample_leaf.astype(jnp.int32), bs, 0, fill=-1)
-    qlo_t = _pad_axis(_transpose_coords(q_lo.astype(jnp.float32)), bq, 1,
-                      fill=1.0)
-    qhi_t = _pad_axis(_transpose_coords(q_hi.astype(jnp.float32)), bq, 1,
-                      fill=-1.0)
-    if backend() == "pallas":
-        k_pad = k + ((-k) % bk)
-        out = _strat_pallas(c_t, a, leaf, qlo_t, qhi_t, k_pad, d,
-                            bq=bq, bk=bk, bs=bs, interpret=_interpret())
-        return out[:Q, :k]
-    return _ref.stratified_moments_ref(c_t, a, leaf, qlo_t, qhi_t, k, d)[:Q]
+    return get_backend(backend).stratified_moments_flat(
+        sample_c, sample_a, sample_leaf, q_lo, q_hi, k, bq=bq, bk=bk, bs=bs)
 
 
 def query_eval_op(leaf_lo: jnp.ndarray, leaf_hi: jnp.ndarray,
                   leaf_agg: jnp.ndarray, q_lo: jnp.ndarray,
-                  q_hi: jnp.ndarray, bq: int = 128, bk: int = 128
+                  q_hi: jnp.ndarray, bq: int = 128, bk: int = 128,
+                  backend: str | None = None
                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Classify leaves vs queries and accumulate exact covered aggregates.
 
     leaf_lo/leaf_hi (k, d); leaf_agg (k, A<=8); q_lo/q_hi (Q, d).
     Returns (rel (Q, k) int32, exact (Q, A) f32)."""
-    k, d = leaf_lo.shape
-    Q, A = q_lo.shape[0], leaf_agg.shape[1]
-    # Empty-leaf boxes (lo > hi) must stay inverted after padding.
-    lo_t = _pad_axis(_transpose_coords(leaf_lo.astype(jnp.float32)), bk, 1,
-                     fill=1.0)
-    hi_t = _pad_axis(_transpose_coords(leaf_hi.astype(jnp.float32)), bk, 1,
-                     fill=-1.0)
-    agg = _pad_axis(_pad_axis(leaf_agg.astype(jnp.float32), 8, 1), bk, 0)
-    qlo_t = _pad_axis(_transpose_coords(q_lo.astype(jnp.float32)), bq, 1,
-                      fill=1.0)
-    qhi_t = _pad_axis(_transpose_coords(q_hi.astype(jnp.float32)), bq, 1,
-                      fill=-1.0)
-    if backend() == "pallas":
-        rel, exact = _query_eval_pallas(lo_t, hi_t, agg, qlo_t, qhi_t, d,
-                                        bq=bq, bk=bk, interpret=_interpret())
-    else:
-        rel, exact = _ref.query_eval_ref(lo_t, hi_t, agg, qlo_t, qhi_t, d)
-    return rel[:Q, :k], exact[:Q, :A]
+    return get_backend(backend).query_eval(leaf_lo, leaf_hi, leaf_agg,
+                                           q_lo, q_hi, bq=bq, bk=bk)
 
 
 __all__ = ["segment_reduce_op", "stratified_moments_op", "query_eval_op",

@@ -1,0 +1,59 @@
+"""Named kernel-backend registry (DESIGN.md §4).
+
+Every hot op of the query engine — leaf classification + exact aggregate
+accumulation, stratified sample moments, segment reduction — is provided by
+interchangeable *backends* registered here by name:
+
+* ``pallas`` — the Pallas TPU kernels (interpret mode off-TPU),
+* ``jnp``    — pure-jnp broadcast implementations (fast on CPU),
+* ``ref``    — the kernel-convention oracles of ``ref.py`` (the shapes and
+  padding the Pallas kernels see; value-identical to ``pallas``).
+
+Backends are classes decorated with :func:`register_backend`; the registry
+stores one singleton instance per name. Selection precedence is per-call
+name > ``REPRO_KERNEL_BACKEND`` env var > platform default (``pallas`` on
+TPU, ``jnp`` elsewhere). This replaces the ``backend()`` if/else chains that
+used to be scattered through ``ops.py`` and ``core/estimators.py``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_BACKENDS: dict[str, "object"] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: instantiate and register a backend under ``name``."""
+    def deco(cls):
+        cls.name = name
+        _BACKENDS[name] = cls()
+        return cls
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def default_backend_name() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def get_backend(name: str | None = None):
+    """Resolve a backend instance; ``None`` uses env/platform defaults."""
+    resolved = name or default_backend_name()
+    try:
+        return _BACKENDS[resolved]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {resolved!r}; registered: "
+            f"{available_backends()}") from None
+
+
+__all__ = ["register_backend", "get_backend", "available_backends",
+           "default_backend_name"]

@@ -2,7 +2,11 @@
 monotonicity (paper §4.3, Lemmas A.1/A.3/A.5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # property tests skip; example-based tests still run
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.core import dp as dp_mod
 from repro.core import prefix as px

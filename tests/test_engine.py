@@ -1,0 +1,159 @@
+"""Layered-engine tests: multi-aggregate answers are bit-identical to the
+legacy single-kind path while sharing one classification + one moment pass;
+the backend registry dispatches per call; ess/skip_rate share one cached
+classification."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import build_synopsis, answer, random_queries
+from repro.core import estimators as E
+from repro.core.types import QueryBatch
+from repro.kernels import ops
+from repro.kernels.registry import available_backends, get_backend
+from repro import engine
+
+
+@pytest.fixture()
+def op_counts():
+    """Execution counters for the engine's artifact stages."""
+    engine.reset_op_counts()
+    from repro.engine import planner
+    planner.clear_relation_cache()
+    yield engine.OP_COUNTS
+    engine.reset_op_counts()
+
+
+def _make(seed=0, n=20000, k=16, rate=0.02):
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0, 100, n)).astype(np.float32).astype(np.float64)
+    a = rng.lognormal(0, 1, n) * (1 + np.sin(c / 5))
+    syn, _ = build_synopsis(c, a, k=k, sample_rate=rate, method="eq",
+                            seed=seed)
+    return c, a, syn
+
+
+def test_multi_aggregate_bit_identical_to_legacy_loop():
+    """answer(kinds=...) must return results bit-identical to separate
+    estimate() calls (jnp backend) — the engine acceptance criterion."""
+    c, a, syn = _make()
+    qs = random_queries(c, 64, seed=1)
+    kinds = ("sum", "count", "avg", "min", "max")
+    multi = engine.answer(syn, qs, kinds=kinds)
+    for kind in kinds:
+        single = E.estimate(syn, qs, kind=kind)
+        for field in ("estimate", "ci_half", "lower", "upper",
+                      "frac_rows_touched"):
+            assert np.array_equal(np.asarray(getattr(single, field)),
+                                  np.asarray(getattr(multi[kind], field))), \
+                (kind, field)
+
+
+def test_multi_aggregate_single_artifact_pass(op_counts):
+    """A 3-kind answer() performs exactly one leaf classification and one
+    moment pass; the legacy loop performs one of each per kind."""
+    c, a, syn = _make()
+    qs = random_queries(c, 32, seed=2)
+    engine.answer(syn, qs, kinds=("sum", "count", "avg"))
+    assert op_counts["classify"] == 1
+    assert op_counts["moments"] == 1
+    assert op_counts["extremes"] == 0
+    engine.reset_op_counts()
+    for kind in ("sum", "count", "avg"):
+        E.estimate(syn, qs, kind=kind)
+    assert op_counts["classify"] == 3
+    assert op_counts["moments"] == 3
+
+
+def test_extreme_pass_only_when_requested(op_counts):
+    c, a, syn = _make()
+    qs = random_queries(c, 16, seed=3)
+    engine.answer(syn, qs, kinds=("min", "max"))
+    assert op_counts["classify"] == 1
+    assert op_counts["moments"] == 0    # no sampled-moment kind requested
+    assert op_counts["extremes"] == 1
+
+
+def test_backend_registry_names_and_per_call_selection():
+    assert {"pallas", "jnp", "ref"} <= set(available_backends())
+    assert get_backend("jnp").name == "jnp"
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        get_backend("tpu_v9")
+    c, a, syn = _make(k=8)
+    qs = random_queries(c, 16, seed=4)
+    rel_j, exact_j = ops.query_eval_op(syn.leaf_lo, syn.leaf_hi,
+                                       syn.leaf_agg, qs.lo, qs.hi,
+                                       backend="jnp")
+    rel_r, exact_r = ops.query_eval_op(syn.leaf_lo, syn.leaf_hi,
+                                       syn.leaf_agg, qs.lo, qs.hi,
+                                       backend="ref")
+    np.testing.assert_array_equal(np.asarray(rel_j), np.asarray(rel_r))
+    np.testing.assert_allclose(np.asarray(exact_j), np.asarray(exact_r),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_backends_agree_through_answer():
+    """Full answers agree across the jnp and ref backends."""
+    c, a, syn = _make(k=8)
+    qs = random_queries(c, 16, seed=5)
+    res_j = engine.answer(syn, qs, kinds=("sum", "avg"), backend="jnp")
+    res_r = engine.answer(syn, qs, kinds=("sum", "avg"), backend="ref")
+    for kind in ("sum", "avg"):
+        np.testing.assert_allclose(np.asarray(res_j[kind].estimate),
+                                   np.asarray(res_r[kind].estimate),
+                                   rtol=2e-5, atol=1e-3)
+
+
+def test_answer_rejects_unknown_kind():
+    c, a, syn = _make(k=4, n=2000)
+    qs = random_queries(c, 4, seed=6)
+    with pytest.raises(ValueError, match="unknown kind"):
+        engine.answer(syn, qs, kinds=("sum", "median"))
+
+
+def test_core_answer_kinds_parameter():
+    """core.query.answer grows a kinds= entry returning the engine dict."""
+    c, a, syn = _make(k=8)
+    qs = random_queries(c, 8, seed=7)
+    out = answer(syn, qs, kinds=("sum", "count"))
+    assert set(out) == {"sum", "count"}
+    single = answer(syn, qs, kind="sum")
+    assert np.array_equal(np.asarray(single.estimate),
+                          np.asarray(out["sum"].estimate))
+
+
+def test_ess_skip_rate_match_legacy_and_share_classification(op_counts):
+    """Satellite: ess/skip_rate agree with the pre-refactor formulas and
+    cost one cached classification for the same (synopsis, batch) pair."""
+    c, a, syn = _make(k=32)
+    qs = random_queries(c, 50, seed=3, min_frac=0.02, max_frac=0.2)
+    e = np.asarray(E.ess(syn, qs))
+    s = np.asarray(E.skip_rate(syn, qs))
+    assert op_counts["classify"] == 1    # second call hit the cache
+    # The pre-refactor implementations, inlined:
+    rel = E.classify_leaves(syn.leaf_lo, syn.leaf_hi, qs.lo, qs.hi)
+    partf = (rel == 1).astype(jnp.float32)
+    e_old = jnp.sum(partf * syn.k_per_leaf.astype(jnp.float32)[None], axis=1)
+    s_old = 1.0 - jnp.sum(partf * syn.n_rows.astype(jnp.float32)[None],
+                          axis=1) / max(syn.total_rows, 1)
+    np.testing.assert_array_equal(e, np.asarray(e_old))
+    np.testing.assert_array_equal(s, np.asarray(s_old))
+
+
+def test_proportional_allocation_respects_budget():
+    """Satellite: proportional allocation must not overshoot the sample
+    budget (the old code took max(per_leaf) for every stratum)."""
+    rng = np.random.default_rng(8)
+    c = np.sort(rng.uniform(0, 100, 30000))
+    a = rng.lognormal(0, 1, 30000)
+    budget = 600
+    syn, rep = build_synopsis(c, a, k=64, sample_budget=budget, method="eq",
+                              allocation="proportional")
+    total = int(np.asarray(syn.k_per_leaf).sum())
+    assert total <= budget, (total, budget)
+    assert rep.total_samples == total
+    # and the allocation is actually proportional: bigger strata get more
+    from repro.core.sampling import proportional_allocation
+    alloc = proportional_allocation(np.array([10, 1000, 10000]), 500)
+    assert alloc.sum() <= 500
+    assert alloc[2] > alloc[1] > alloc[0] >= 4

@@ -3,7 +3,11 @@ containment (hypothesis property), CI coverage, FPC, unbiasedness."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # property tests skip; example-based tests still run
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.core import build_synopsis, answer, ground_truth
 from repro.core.types import QueryBatch

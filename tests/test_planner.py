@@ -1,0 +1,134 @@
+"""Planner fidelity: the batched level-synchronous frontier descent is
+node-for-node identical to the paper's recursive Algorithm 1
+(``mcf_reference``) and visits O(frontier * depth) nodes, not O(k)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import build_synopsis, ground_truth, random_queries
+from repro.core import partition_tree as pt
+from repro.core.types import (QueryBatch, NUM_AGGS, AGG_SUM, AGG_SUMSQ,
+                              AGG_COUNT, AGG_MIN, AGG_MAX)
+from repro import engine
+from repro.data import synthetic
+
+
+def _check_plan_matches_reference(tree, num_leaves, q_lo, q_hi):
+    plan = engine.plan_queries(tree, q_lo, q_hi, num_leaves)
+    leaf_id = np.asarray(tree.leaf_id)
+    for q in range(q_lo.shape[0]):
+        cov, par, visited = pt.mcf_reference(tree, q_lo[q], q_hi[q])
+        assert sorted(cov) == plan.covered_nodes[q].tolist(), q
+        assert sorted(int(leaf_id[v]) for v in par) \
+            == plan.partial_leaves[q].tolist(), q
+        assert visited == plan.visited[q], (q, visited, plan.visited[q])
+    return plan
+
+
+def test_planner_matches_mcf_reference_1d():
+    rng = np.random.default_rng(0)
+    c = np.sort(rng.uniform(0, 50, 8000))
+    a = rng.normal(10, 4, 8000)
+    for k in (13, 16, 37):          # non-power-of-two k exercises padding
+        syn, _ = build_synopsis(c, a, k=k, sample_rate=0.02, method="eq")
+        qs = random_queries(c, 40, seed=k)
+        _check_plan_matches_reference(syn.tree, syn.num_leaves,
+                                      np.asarray(qs.lo), np.asarray(qs.hi))
+
+
+def test_planner_matches_mcf_reference_kd_multidim():
+    c, a = synthetic.nyc_taxi(scale=0.003, dims=2)
+    syn, _ = build_synopsis(c, a, k=24, sample_rate=0.05, method="kd")
+    qs = random_queries(c, 30, seed=5, min_frac=0.1, max_frac=0.6)
+    _check_plan_matches_reference(syn.tree, syn.num_leaves,
+                                  np.asarray(qs.lo), np.asarray(qs.hi))
+
+
+def test_aligned_queries_zero_sampled_strata_and_zero_ci():
+    """Partition-union queries resolve entirely on the covered frontier:
+    no partial leaves, no sampled strata, CI == 0 and exact answers
+    (paper §2.3: 'answered exactly with a depth-first search')."""
+    rng = np.random.default_rng(1)
+    c = np.sort(rng.uniform(0, 100, 20000)).astype(np.float32).astype(np.float64)
+    a = rng.lognormal(0, 1, 20000)
+    syn, _ = build_synopsis(c, a, k=16, sample_rate=0.02, method="eq")
+    lo = np.asarray(syn.leaf_lo)[:, 0]
+    hi = np.asarray(syn.leaf_hi)[:, 0]
+    q = QueryBatch(lo=jnp.asarray([[lo[3]], [lo[0]]], jnp.float32),
+                   hi=jnp.asarray([[hi[8]], [hi[15]]], jnp.float32))
+    plan = engine.plan_queries(syn.tree, np.asarray(q.lo), np.asarray(q.hi),
+                               syn.num_leaves)
+    assert plan.partial_leaf_mask.sum() == 0          # zero sampled strata
+    assert all(len(p) == 0 for p in plan.partial_leaves)
+    # Frontier covered sets match the recursive reference exactly.
+    for qi in range(2):
+        cov, par, _ = pt.mcf_reference(syn.tree, np.asarray(q.lo)[qi],
+                                       np.asarray(q.hi)[qi])
+        assert sorted(cov) == plan.covered_nodes[qi].tolist()
+        assert par == []
+    res = engine.answer(syn, q, kinds=("sum", "count", "avg"), plan=plan)
+    for kind in ("sum", "count", "avg"):
+        gt = ground_truth(c, a, q, kind=kind)
+        est = np.asarray(res[kind].estimate, dtype=np.float64)
+        np.testing.assert_allclose(est, gt, rtol=3e-5)
+        np.testing.assert_allclose(np.asarray(res[kind].ci_half), 0.0,
+                                   atol=1e-3)
+
+
+def _synthetic_tree(k: int):
+    """k disjoint unit-ish leaves with trivial aggregates."""
+    lo = np.arange(k, dtype=np.float64)[:, None] + 0.1
+    hi = np.arange(k, dtype=np.float64)[:, None] + 0.9
+    agg = np.zeros((k, NUM_AGGS))
+    agg[:, AGG_SUM] = 1.0
+    agg[:, AGG_SUMSQ] = 1.0
+    agg[:, AGG_COUNT] = 1.0
+    agg[:, AGG_MIN] = 0.0
+    agg[:, AGG_MAX] = 1.0
+    return pt.build_tree_from_leaves(agg, lo, hi)
+
+
+def test_visited_is_frontier_times_depth_not_k_on_4096_leaves():
+    """Acceptance: on a k = 4096 tree, aligned queries visit
+    O(frontier * depth) nodes — two orders of magnitude below k."""
+    k = 4096
+    tree = _synthetic_tree(k)
+    depth = int(np.log2(k))
+    rng = np.random.default_rng(2)
+    starts = rng.integers(0, k - 1, size=16)
+    ends = np.minimum(starts + rng.integers(1, k // 2, size=16), k - 1)
+    q_lo = starts.astype(np.float64)[:, None]          # covers leaves s..e
+    q_hi = (ends + 1).astype(np.float64)[:, None]
+    plan = engine.plan_queries(tree, q_lo, q_hi, k)
+    assert plan.partial_leaf_mask.sum() == 0
+    for qi in range(16):
+        cov, par, visited = pt.mcf_reference(tree, q_lo[qi], q_hi[qi])
+        assert sorted(cov) == plan.covered_nodes[qi].tolist()
+        assert visited == plan.visited[qi]
+        frontier = plan.frontier_size[qi]
+        # Every visited node is a frontier node, one of its ancestors, or an
+        # ancestor's other child: <= ~2 * frontier * depth overall.
+        assert plan.visited[qi] <= 2 * max(frontier, 1) * (depth + 1) + 1
+        assert plan.visited[qi] < k // 8, int(plan.visited[qi])
+    # And the exact frontier aggregates equal the covered leaf counts.
+    span = (ends - starts + 1).astype(np.float64)
+    np.testing.assert_allclose(plan.exact_agg[:, AGG_COUNT], span)
+
+
+def test_padded_leaves_never_reach_consumers():
+    """build_tree_from_leaves pads to a power of two; padded slots must
+    carry leaf_id == -1 and never appear in any frontier."""
+    tree = _synthetic_tree(11)                      # pads to K = 16
+    leaf_id = np.asarray(tree.leaf_id)
+    left = np.asarray(tree.left)
+    n_leaves = int((left < 0).sum())
+    assert n_leaves == 16
+    real = leaf_id[leaf_id >= 0]
+    assert sorted(real.tolist()) == list(range(11))
+    assert (leaf_id[left < 0] == -1).sum() == 5     # the padded slots
+    # A query covering everything: frontier is the root, no partial leaves.
+    plan = engine.plan_queries(tree, np.array([[-1.0]]), np.array([[100.0]]),
+                               11)
+    assert plan.covered_nodes[0].tolist() == [0]
+    assert plan.partial_leaves[0].size == 0
+    assert plan.cover_leaf_mask.shape == (1, 11)
+    assert plan.cover_leaf_mask.all()
