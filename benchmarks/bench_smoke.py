@@ -1,0 +1,48 @@
+"""CI bench-smoke: tiny-config perf runs -> BENCH_pr.json.
+
+Runs the PASS serving hillclimb and the streaming ingest benchmark in their
+CI-sized configs and writes a flat metric JSON. ``check_regression``
+compares it against the checked-in ``BENCH_baseline.json`` (fails on >2x
+regression). Locally:
+
+    PYTHONPATH=src python -m benchmarks.bench_smoke [out.json]
+    PYTHONPATH=src python -m benchmarks.check_regression BENCH_pr.json
+"""
+from __future__ import annotations
+
+import json
+import platform
+import sys
+
+from . import bench_streaming_ingest
+from . import perf_pass_serving
+
+
+def run() -> dict:
+    serve_rows, serve_speedup = perf_pass_serving.run(
+        **perf_pass_serving.tiny_config())
+    stream = bench_streaming_ingest.run(**bench_streaming_ingest.tiny_config())
+    metrics = dict(stream)
+    # serving wall-clock per iteration label + the headline speedups
+    for name, t in serve_rows:
+        key = name.split("(")[0]                  # strip dynamic suffixes
+        metrics[f"serving_{key}_ms"] = t * 1e3
+    metrics["serving_multi_aggregate_speedup_x"] = serve_speedup
+    return metrics
+
+
+def main(out_path: str = "BENCH_pr.json") -> None:
+    metrics = run()
+    payload = {
+        "metrics": metrics,
+        "meta": {"python": platform.python_version(),
+                 "machine": platform.machine(),
+                 "config": "tiny"},
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {out_path} ({len(metrics)} metrics)")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:2])

@@ -1,0 +1,68 @@
+"""Gate a BENCH_pr.json against the checked-in BENCH_baseline.json.
+
+A metric regresses when it is worse than ``factor`` x its baseline:
+``*_ms`` / ``*_us_per_row`` are lower-is-better wall-clock numbers,
+``*_speedup_x`` are higher-is-better ratios. Metrics present on only one
+side are reported but never fail the gate (the trajectory is allowed to
+grow). Exit code 1 on any regression.
+
+    PYTHONPATH=src python -m benchmarks.check_regression BENCH_pr.json \
+        [baseline.json] [--factor 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINE = pathlib.Path(__file__).with_name("BENCH_baseline.json")
+
+
+def lower_is_better(name: str) -> bool:
+    return not name.endswith("_speedup_x")
+
+
+def compare(pr: dict, base: dict, factor: float) -> list[str]:
+    failures = []
+    for name, want in sorted(base.items()):
+        if name.endswith("_rows"):
+            continue                           # config descriptors, not perf
+        got = pr.get(name)
+        if got is None:
+            print(f"  MISSING  {name} (baseline {want:.3f})")
+            continue
+        if lower_is_better(name):
+            bad = got > want * factor
+            verdict = f"{got:10.3f} vs baseline {want:10.3f} (allow <= {want * factor:.3f})"
+        else:
+            bad = got < want / factor
+            verdict = f"{got:10.3f} vs baseline {want:10.3f} (allow >= {want / factor:.3f})"
+        tag = "REGRESSED" if bad else "ok"
+        print(f"  {tag:9s} {name}: {verdict}")
+        if bad:
+            failures.append(name)
+    for name in sorted(set(pr) - set(base)):
+        print(f"  NEW      {name}: {pr[name]:.3f} (no baseline yet)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pr_json")
+    ap.add_argument("baseline", nargs="?", default=str(BASELINE))
+    ap.add_argument("--factor", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    pr = json.loads(pathlib.Path(args.pr_json).read_text())["metrics"]
+    base = json.loads(pathlib.Path(args.baseline).read_text())["metrics"]
+    failures = compare(pr, base, args.factor)
+    if failures:
+        print(f"FAIL: {len(failures)} metric(s) regressed >{args.factor}x: "
+              f"{failures}")
+        return 1
+    print("bench-smoke: no regression")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

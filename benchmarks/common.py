@@ -11,10 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core import (build_synopsis, answer, ground_truth, random_queries,
-                        relative_error, ci_ratio)
-from repro.core.baselines import (uniform_synopsis, stratified_synopsis,
-                                  aqppp_synopsis)
+from repro.core import answer, ground_truth, relative_error, ci_ratio
 from repro.data import synthetic
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "0.05"))

@@ -2,7 +2,7 @@
 queries vs sample rate (fixed 64 partitions)."""
 from __future__ import annotations
 
-from repro.core import build_synopsis, random_queries, ground_truth, answer
+from repro.core import build_synopsis, random_queries
 from repro.core.baselines import stratified_synopsis, uniform_synopsis
 from . import common
 

@@ -2,8 +2,6 @@
 (875k zeros + normal tail), random and tail-focused queries."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import build_synopsis, random_queries
 from . import common
 

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import engine
-from repro.core import build_synopsis, answer, random_queries
+from repro.core import build_synopsis, random_queries
 from repro.core import estimators as E
 from repro.core.types import QueryBatch
 from repro.kernels import ops as kops
@@ -43,8 +43,8 @@ def bench(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run(Q=2048, k=256, rate=0.01):
-    c, a = synthetic.nyc_taxi(scale=0.05)
+def run(Q=2048, k=256, rate=0.01, scale=0.05, Q4=1024, rate4=0.03):
+    c, a = synthetic.nyc_taxi(scale=scale)
     syn, _ = build_synopsis(c, a, k=k, sample_rate=rate, kind="sum")
     qs = random_queries(c, Q, seed=3)
     kk, s, d = syn.sample_c.shape
@@ -93,8 +93,9 @@ def run(Q=2048, k=256, rate=0.01):
     # Serving-shaped scenario: a denser stratified sample (3%) so the moment
     # pass — the part the engine shares — carries the cost, as in the
     # paper's serving configurations.
-    syn4, _ = build_synopsis(c, a, k=128, sample_rate=0.03, kind="sum")
-    qs4 = random_queries(c, 1024, seed=4)
+    syn4, _ = build_synopsis(c, a, k=min(128, k), sample_rate=rate4,
+                             kind="sum")
+    qs4 = random_queries(c, Q4, seed=4)
 
     def legacy_loop(lo, hi):
         q = QueryBatch(lo, hi)
@@ -121,5 +122,11 @@ def run(Q=2048, k=256, rate=0.01):
     return rows, speedup
 
 
+def tiny_config() -> dict:
+    """CI-sized run (bench_smoke / REPRO_BENCH_TINY)."""
+    return dict(Q=256, k=64, rate=0.01, scale=0.01, Q4=128, rate4=0.02)
+
+
 if __name__ == "__main__":
-    run()
+    import os
+    run(**(tiny_config() if os.environ.get("REPRO_BENCH_TINY") else {}))

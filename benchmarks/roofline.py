@@ -17,8 +17,6 @@ import glob
 import json
 import os
 
-import numpy as np
-
 from repro.configs import get_config, SHAPES
 from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
 

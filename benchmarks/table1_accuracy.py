@@ -8,9 +8,7 @@ storage (BSS-Nx) its total samples are capped at N * K.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import build_synopsis, answer, random_queries
+from repro.core import build_synopsis, random_queries
 from repro.core.baselines import (uniform_synopsis, stratified_synopsis,
                                   aqppp_synopsis)
 from . import common

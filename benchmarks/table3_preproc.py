@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import build_synopsis, answer, random_queries
 from . import common
 

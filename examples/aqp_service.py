@@ -21,8 +21,7 @@ import numpy as np
 import jax
 
 from repro import engine
-from repro.core import (build_synopsis, ground_truth, random_queries,
-                        relative_error)
+from repro.core import build_synopsis, ground_truth, random_queries
 from repro.core.estimators import ess, skip_rate
 from repro.core import distributed as dist
 from repro.data import synthetic

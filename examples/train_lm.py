@@ -8,7 +8,6 @@ the paper's technique as the analytics layer of the pipeline (DESIGN.md §5).
     PYTHONPATH=src python examples/train_lm.py --steps 300
 """
 import argparse
-import dataclasses
 import time
 
 import numpy as np

@@ -17,19 +17,16 @@ Serve: two modes (both shard_map):
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:                                   # jax >= 0.5 exposes it at top level
     _shard_map = jax.shard_map
 except AttributeError:                 # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from .types import Synopsis, QueryBatch, AGG_MIN, AGG_MAX, NUM_AGGS
+from .types import Synopsis, QueryBatch
 from ..kernels import ops as kops
 
 

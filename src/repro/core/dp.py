@@ -180,10 +180,8 @@ def dp_monotone_jnp(values_sorted: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jn
         w = w.astype(jnp.int32)
         n_i = (w - g).astype(jnp.float32)
         x = g + (w - g) // 2
-        n1 = (x - g).astype(jnp.float32)
         sq1 = jnp.take(s1, x) - jnp.take(s1, g)
         sqq1 = jnp.take(s2, x) - jnp.take(s2, g)
-        n2 = (w - x).astype(jnp.float32)
         sq2 = jnp.take(s1, w) - jnp.take(s1, x)
         sqq2 = jnp.take(s2, w) - jnp.take(s2, x)
         ni = jnp.maximum(n_i, 1.0)
@@ -253,6 +251,20 @@ def cuts_to_thresholds(sample_c_sorted: np.ndarray, cuts: np.ndarray) -> np.ndar
     return 0.5 * (c[lo_idx] + c[hi_idx])
 
 
+def cuts_to_thresholds_jnp(sample_c_sorted: jnp.ndarray, cuts: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """Device-side `cuts_to_thresholds`: midpoint thresholds from sorted
+    sample coordinates and (k+1,) cut ranks. Used by the streaming
+    re-optimization loop (`streaming.policy`) so the whole
+    drift -> DP -> thresholds chain stays on device."""
+    c = sample_c_sorted
+    m = c.shape[0]
+    inner = cuts[1:-1].astype(jnp.int32)
+    lo_idx = jnp.clip(inner - 1, 0, m - 1)
+    hi_idx = jnp.clip(inner, 0, m - 1)
+    return 0.5 * (jnp.take(c, lo_idx) + jnp.take(c, hi_idx))
+
+
 def adp_partition(c: np.ndarray, a: np.ndarray, k: int, m: int,
                   kind: str = "sum", delta_frac: float = 0.01,
                   seed: int = 0) -> tuple[np.ndarray, np.ndarray, float]:
@@ -286,5 +298,5 @@ def adp_partition(c: np.ndarray, a: np.ndarray, k: int, m: int,
 
 __all__ = [
     "equal_depth_boundaries", "dp_exact", "dp_monotone", "dp_monotone_jnp",
-    "cuts_to_thresholds", "adp_partition",
+    "cuts_to_thresholds", "cuts_to_thresholds_jnp", "adp_partition",
 ]

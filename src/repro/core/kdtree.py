@@ -22,8 +22,6 @@ import dataclasses
 
 import numpy as np
 
-from . import prefix as px
-
 
 @dataclasses.dataclass
 class _Node:

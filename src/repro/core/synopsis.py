@@ -77,18 +77,52 @@ def build_synopsis(c, a, *, k: int = 64, sample_budget: int | None = None,
         k = int(assign.max()) + 1 if assign.size else k
     t1 = time.perf_counter()
 
+    syn, info = synopsis_from_assignment(
+        c2, a, assign, k, sample_budget=sample_budget,
+        allocation=allocation, seed=seed + 1)
+    t3 = time.perf_counter()
+    report = BuildReport(
+        seconds_total=t3 - t0, seconds_partition=t1 - t0,
+        seconds_aggregate=info["seconds_aggregate"],
+        seconds_sample=info["seconds_sample"], k=k,
+        total_samples=info["total_samples"], max_variance=float(vmax))
+    return syn, report
+
+
+def synopsis_from_assignment(c, a, assign, k, *, s_per_leaf=None,
+                             sample_budget: int | None = None,
+                             allocation: str = "equal", seed: int = 0
+                             ) -> tuple[Synopsis, dict]:
+    """Assemble a jit-ready Synopsis from a row -> leaf assignment.
+
+    The shared tail of :func:`build_synopsis` and of the streaming
+    re-optimizer (`streaming.policy.reoptimize`): exact per-leaf stats and
+    boxes on host f64, bottom-up tree, stratified samples, f32 device
+    arrays. ``s_per_leaf`` overrides the budget/allocation computation
+    with an explicit per-stratum cap. Returns (synopsis, info) where info
+    carries stage timings and the realized sample count.
+    """
+    c2 = np.asarray(c, dtype=np.float64)
+    if c2.ndim == 1:
+        c2 = c2[:, None]
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    assign = np.asarray(assign)
+    n, d = c2.shape
+
+    t1 = time.perf_counter()
     agg, lo, hi = pt.leaf_stats(c2, a, assign, k)
     tree = pt.build_tree_from_leaves(agg, lo, hi)
     t2 = time.perf_counter()
 
-    if allocation == "proportional":
-        s_per_leaf = sampling.proportional_allocation(agg[:, AGG_COUNT],
-                                                      sample_budget)
-    else:
-        s_per_leaf = max(1, sample_budget // max(k, 1))
+    if s_per_leaf is None:
+        if allocation == "proportional":
+            s_per_leaf = sampling.proportional_allocation(agg[:, AGG_COUNT],
+                                                          sample_budget)
+        else:
+            s_per_leaf = max(1, sample_budget // max(k, 1))
     sample_c, sample_a, valid, k_per_leaf = sampling.stratified_sample(
-        c2, a, assign, k, s_per_leaf, seed=seed + 1)
-    if allocation == "proportional":
+        c2, a, assign, k, s_per_leaf, seed=seed)
+    if allocation == "proportional" and sample_budget is not None:
         assert int(k_per_leaf.sum()) <= sample_budget, \
             (int(k_per_leaf.sum()), sample_budget)
     t3 = time.perf_counter()
@@ -109,11 +143,9 @@ def build_synopsis(c, a, *, k: int = 64, sample_budget: int | None = None,
             left=jnp.asarray(tree.left), right=jnp.asarray(tree.right),
             leaf_id=jnp.asarray(tree.leaf_id), level=jnp.asarray(tree.level)),
         num_leaves=k, d=d, total_rows=n)
-    report = BuildReport(
-        seconds_total=t3 - t0, seconds_partition=t1 - t0,
-        seconds_aggregate=t2 - t1, seconds_sample=t3 - t2, k=k,
-        total_samples=int(k_per_leaf.sum()), max_variance=float(vmax))
-    return syn, report
+    info = {"seconds_aggregate": t2 - t1, "seconds_sample": t3 - t2,
+            "total_samples": int(k_per_leaf.sum())}
+    return syn, info
 
 
 def delta_encode(syn: Synopsis) -> tuple[Synopsis, dict]:
@@ -140,4 +172,5 @@ def delta_decode(syn: Synopsis) -> Synopsis:
     return dataclasses.replace(syn, sample_a=vals)
 
 
-__all__ = ["build_synopsis", "BuildReport", "delta_encode", "delta_decode"]
+__all__ = ["build_synopsis", "synopsis_from_assignment", "BuildReport",
+           "delta_encode", "delta_decode"]

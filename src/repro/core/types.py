@@ -16,10 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 AGG_SUM, AGG_SUMSQ, AGG_COUNT, AGG_MIN, AGG_MAX = 0, 1, 2, 3, 4

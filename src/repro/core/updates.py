@@ -1,12 +1,17 @@
-"""Dynamic updates (paper §4.5): insertions with reservoir sampling.
+"""Dynamic updates (paper §4.5): per-row insertions with reservoir sampling.
 
 Each inserted row updates, in O(height) time: the exact aggregates of its
 leaf and of every ancestor (SUM/SUMSQ/COUNT exactly; MIN/MAX monotonically),
 the leaf's data bounding box, and — with reservoir probability — one slot
 of the leaf's stratified sample. Estimates remain statistically consistent
-for SUM/COUNT/AVG (Vitter [41]); the paper leaves re-optimization cadence
-(split & merge) as future work, and so do we — `staleness()` exposes the
-drift signal a re-optimization policy would consume.
+for SUM/COUNT/AVG (Vitter [41]).
+
+This host-side per-row path is the *legacy/reference* implementation: it
+re-uploads the whole synopsis on every ``snapshot()`` and loops Python per
+row. The serving hot path lives in :mod:`repro.streaming` — vectorized
+batched inserts, device-resident delta-merge, and the drift-triggered
+re-optimization policy that the paper leaves open (``to_streaming()``
+bridges an existing updatable synopsis onto it).
 """
 from __future__ import annotations
 
@@ -103,11 +108,21 @@ class UpdatableSynopsis:
         self.inserts_since_build += 1
 
     def insert_batch(self, c_rows, a_vals):
+        """Per-row loop (legacy). For bulk ingest use
+        ``repro.streaming.StreamingIngestor.ingest`` — one vectorized device
+        pass per batch instead of B Python iterations."""
         c_rows = np.asarray(c_rows, dtype=np.float64)
         if c_rows.ndim == 1:
             c_rows = c_rows[:, None]
         for i in range(c_rows.shape[0]):
             self.insert(c_rows[i], float(a_vals[i]))
+
+    def to_streaming(self, *, seed: int = 0, backend: str | None = None):
+        """Bridge to the batched subsystem: a ``StreamingIngestor`` anchored
+        on this synopsis' current snapshot (aggregates, boxes, and reservoir
+        state carry over; subsequent ingest is vectorized)."""
+        from ..streaming import StreamingIngestor
+        return StreamingIngestor(self.snapshot(), seed=seed, backend=backend)
 
     def staleness(self) -> float:
         """Fraction of rows inserted since the last (re)build — the signal

@@ -207,11 +207,15 @@ def answer(syn: Synopsis, queries: QueryBatch, kinds=("sum",), *,
     """Answer a batch of rectangular aggregate queries for every requested
     aggregate kind from one shared artifact pass.
 
-    Returns ``{kind: QueryResult}``. ``backend`` picks a registered kernel
-    backend per call; ``plan`` substitutes a planner QueryPlan's frontier for
-    the batched leaf classification. ``use_aggregates=False`` disables the
-    exact-cover shortcut and deterministic bounds (the ST/US baselines).
+    Returns ``{kind: QueryResult}``. ``syn`` may be a :class:`Synopsis` or a
+    delta-merge source with ``as_synopsis()`` (a streaming ingestor serves
+    straight from its device-resident base+delta combine). ``backend`` picks
+    a registered kernel backend per call; ``plan`` substitutes a planner
+    QueryPlan's frontier for the batched leaf classification.
+    ``use_aggregates=False`` disables the exact-cover shortcut and
+    deterministic bounds (the ST/US baselines).
     """
+    syn = _executor.resolve_synopsis(syn)
     if isinstance(kinds, str):
         kinds = (kinds,)
     kinds = tuple(kinds)

@@ -141,6 +141,14 @@ def count_artifact_pass(kinds) -> None:
         OP_COUNTS["extremes"] += 1
 
 
+def resolve_synopsis(syn) -> Synopsis:
+    """Accept a plain :class:`Synopsis` or any delta-merge source exposing
+    ``as_synopsis()`` (e.g. ``streaming.StreamingIngestor``): the executor
+    then consumes the device-resident base+delta combine instead of a
+    host-re-uploaded snapshot."""
+    return syn.as_synopsis() if hasattr(syn, "as_synopsis") else syn
+
+
 def plan_to_masks(plan):
     """Convert a planner QueryPlan to the (cover, partial, exact) device
     triple consumed by :func:`compute_artifacts`; None passes through."""
@@ -157,9 +165,11 @@ def artifacts(syn: Synopsis, queries: QueryBatch, kinds,
     """Eager entry: one jit'd artifact-stage execution per call."""
     kinds = tuple(kinds)
     count_artifact_pass(kinds)
-    return _artifacts_jit(syn, queries, kinds, use_aggregates,
-                          get_backend(backend).name, plan_to_masks(plan))
+    return _artifacts_jit(resolve_synopsis(syn), queries, kinds,
+                          use_aggregates, get_backend(backend).name,
+                          plan_to_masks(plan))
 
 
 __all__ = ["Artifacts", "compute_artifacts", "artifacts", "plan_to_masks",
-           "count_artifact_pass", "OP_COUNTS", "reset_op_counts"]
+           "resolve_synopsis", "count_artifact_pass", "OP_COUNTS",
+           "reset_op_counts"]

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .registry import register_backend
-from .segment_reduce import segment_reduce as _segment_reduce_pallas
+from .segment_reduce import (segment_reduce as _segment_reduce_pallas,
+                             auto_block_n)
 from .stratified_estimate import stratified_moments as _strat_pallas
 from .query_eval import query_eval as _query_eval_pallas
 
@@ -132,8 +133,12 @@ class KernelBackend:
         raise NotImplementedError
 
     # -- segment reduction ---------------------------------------------------
-    def segment_reduce(self, values, seg_ids, k: int, bn: int = 2048,
+    # ``bn=None`` sizes the row block to the input (auto_block_n) — the
+    # streaming ingest path reduces small batches where the build-path
+    # default of 2048 would pad 2-4x.
+    def segment_reduce(self, values, seg_ids, k: int, bn: int | None = 2048,
                        bk: int = 256):
+        bn = bn or auto_block_n(values.shape[0])
         v = _pad_axis(values.astype(jnp.float32), bn, 0)
         ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
         return _ref.segment_reduce_ref(v, ids, k)[:, :5]
@@ -202,8 +207,9 @@ class PallasBackend(KernelBackend):
                             bq=bq, bk=bk, bs=bs, interpret=_interpret())
         return out[:Q, :k]
 
-    def segment_reduce(self, values, seg_ids, k: int, bn: int = 2048,
+    def segment_reduce(self, values, seg_ids, k: int, bn: int | None = 2048,
                        bk: int = 256):
+        bn = bn or auto_block_n(values.shape[0])
         v = _pad_axis(values.astype(jnp.float32), bn, 0)
         ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
         k_pad = k + ((-k) % bk)
@@ -250,6 +256,22 @@ class JnpBackend(KernelBackend):
     def stratified_moments(self, sample_c, sample_a, sample_valid,
                            q_lo, q_hi, **kw):
         return sample_moments(sample_c, sample_a, sample_valid, q_lo, q_hi)
+
+    def segment_reduce(self, values, seg_ids, k: int, bn: int | None = 2048,
+                       bk: int = 256):
+        # Scatter formulation: O(N) work instead of the O(N*k) one-hot
+        # matmul — the right shape for CPU and for the streaming ingest
+        # hot path, where N is a small row batch. Padding rows (-1) and
+        # out-of-range ids drop into a spill slot that is sliced away.
+        v = values.astype(jnp.float32)
+        ids = jnp.where((seg_ids >= 0) & (seg_ids < k),
+                        seg_ids.astype(jnp.int32), k)
+        s = jnp.zeros(k + 1, jnp.float32).at[ids].add(v)
+        ssq = jnp.zeros(k + 1, jnp.float32).at[ids].add(v * v)
+        cnt = jnp.zeros(k + 1, jnp.float32).at[ids].add(1.0)
+        vmin = jnp.full(k + 1, _ref.POS_BIG, jnp.float32).at[ids].min(v)
+        vmax = jnp.full(k + 1, _ref.NEG_BIG, jnp.float32).at[ids].max(v)
+        return jnp.stack([s, ssq, cnt, vmin, vmax], axis=-1)[:k]
 
     def stratified_moments_flat(self, sample_c, sample_a, sample_leaf,
                                 q_lo, q_hi, k: int, bq: int = 128,

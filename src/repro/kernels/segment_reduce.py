@@ -25,6 +25,23 @@ from jax.experimental import pallas as pl
 from .ref import NEG_BIG, POS_BIG
 
 
+ROW_TILE = 1024            # 8 sublanes x 128 lanes, flattened
+MAX_BN = 2048
+
+
+def auto_block_n(n: int, max_bn: int = MAX_BN, tile: int = ROW_TILE) -> int:
+    """Row-block size for an n-row reduction: the smallest multiple of the
+    (8, 128) flattened register tile that covers n, capped at ``max_bn``.
+
+    Streaming ingest reduces small (B,)-row batches; padding a 512-row
+    batch to the build-path default of 2048 wastes 4x the one-hot VMEM and
+    MXU work, so backends pass ``bn=None`` and let the batch size pick the
+    block."""
+    if n <= 0:
+        return tile
+    return min(max_bn, tile * ((n + tile - 1) // tile))
+
+
 def _kernel(v_ref, id_ref, out_ref, *, bk: int):
     j = pl.program_id(1)          # row-tile index (reduction dim)
     kt = pl.program_id(0)         # segment-tile index
@@ -78,4 +95,4 @@ def segment_reduce(values: jnp.ndarray, seg_ids: jnp.ndarray, k: int,
     return out
 
 
-__all__ = ["segment_reduce"]
+__all__ = ["segment_reduce", "auto_block_n"]

@@ -209,7 +209,6 @@ def mamba2_mix(params, cfg, x, state=None, conv_state=None):
         nC = S // L
         lg = loga.reshape(B, nC, L, H)
         Lc = jnp.cumsum(lg, axis=2)
-        Lprev = Lc - lg
         Lend = Lc[:, :, -1]
         xc = xdt.reshape(B, nC, L, H, hd)
         Bb = Bf.reshape(B, nC, L, n)

@@ -7,7 +7,6 @@ Supports global-norm clipping and a cosine schedule with linear warmup.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 
 @dataclasses.dataclass

@@ -1,0 +1,95 @@
+"""Delta-merge serving: immutable base + device-resident stream delta.
+
+The paper's aggregates are mergeable summaries (§2.4): SUM/SUMSQ/COUNT add,
+MIN/MAX combine. The streamed-rows delta therefore merges into the base
+synopsis with O(k) element-wise ops plus one (num_nodes, k) masked reduce
+that lifts the per-leaf delta onto every internal tree node — all on
+device, so ``snapshot()``-style host round-trips and O(K) re-uploads per
+batch are gone. The subtree incidence matrix is computed once per base
+(host, at ingestor construction) from the explicit child pointers, so it
+works for both the complete-heap 1-D trees and unbalanced KD trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.types import Synopsis, PartitionTree, AGG_COUNT
+from ..kernels.ref import NEG_BIG, POS_BIG
+
+
+def subtree_leaf_matrix(tree: PartitionTree, k: int) -> jnp.ndarray:
+    """(num_nodes, k) bool: leaf j lies in the subtree of node v.
+
+    Host-side, once per base synopsis. Children are stored at higher
+    indices than their parent (heap and KD builders both guarantee this),
+    so one reverse sweep suffices.
+    """
+    left = np.asarray(tree.left)
+    right = np.asarray(tree.right)
+    leaf_id = np.asarray(tree.leaf_id)
+    num_nodes = left.shape[0]
+    mat = np.zeros((num_nodes, k), dtype=bool)
+    for v in range(num_nodes - 1, -1, -1):
+        lid = int(leaf_id[v])
+        if 0 <= lid < k:
+            mat[v, lid] = True
+        for ch in (int(left[v]), int(right[v])):
+            if ch >= 0:
+                assert ch > v, "child stored before parent"
+                mat[v] |= mat[ch]
+    return jnp.asarray(mat)
+
+
+@jax.jit
+def _merge_arrays(base: Synopsis, state, subtree: jnp.ndarray):
+    """Device-only combine; returns the replaced array fields."""
+    delta = state.delta_agg                                    # (k, 5)
+    base_leaf = base.leaf_agg.astype(jnp.float32)
+    leaf_agg = jnp.concatenate(
+        [base_leaf[:, 0:3] + delta[:, 0:3],
+         jnp.minimum(base_leaf[:, 3:4], delta[:, 3:4]),
+         jnp.maximum(base_leaf[:, 4:5], delta[:, 4:5])], axis=1)
+
+    # lift the leaf delta onto every tree node through the subtree mask
+    subf = subtree.astype(jnp.float32)                         # (V, k)
+    d_sums = subf @ delta[:, 0:3]                              # (V, 3)
+    d_min = jnp.min(jnp.where(subtree, delta[:, 3][None], POS_BIG), axis=1)
+    d_max = jnp.max(jnp.where(subtree, delta[:, 4][None], NEG_BIG), axis=1)
+    base_tree = base.tree.agg.astype(jnp.float32)
+    tree_agg = jnp.concatenate(
+        [base_tree[:, 0:3] + d_sums,
+         jnp.minimum(base_tree[:, 3:4], d_min[:, None]),
+         jnp.maximum(base_tree[:, 4:5], d_max[:, None])], axis=1)
+
+    # node boxes: union of current leaf boxes over each subtree
+    d = state.leaf_lo.shape[1]
+    t_lo = [jnp.min(jnp.where(subtree, state.leaf_lo[:, j][None], jnp.inf),
+                    axis=1) for j in range(d)]
+    t_hi = [jnp.max(jnp.where(subtree, state.leaf_hi[:, j][None], -jnp.inf),
+                    axis=1) for j in range(d)]
+    tree_lo = jnp.minimum(base.tree.lo, jnp.stack(t_lo, axis=1))
+    tree_hi = jnp.maximum(base.tree.hi, jnp.stack(t_hi, axis=1))
+    return leaf_agg, tree_agg, tree_lo, tree_hi
+
+
+def merge_synopsis(base: Synopsis, state, subtree: jnp.ndarray, *,
+                   total_rows: int) -> Synopsis:
+    """Serving synopsis = base ⊕ delta (no host transfer of O(K) state)."""
+    leaf_agg, tree_agg, tree_lo, tree_hi = _merge_arrays(base, state, subtree)
+    return dataclasses.replace(
+        base,
+        leaf_lo=state.leaf_lo, leaf_hi=state.leaf_hi,
+        leaf_agg=leaf_agg, n_rows=leaf_agg[:, AGG_COUNT],
+        sample_c=state.sample_c, sample_a=state.sample_a,
+        sample_valid=state.sample_valid,
+        k_per_leaf=state.k_per_leaf,
+        tree=dataclasses.replace(base.tree, agg=tree_agg, lo=tree_lo,
+                                 hi=tree_hi),
+        total_rows=total_rows)
+
+
+__all__ = ["subtree_leaf_matrix", "merge_synopsis"]

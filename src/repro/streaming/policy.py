@@ -1,0 +1,120 @@
+"""Drift-triggered re-optimization (closing the paper's §4.5 open loop).
+
+The paper leaves re-optimization cadence as future work; here a
+:class:`DriftPolicy` thresholds two live signals of the ingestor —
+``staleness`` (fraction of rows streamed since the base build) and
+``oob_frac`` (fraction of streamed rows outside every leaf box, i.e. the
+value distribution moved) — and, when either trips, re-runs the paper's
+starred "Sampling + Discretization" (ADP) optimizer *on device*:
+``dp_monotone_jnp`` over the live reservoir pool yields fresh cuts, and
+the synopsis is rebuilt through the builder's shared assembly tail
+(``synopsis_from_assignment``) with re-stratified samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core import dp as dp_mod
+from ..core.synopsis import synopsis_from_assignment
+from .ingest import StreamingIngestor
+
+
+def reoptimize_cuts(ing: StreamingIngestor, k: int | None = None
+                    ) -> tuple[jnp.ndarray, float]:
+    """On-device re-partitioning: DP over the live reservoir pool.
+
+    Sorts the valid reservoir samples by coordinate, runs the jit-able
+    monotone DP (`dp_monotone_jnp`, SUM oracle) and maps the cut ranks to
+    value-space thresholds. Returns ((k-1,) thresholds, sample-space max
+    variance). 1-D synopses only — KD synopses re-optimize through
+    ``build_synopsis(method='kd')``.
+
+    Caveat: the pooled reservoir is a *per-stratum equal-capacity* sample,
+    not a uniform sample of the current dataset — strata whose population
+    grew far beyond their slot count (exactly what heavy drift produces)
+    are under-represented, so the cuts are drift-adapted but not the cuts
+    a fresh uniform-sample ADP run would pick. The subsequent rebuild's
+    aggregates and samples are exact/fresh either way; see ROADMAP
+    (reservoir-aware budget rebalancing) for the planned fix.
+    """
+    base = ing.base
+    if base.d != 1:
+        raise ValueError("on-device re-optimization supports 1-D synopses; "
+                         "rebuild KD synopses with build_synopsis(method='kd')")
+    k = k or base.num_leaves
+    state = ing.state
+    valid = np.asarray(state.sample_valid).reshape(-1)
+    m = int(valid.sum())
+    if m < k + 1:
+        raise ValueError(f"reservoir pool too small to re-optimize: {m} < {k + 1}")
+    cs = state.sample_c.reshape(-1)
+    as_ = state.sample_a.reshape(-1)
+    order = jnp.argsort(jnp.where(jnp.asarray(valid), cs, jnp.inf))[:m]
+    c_sorted = cs[order]
+    cuts, vmax = dp_mod.dp_monotone_jnp(as_[order], k)
+    thr = dp_mod.cuts_to_thresholds_jnp(c_sorted, cuts)
+    return thr, float(vmax)
+
+
+def reoptimize(ing: StreamingIngestor, c, a, *, k: int | None = None,
+               s_per_leaf: int | None = None, seed: int = 0,
+               backend: str | None = None
+               ) -> tuple[StreamingIngestor, dict]:
+    """Full drift-adapted rebuild: device DP cuts -> shared builder
+    assembly (exact stats + re-stratified samples). ``c``/``a`` are the
+    current full dataset (base + streamed rows, owned by the caller).
+    Returns a fresh ingestor anchored on the re-optimized base plus a
+    report dict.
+    """
+    thr, vmax = reoptimize_cuts(ing, k)
+    k = thr.shape[0] + 1
+    c_np = np.asarray(c, dtype=np.float64).reshape(-1)
+    a_np = np.asarray(a, dtype=np.float64).reshape(-1)
+    assign = np.searchsorted(np.asarray(thr), c_np, side="right"
+                             ).astype(np.int32)
+    if s_per_leaf is None:
+        s_per_leaf = ing.base.sample_c.shape[1]
+    # same assembly tail as build_synopsis (host f64 exact stats)
+    syn, _ = synopsis_from_assignment(c_np, a_np, assign, k,
+                                      s_per_leaf=s_per_leaf, seed=seed)
+    report = {"k": k, "sample_max_variance": vmax,
+              "thresholds": np.asarray(thr),
+              "staleness_at_reopt": ing.staleness(),
+              "oob_frac_at_reopt": ing.oob_frac()}
+    return StreamingIngestor(syn, seed=seed + 1,
+                             backend=backend or ing._backend), report
+
+
+@dataclasses.dataclass
+class DriftPolicy:
+    """Thresholded drift triggers for the re-optimization loop.
+
+    ``staleness_threshold``: re-optimize once this fraction of the dataset
+    arrived after the base build. ``oob_threshold``: re-optimize once this
+    fraction of streamed rows landed outside every leaf box (the partition
+    no longer tiles the data's support). ``min_stream_rows`` suppresses
+    triggers before the signals mean anything.
+    """
+    staleness_threshold: float = 0.25
+    oob_threshold: float = 0.05
+    min_stream_rows: int = 1024
+
+    def should_reoptimize(self, ing: StreamingIngestor) -> bool:
+        if ing.n_stream < self.min_stream_rows:
+            return False
+        return (ing.staleness() >= self.staleness_threshold
+                or ing.oob_frac() >= self.oob_threshold)
+
+    def maybe_reoptimize(self, ing: StreamingIngestor, c, a, **kw
+                         ) -> tuple[StreamingIngestor, dict | None]:
+        """Re-optimize iff a drift signal trips; returns (ingestor, report)
+        where report is None when nothing happened."""
+        if not self.should_reoptimize(ing):
+            return ing, None
+        return reoptimize(ing, c, a, **kw)
+
+
+__all__ = ["DriftPolicy", "reoptimize_cuts", "reoptimize"]

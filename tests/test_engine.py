@@ -8,7 +8,6 @@ import jax.numpy as jnp
 
 from repro.core import build_synopsis, answer, random_queries
 from repro.core import estimators as E
-from repro.core.types import QueryBatch
 from repro.kernels import ops
 from repro.kernels.registry import available_backends, get_backend
 from repro import engine

@@ -45,7 +45,6 @@ def test_aligned_query_exact():
 def test_hard_bounds_always_contain_truth(seed, start, width):
     """§2.3: the deterministic bounds are a 100% confidence interval."""
     c, a, syn = _make(seed=7)  # fixed synopsis; queries vary
-    rng = np.random.default_rng(seed)
     lo_v = start * 100
     hi_v = min(lo_v + width * 100, 100.0)
     q = QueryBatch(lo=jnp.asarray([[lo_v]], jnp.float32),
