@@ -1,9 +1,12 @@
 """CI bench-smoke: tiny-config perf runs -> BENCH_pr.json.
 
-Runs the PASS serving hillclimb and the streaming ingest benchmark in their
-CI-sized configs and writes a flat metric JSON. ``check_regression``
-compares it against the checked-in ``BENCH_baseline.json`` (fails on >2x
-regression). Locally:
+Runs the PASS serving hillclimb, the streaming ingest benchmark, and the
+CI-calibration + build-path smoke in their CI-sized configs and writes a
+flat metric JSON. ``check_regression`` compares it against the checked-in
+``BENCH_baseline.json`` (fails on >2x regression on wall-clock/speedup
+metrics; coverage metrics are informational). The calibration table is
+written next to the metrics JSON (``CI_calibration.json``) and uploaded as
+a workflow artifact. Locally:
 
     PYTHONPATH=src python -m benchmarks.bench_smoke [out.json]
     PYTHONPATH=src python -m benchmarks.check_regression BENCH_pr.json
@@ -11,14 +14,16 @@ regression). Locally:
 from __future__ import annotations
 
 import json
+import pathlib
 import platform
 import sys
 
 from . import bench_streaming_ingest
+from . import fig_ci_calibration
 from . import perf_pass_serving
 
 
-def run() -> dict:
+def run() -> tuple[dict, list]:
     serve_rows, serve_speedup = perf_pass_serving.run(
         **perf_pass_serving.tiny_config())
     stream = bench_streaming_ingest.run(**bench_streaming_ingest.tiny_config())
@@ -28,11 +33,15 @@ def run() -> dict:
         key = name.split("(")[0]                  # strip dynamic suffixes
         metrics[f"serving_{key}_ms"] = t * 1e3
     metrics["serving_multi_aggregate_speedup_x"] = serve_speedup
-    return metrics
+    # uncertainty smoke: empirical coverage + the build-path wall clock
+    cal_metrics, cal_rows = fig_ci_calibration.run(
+        **fig_ci_calibration.tiny_config())
+    metrics.update(cal_metrics)
+    return metrics, cal_rows
 
 
 def main(out_path: str = "BENCH_pr.json") -> None:
-    metrics = run()
+    metrics, cal_rows = run()
     payload = {
         "metrics": metrics,
         "meta": {"python": platform.python_version(),
@@ -42,6 +51,10 @@ def main(out_path: str = "BENCH_pr.json") -> None:
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {out_path} ({len(metrics)} metrics)")
+    cal_path = pathlib.Path(out_path).with_name("CI_calibration.json")
+    with open(cal_path, "w") as f:
+        json.dump({"table": cal_rows}, f, indent=2, sort_keys=True)
+    print(f"wrote {cal_path}")
 
 
 if __name__ == "__main__":

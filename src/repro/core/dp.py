@@ -170,9 +170,26 @@ def dp_monotone_jnp(values_sorted: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jn
     """SUM-kind monotone DP entirely in jnp (lax control flow), returning
     (cuts (k+1,) int32, max variance f32). Same algorithm as `dp_monotone`
     with the Lemma A.3 oracle; used for on-device re-optimization.
+
+    Degenerate configurations are rejected eagerly (shapes are static, so
+    this costs nothing under jit): an empty value vector or more partitions
+    than values would otherwise back-track through garbage parents and
+    surface as silent NaN/duplicated cuts downstream.
     """
     v = values_sorted.astype(jnp.float32)
+    if v.ndim != 1:
+        raise ValueError(f"values_sorted must be 1-D, got shape {v.shape}")
     m = v.shape[0]
+    if m == 0:
+        raise ValueError("dp_monotone_jnp: empty value vector (empty "
+                         "stratum/reservoir) — nothing to partition")
+    if k < 1:
+        raise ValueError(f"dp_monotone_jnp: need k >= 1 partitions, got {k}")
+    if k > m:
+        raise ValueError(
+            f"dp_monotone_jnp: k={k} partitions over m={m} values — the DP "
+            f"needs k <= m (duplicate cut ranks would produce empty leaves "
+            f"and NaN thresholds); reduce k or pool more samples")
     s1, s2 = px.prefix_moments_jnp(v)
 
     def oracle(g, w):
@@ -191,6 +208,10 @@ def dp_monotone_jnp(values_sorted: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jn
 
     i_vec = jnp.arange(m + 1, dtype=jnp.int32)
     A1 = oracle(jnp.zeros(m + 1, jnp.int32), i_vec)
+    if k == 1:
+        # single partition: no DP layers, no parents to back-track (the
+        # scan/backtrack below would index a zero-length parents array)
+        return jnp.asarray([0, m], jnp.int32), A1[m]
     steps = int(np.ceil(np.log2(m + 2)))
 
     def layer(carry, _):
@@ -256,9 +277,28 @@ def cuts_to_thresholds_jnp(sample_c_sorted: jnp.ndarray, cuts: jnp.ndarray
     """Device-side `cuts_to_thresholds`: midpoint thresholds from sorted
     sample coordinates and (k+1,) cut ranks. Used by the streaming
     re-optimization loop (`streaming.policy`) so the whole
-    drift -> DP -> thresholds chain stays on device."""
+    drift -> DP -> thresholds chain stays on device.
+
+    Rejects degenerate static shapes eagerly: an empty coordinate vector
+    (empty stratum/reservoir) or a cut vector too short to bound even one
+    partition would otherwise clip into garbage indices and return silent
+    NaN/duplicated thresholds."""
     c = sample_c_sorted
+    if c.ndim != 1:
+        raise ValueError(f"sample_c_sorted must be 1-D, got shape {c.shape}")
     m = c.shape[0]
+    if m == 0:
+        raise ValueError("cuts_to_thresholds_jnp: empty coordinate vector "
+                         "(empty stratum/reservoir) — no thresholds exist")
+    if cuts.shape[0] < 2:
+        raise ValueError(
+            f"cuts_to_thresholds_jnp: cut vector must hold at least "
+            f"[0, m], got shape {cuts.shape}")
+    if cuts.shape[0] - 1 > m:
+        raise ValueError(
+            f"cuts_to_thresholds_jnp: {cuts.shape[0] - 1} partitions over "
+            f"m={m} samples — duplicate cut ranks would yield duplicated "
+            f"thresholds (empty leaves); reduce k or pool more samples")
     inner = cuts[1:-1].astype(jnp.int32)
     lo_idx = jnp.clip(inner - 1, 0, m - 1)
     hi_idx = jnp.clip(inner, 0, m - 1)

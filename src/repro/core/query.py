@@ -20,14 +20,16 @@ def answer(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
            lam: float = 2.576, use_fpc: bool = True,
            zero_var_rule: bool = True, use_aggregates: bool = True,
            avg_mode: str = "ratio", kinds=None, backend: str | None = None,
-           plan=None):
+           plan=None, ci: float | None = None, ci_method: str = "clt",
+           small_n_threshold: int = 12, n_boot: int = 200, ci_key=None):
     """Single-kind compatibility entry over the layered engine.
 
     Pass ``kinds=(...)`` to answer several aggregate kinds from one shared
     classification + moment pass; the result is then a ``{kind:
     QueryResult}`` dict (see ``repro.engine.answer``). ``backend`` selects a
     registered kernel backend per call; ``plan`` injects a planner
-    ``QueryPlan``.
+    ``QueryPlan``. ``ci=0.95`` returns calibrated intervals through the
+    uncertainty subsystem: ``result.interval()`` is (estimate, lo, hi).
     """
     from .. import engine
     multi = kinds is not None
@@ -36,7 +38,10 @@ def answer(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
     out = engine.answer(syn, queries, kinds=kinds, lam=lam, use_fpc=use_fpc,
                         zero_var_rule=zero_var_rule,
                         use_aggregates=use_aggregates, avg_mode=avg_mode,
-                        backend=backend, plan=plan)
+                        backend=backend, plan=plan, ci=ci,
+                        ci_method=ci_method,
+                        small_n_threshold=small_n_threshold, n_boot=n_boot,
+                        ci_key=ci_key)
     return out if multi else out[kind]
 
 

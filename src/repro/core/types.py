@@ -116,16 +116,33 @@ class QueryBatch:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["estimate", "ci_half", "lower", "upper",
-                      "frac_rows_touched"],
+                      "frac_rows_touched", "ci_lo", "ci_hi"],
          meta_fields=[])
 @dataclasses.dataclass
 class QueryResult:
-    """Estimates + CLT confidence interval + deterministic hard bounds."""
+    """Estimates + confidence interval + deterministic hard bounds.
+
+    ``ci_lo``/``ci_hi`` are populated only by the uncertainty subsystem
+    (``answer(..., ci=level)``): calibrated per-level interval endpoints
+    (CLT + small-stratum fallback, or bootstrap percentiles), clipped into
+    the deterministic hard bounds. Otherwise they are ``None`` and
+    :meth:`interval` falls back to ``estimate -/+ ci_half``.
+    """
     estimate: jax.Array           # (Q,)
     ci_half: jax.Array            # (Q,) lambda * sqrt(sum w^2 V)
     lower: jax.Array              # (Q,) deterministic lower bound (§2.3)
     upper: jax.Array              # (Q,) deterministic upper bound
     frac_rows_touched: jax.Array  # (Q,) fraction of rows NOT skipped (ESS/skip rate)
+    ci_lo: jax.Array | None = None  # (Q,) interval lower endpoint
+    ci_hi: jax.Array | None = None  # (Q,) interval upper endpoint
+
+    def interval(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """(estimate, lo, hi) — the uncertainty subsystem's endpoints when
+        present, the symmetric ``ci_half`` envelope otherwise."""
+        if self.ci_lo is not None and self.ci_hi is not None:
+            return self.estimate, self.ci_lo, self.ci_hi
+        return (self.estimate, self.estimate - self.ci_half,
+                self.estimate + self.ci_half)
 
 
 __all__ = [

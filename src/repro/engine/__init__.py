@@ -6,7 +6,9 @@
   frontier aggregates, stratified moments) computed once per batch through
   the kernel-backend registry.
 * :mod:`assemble` — every requested aggregate kind derived from the shared
-  artifacts: ``answer(syn, queries, kinds=("sum", "count", "avg"))``.
+  artifacts: ``answer(syn, queries, kinds=("sum", "count", "avg"))``;
+  ``answer(..., ci=0.95)`` routes through :mod:`repro.uncertainty` and
+  returns calibrated (estimate, lo, hi) intervals per kind.
 
 ``core.estimators`` remains a thin compatibility shim over this package.
 """

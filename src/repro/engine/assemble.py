@@ -43,6 +43,38 @@ def _fpc(n_rows, k_leaf):
     return jnp.clip((n - k_leaf) / jnp.maximum(n - 1.0, 1.0), 0.0, 1.0)
 
 
+def avg_ratio_terms(syn: Synopsis, art: Artifacts, use_fpc: bool = True):
+    """Shared AVG ratio-estimator pieces (§2.2 with estimated
+    relevant-count weights, exact counts on covered strata).
+
+    Returns (est, C, sampled, var_s, var_c, cov_sc): est/C are (Q,); the
+    per-stratum delta-method variance terms are (Q, k), mask-weighted by
+    the caller. Consumed by both the serving epilogue below and the
+    uncertainty subsystem's interval composition, so intervals are always
+    centered and scaled on the exact estimator being served."""
+    leaf_agg = syn.leaf_agg.astype(jnp.float32)
+    Ni = syn.n_rows.astype(jnp.float32)[None]
+    k_leaf = syn.k_per_leaf.astype(jnp.float32)[None]
+    Ki = jnp.maximum(k_leaf, 1.0)
+    fpc = _fpc(Ni, k_leaf) if use_fpc else jnp.ones_like(Ni)
+    cover = art.cover
+    k_pred, s_sum, s_sumsq = art.k_pred, art.s_sum, art.s_sumsq
+    sampled = art.partial & ~cover & (k_pred >= 1.0)
+    relf = (cover | sampled).astype(jnp.float32)
+    leaf_sum = leaf_agg[:, AGG_SUM][None]
+    leaf_cnt = leaf_agg[:, AGG_COUNT][None]
+    s_hat_i = jnp.where(cover, leaf_sum, Ni / Ki * s_sum) * relf
+    c_hat_i = jnp.where(cover, leaf_cnt, Ni / Ki * k_pred) * relf
+    S = jnp.sum(s_hat_i, axis=1)
+    C = jnp.maximum(jnp.sum(c_hat_i, axis=1), 1.0)
+    est = S / C
+    p = k_pred / Ki
+    var_s = Ni * Ni * jnp.maximum(s_sumsq / Ki - (s_sum / Ki) ** 2, 0.0) / Ki * fpc
+    var_c = Ni * Ni * jnp.maximum(p - p * p, 0.0) / Ki * fpc
+    cov_sc = Ni * Ni * (s_sum / Ki) * (1.0 - p) / Ki * fpc
+    return est, C, sampled, var_s, var_c, cov_sc
+
+
 def assemble(syn: Synopsis, art: Artifacts, kind: str = "sum",
              lam: float = 2.576, use_fpc: bool = True,
              zero_var_rule: bool = True, use_aggregates: bool = True,
@@ -124,19 +156,15 @@ def assemble(syn: Synopsis, art: Artifacts, kind: str = "sum",
             ci = lam * jnp.sqrt(jnp.sum(sampf * (w ** 2) * v_i, axis=1))
         else:
             # Ratio estimator: AVG = est-SUM / est-COUNT, with the §2.2
-            # w_i = N̂_{i,q}/N̂_q weighting (exact counts on covered strata).
-            s_hat_i = jnp.where(cover_like, leaf_sum, Ni / Ki * s_sum) * relf
-            c_hat_i = jnp.where(cover_like, leaf_cnt, Ni / Ki * k_pred) * relf
-            S = jnp.sum(s_hat_i, axis=1)
-            C = jnp.maximum(jnp.sum(c_hat_i, axis=1), 1.0)
-            est = S / C
-            p = k_pred / Ki
-            var_s = Ni * Ni * jnp.maximum(s_sumsq / Ki - (s_sum / Ki) ** 2, 0.0) / Ki * fpc
-            var_c = Ni * Ni * jnp.maximum(p - p * p, 0.0) / Ki * fpc
-            cov_sc = Ni * Ni * (s_sum / Ki) * (1.0 - p) / Ki * fpc
-            VS = jnp.sum(sampf * var_s, axis=1)
-            VC = jnp.sum(sampf * var_c, axis=1)
-            CSC = jnp.sum(sampf * cov_sc, axis=1)
+            # w_i = N̂_{i,q}/N̂_q weighting (exact counts on covered
+            # strata). Estimator + delta-method terms are shared with the
+            # uncertainty subsystem through avg_ratio_terms.
+            est, C, sampled_r, var_s, var_c, cov_sc = avg_ratio_terms(
+                syn, art, use_fpc)
+            sampf_r = sampled_r.astype(jnp.float32)
+            VS = jnp.sum(sampf_r * var_s, axis=1)
+            VC = jnp.sum(sampf_r * var_c, axis=1)
+            CSC = jnp.sum(sampf_r * cov_sc, axis=1)
             var_ratio = jnp.maximum(VS - 2 * est * CSC + est * est * VC, 0.0) / (C * C)
             ci = lam * jnp.sqrt(var_ratio)
 
@@ -174,7 +202,11 @@ def assemble(syn: Synopsis, art: Artifacts, kind: str = "sum",
         lower = jnp.where(sign > 0, sign * opt, sign * est_s)
         upper = jnp.where(sign > 0, sign * est_s, sign * opt)
         ci = jnp.abs(upper - lower) * 0.5  # deterministic envelope, not CLT
-        return QueryResult(est, ci, lower, upper, touched)
+        # The estimate sits at one END of the envelope (the observed
+        # extreme), so a symmetric est +/- ci interval would exclude valid
+        # truths; the envelope itself is the interval.
+        return QueryResult(est, ci, lower, upper, touched,
+                           ci_lo=lower, ci_hi=upper)
 
     raise ValueError(f"unknown kind: {kind}")
 
@@ -203,7 +235,9 @@ def answer(syn: Synopsis, queries: QueryBatch, kinds=("sum",), *,
            lam: float = 2.576, use_fpc: bool = True,
            zero_var_rule: bool = True, use_aggregates: bool = True,
            avg_mode: str = "ratio", backend: str | None = None,
-           plan=None) -> dict[str, QueryResult]:
+           plan=None, ci: float | None = None, ci_method: str = "clt",
+           small_n_threshold: int = 12, n_boot: int = 200,
+           ci_key=None) -> dict[str, QueryResult]:
     """Answer a batch of rectangular aggregate queries for every requested
     aggregate kind from one shared artifact pass.
 
@@ -214,6 +248,14 @@ def answer(syn: Synopsis, queries: QueryBatch, kinds=("sum",), *,
     QueryPlan's frontier for the batched leaf classification.
     ``use_aggregates=False`` disables the exact-cover shortcut and
     deterministic bounds (the ST/US baselines).
+
+    ``ci=level`` (e.g. ``ci=0.95``) routes through the uncertainty
+    subsystem: each QueryResult's ``.interval()`` returns calibrated
+    (estimate, lo, hi) endpoints — exact-covered queries get zero-width
+    intervals, strata with effective n below ``small_n_threshold`` use the
+    Bernstein/range fallback. ``ci_method='bootstrap'`` swaps in the
+    key-threaded Poisson bootstrap (``n_boot`` replicates, ``ci_key`` or
+    the default key 0).
     """
     syn = _executor.resolve_synopsis(syn)
     if isinstance(kinds, str):
@@ -222,6 +264,22 @@ def answer(syn: Synopsis, queries: QueryBatch, kinds=("sum",), *,
     for k in kinds:
         if k not in KINDS:
             raise ValueError(f"unknown kind: {k}")
+    if ci is not None:
+        from .. import uncertainty
+        if ci_method == "clt":
+            return uncertainty.answer_with_ci(
+                syn, queries, kinds, level=ci,
+                small_n_threshold=small_n_threshold, use_fpc=use_fpc,
+                zero_var_rule=zero_var_rule, use_aggregates=use_aggregates,
+                avg_mode=avg_mode, backend=backend, plan=plan)
+        if ci_method == "bootstrap":
+            if "avg" in kinds and avg_mode != "ratio":
+                raise ValueError(
+                    "bootstrap intervals support avg_mode='ratio' only")
+            return uncertainty.poisson_bootstrap(
+                syn, queries, kinds, level=ci, n_boot=n_boot, key=ci_key,
+                use_aggregates=use_aggregates, backend=backend, plan=plan)
+        raise ValueError(f"unknown ci_method: {ci_method!r}")
     _executor.count_artifact_pass(kinds)
     plan_masks = _executor.plan_to_masks(plan)
     from ..kernels.registry import get_backend
@@ -230,4 +288,4 @@ def answer(syn: Synopsis, queries: QueryBatch, kinds=("sum",), *,
                        get_backend(backend).name)
 
 
-__all__ = ["assemble", "answer", "KINDS"]
+__all__ = ["assemble", "answer", "avg_ratio_terms", "KINDS"]

@@ -29,8 +29,10 @@ import jax.numpy as jnp
 from . import ref as _ref
 from .registry import register_backend
 from .segment_reduce import (segment_reduce as _segment_reduce_pallas,
+                             weighted_segment_reduce as _wseg_pallas,
                              auto_block_n)
-from .stratified_estimate import stratified_moments as _strat_pallas
+from .stratified_estimate import (stratified_moments as _strat_pallas,
+                                  stratified_weighted_moments as _wstrat_pallas)
 from .query_eval import query_eval as _query_eval_pallas
 
 D_PAD = 8
@@ -98,6 +100,24 @@ def sample_moments(sample_c, sample_a, sample_valid, q_lo, q_hi):
     return k_pred, s_sum, s_sumsq
 
 
+def weighted_sample_moments(sample_c, sample_a, sample_valid, weights,
+                            q_lo, q_hi):
+    """Per-(query, stratum) weighted relevant-sample moments.
+
+    ``weights`` (k, s) f32 resample weights (the uncertainty subsystem's
+    Poisson bootstrap); invalid slots are masked regardless of weight.
+    Returns (w_pred, ws_sum, ws_sumsq), each (Q, k) f32."""
+    inside = (jnp.all(q_lo[:, None, None, :] <= sample_c[None], axis=-1)
+              & jnp.all(sample_c[None] <= q_hi[:, None, None, :], axis=-1))
+    pred = (inside & sample_valid[None]).astype(jnp.float32)
+    pred = pred * weights.astype(jnp.float32)[None]
+    a = sample_a.astype(jnp.float32)[None]
+    w_pred = jnp.sum(pred, axis=-1)
+    ws_sum = jnp.sum(pred * a, axis=-1)
+    ws_sumsq = jnp.sum(pred * a * a, axis=-1)
+    return w_pred, ws_sum, ws_sumsq
+
+
 def _flat_leaf_ids(sample_valid: jnp.ndarray) -> jnp.ndarray:
     k, s = sample_valid.shape
     return jnp.where(sample_valid.reshape(k * s),
@@ -132,6 +152,22 @@ class KernelBackend:
                                 bk: int = 128, bs: int = 1024):
         raise NotImplementedError
 
+    # -- weighted stratified moments (uncertainty / bootstrap path) ----------
+    def weighted_moments(self, sample_c, sample_a, sample_valid, weights,
+                         q_lo, q_hi, **kw):
+        k, s, d = sample_c.shape
+        w = jnp.where(sample_valid, weights.astype(jnp.float32), 0.0)
+        mom = self.weighted_moments_flat(
+            sample_c.reshape(k * s, d), sample_a.reshape(k * s),
+            _flat_leaf_ids(sample_valid), w.reshape(k * s), q_lo, q_hi, k,
+            **kw)
+        return mom[..., 0], mom[..., 1], mom[..., 2]
+
+    def weighted_moments_flat(self, sample_c, sample_a, sample_leaf, weights,
+                              q_lo, q_hi, k: int, bq: int = 128,
+                              bk: int = 128, bs: int = 1024):
+        raise NotImplementedError
+
     # -- segment reduction ---------------------------------------------------
     # ``bn=None`` sizes the row block to the input (auto_block_n) — the
     # streaming ingest path reduces small batches where the build-path
@@ -142,6 +178,15 @@ class KernelBackend:
         v = _pad_axis(values.astype(jnp.float32), bn, 0)
         ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
         return _ref.segment_reduce_ref(v, ids, k)[:, :5]
+
+    def weighted_segment_reduce(self, values, weights, seg_ids, k: int,
+                                bn: int | None = 2048, bk: int = 256):
+        """Per-segment [sum w*v, sum w*v^2, sum w]. Returns (k, 3)."""
+        bn = bn or auto_block_n(values.shape[0])
+        v = _pad_axis(values.astype(jnp.float32), bn, 0)
+        w = _pad_axis(weights.astype(jnp.float32), bn, 0)
+        ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
+        return _ref.weighted_segment_reduce_ref(v, w, ids, k)
 
     # -- relevant-sample extremes (shared broadcast implementation) ----------
     def sample_extremes(self, sample_c, sample_a, sample_valid, q_lo, q_hi):
@@ -207,6 +252,19 @@ class PallasBackend(KernelBackend):
                             bq=bq, bk=bk, bs=bs, interpret=_interpret())
         return out[:Q, :k]
 
+    def weighted_moments_flat(self, sample_c, sample_a, sample_leaf, weights,
+                              q_lo, q_hi, k: int, bq: int = 128,
+                              bk: int = 128, bs: int = 1024):
+        d = sample_c.shape[1]
+        Q = q_lo.shape[0]
+        c_t, a, leaf, qlo_t, qhi_t = _pad_moment_inputs(
+            sample_c, sample_a, sample_leaf, q_lo, q_hi, bq, bs)
+        w = _pad_axis(weights.astype(jnp.float32), bs, 0)
+        k_pad = k + ((-k) % bk)
+        out = _wstrat_pallas(c_t, a, leaf, w, qlo_t, qhi_t, k_pad, d,
+                             bq=bq, bk=bk, bs=bs, interpret=_interpret())
+        return out[:Q, :k]
+
     def segment_reduce(self, values, seg_ids, k: int, bn: int | None = 2048,
                        bk: int = 256):
         bn = bn or auto_block_n(values.shape[0])
@@ -216,6 +274,17 @@ class PallasBackend(KernelBackend):
         out = _segment_reduce_pallas(v, ids, k_pad, bn=bn, bk=bk,
                                      interpret=_interpret())
         return out[:k, :5]
+
+    def weighted_segment_reduce(self, values, weights, seg_ids, k: int,
+                                bn: int | None = 2048, bk: int = 256):
+        bn = bn or auto_block_n(values.shape[0])
+        v = _pad_axis(values.astype(jnp.float32), bn, 0)
+        w = _pad_axis(weights.astype(jnp.float32), bn, 0)
+        ids = _pad_axis(seg_ids.astype(jnp.int32), bn, 0, fill=-1)
+        k_pad = k + ((-k) % bk)
+        out = _wseg_pallas(v, w, ids, k_pad, bn=bn, bk=bk,
+                           interpret=_interpret())
+        return out[:k, :3]
 
 
 @register_backend("ref")
@@ -241,6 +310,17 @@ class RefBackend(KernelBackend):
             sample_c, sample_a, sample_leaf, q_lo, q_hi, bq, bs)
         return _ref.stratified_moments_ref(c_t, a, leaf, qlo_t, qhi_t, k, d)[:Q]
 
+    def weighted_moments_flat(self, sample_c, sample_a, sample_leaf, weights,
+                              q_lo, q_hi, k: int, bq: int = 128,
+                              bk: int = 128, bs: int = 1024):
+        d = sample_c.shape[1]
+        Q = q_lo.shape[0]
+        c_t, a, leaf, qlo_t, qhi_t = _pad_moment_inputs(
+            sample_c, sample_a, sample_leaf, q_lo, q_hi, bq, bs)
+        w = _pad_axis(weights.astype(jnp.float32), bs, 0)
+        return _ref.stratified_weighted_moments_ref(
+            c_t, a, leaf, w, qlo_t, qhi_t, k, d)[:Q]
+
 
 @register_backend("jnp")
 class JnpBackend(KernelBackend):
@@ -256,6 +336,24 @@ class JnpBackend(KernelBackend):
     def stratified_moments(self, sample_c, sample_a, sample_valid,
                            q_lo, q_hi, **kw):
         return sample_moments(sample_c, sample_a, sample_valid, q_lo, q_hi)
+
+    def weighted_moments(self, sample_c, sample_a, sample_valid, weights,
+                         q_lo, q_hi, **kw):
+        return weighted_sample_moments(sample_c, sample_a, sample_valid,
+                                       weights, q_lo, q_hi)
+
+    def weighted_segment_reduce(self, values, weights, seg_ids, k: int,
+                                bn: int | None = 2048, bk: int = 256):
+        # Scatter formulation, mirroring segment_reduce: O(N) work with a
+        # spill slot for padding/out-of-range ids.
+        v = values.astype(jnp.float32)
+        w = weights.astype(jnp.float32)
+        ids = jnp.where((seg_ids >= 0) & (seg_ids < k),
+                        seg_ids.astype(jnp.int32), k)
+        s = jnp.zeros(k + 1, jnp.float32).at[ids].add(w * v)
+        ssq = jnp.zeros(k + 1, jnp.float32).at[ids].add(w * v * v)
+        wsum = jnp.zeros(k + 1, jnp.float32).at[ids].add(w)
+        return jnp.stack([s, ssq, wsum], axis=-1)[:k]
 
     def segment_reduce(self, values, seg_ids, k: int, bn: int | None = 2048,
                        bk: int = 256):
@@ -288,6 +386,22 @@ class JnpBackend(KernelBackend):
         sq = (predf * (a * a)[None]) @ onehot
         return jnp.stack([kp, sm, sq], axis=-1)
 
+    def weighted_moments_flat(self, sample_c, sample_a, sample_leaf, weights,
+                              q_lo, q_hi, k: int, bq: int = 128,
+                              bk: int = 128, bs: int = 1024):
+        pred = (jnp.all(q_lo[:, None, :] <= sample_c[None], axis=-1)
+                & jnp.all(sample_c[None] <= q_hi[:, None, :], axis=-1)
+                & (sample_leaf >= 0)[None])
+        predf = pred.astype(jnp.float32) * weights.astype(jnp.float32)[None]
+        a = sample_a.astype(jnp.float32)
+        onehot = (sample_leaf[:, None] == jnp.arange(k, dtype=jnp.int32)[None]
+                  ).astype(jnp.float32)            # (S, k)
+        kp = predf @ onehot
+        sm = (predf * a[None]) @ onehot
+        sq = (predf * (a * a)[None]) @ onehot
+        return jnp.stack([kp, sm, sq], axis=-1)
+
 
 __all__ = ["KernelBackend", "PallasBackend", "RefBackend", "JnpBackend",
-           "classify_leaves", "sample_moments", "D_PAD"]
+           "classify_leaves", "sample_moments", "weighted_sample_moments",
+           "D_PAD"]

@@ -42,6 +42,31 @@ def stratified_moments_op(sample_c: jnp.ndarray, sample_a: jnp.ndarray,
         sample_c, sample_a, sample_leaf, q_lo, q_hi, k, bq=bq, bk=bk, bs=bs)
 
 
+def weighted_segment_reduce_op(values: jnp.ndarray, weights: jnp.ndarray,
+                               seg_ids: jnp.ndarray, k: int,
+                               bn: int | None = 2048, bk: int = 256,
+                               backend: str | None = None) -> jnp.ndarray:
+    """Per-segment weighted sums [sum w*v, sum w*v^2, sum w]. Returns (k, 3).
+    Padding rows (seg id -1) must carry weight 0 on the matmul backends;
+    the scatter backend drops them regardless."""
+    return get_backend(backend).weighted_segment_reduce(values, weights,
+                                                        seg_ids, k,
+                                                        bn=bn, bk=bk)
+
+
+def weighted_moments_op(sample_c: jnp.ndarray, sample_a: jnp.ndarray,
+                        sample_leaf: jnp.ndarray, weights: jnp.ndarray,
+                        q_lo: jnp.ndarray, q_hi: jnp.ndarray, k: int,
+                        bq: int = 128, bk: int = 128, bs: int = 1024,
+                        backend: str | None = None) -> jnp.ndarray:
+    """Flattened-sample weighted moments (bootstrap resample pass).
+    sample_c (S, d), sample_a/weights (S,), sample_leaf (S,) int32 (-1 pad,
+    weight 0); q_lo/q_hi (Q, d). Returns (Q, k, 3)."""
+    return get_backend(backend).weighted_moments_flat(
+        sample_c, sample_a, sample_leaf, weights, q_lo, q_hi, k,
+        bq=bq, bk=bk, bs=bs)
+
+
 def query_eval_op(leaf_lo: jnp.ndarray, leaf_hi: jnp.ndarray,
                   leaf_agg: jnp.ndarray, q_lo: jnp.ndarray,
                   q_hi: jnp.ndarray, bq: int = 128, bk: int = 128,
@@ -55,5 +80,6 @@ def query_eval_op(leaf_lo: jnp.ndarray, leaf_hi: jnp.ndarray,
                                            q_lo, q_hi, bq=bq, bk=bk)
 
 
-__all__ = ["segment_reduce_op", "stratified_moments_op", "query_eval_op",
+__all__ = ["segment_reduce_op", "weighted_segment_reduce_op",
+           "stratified_moments_op", "weighted_moments_op", "query_eval_op",
            "backend"]

@@ -29,6 +29,22 @@ def segment_reduce_ref(values: jnp.ndarray, seg_ids: jnp.ndarray, k: int
     return jnp.stack([s, ssq, cnt, vmin, vmax], axis=-1)
 
 
+def weighted_segment_reduce_ref(values: jnp.ndarray, weights: jnp.ndarray,
+                                seg_ids: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-segment weighted sums [sum w*v, sum w*v^2, sum w].
+
+    values/weights (N,) f32; seg_ids (N,) int32 in [0, k) or -1 for padding
+    (padding rows must carry weight 0). Returns (k, 3) f32.
+    """
+    onehot = (seg_ids[:, None] == jnp.arange(k, dtype=jnp.int32)[None]
+              ).astype(jnp.float32)
+    wv = weights * values
+    s = onehot.T @ wv
+    ssq = onehot.T @ (wv * values)
+    wsum = onehot.T @ weights
+    return jnp.stack([s, ssq, wsum], axis=-1)
+
+
 def stratified_moments_ref(c_t: jnp.ndarray, a: jnp.ndarray,
                            leaf: jnp.ndarray, qlo_t: jnp.ndarray,
                            qhi_t: jnp.ndarray, k: int, d: int
@@ -47,6 +63,30 @@ def stratified_moments_ref(c_t: jnp.ndarray, a: jnp.ndarray,
         pred = pred & (qlo_t[j][:, None] <= cj) & (cj <= qhi_t[j][:, None])
     pred = pred & (leaf >= 0)[None, :]
     predf = pred.astype(jnp.float32)
+    onehot = (leaf[:, None] == jnp.arange(k, dtype=jnp.int32)[None]
+              ).astype(jnp.float32)              # (S,k)
+    kp = predf @ onehot                          # (Q,k)
+    sm = (predf * a[None]) @ onehot
+    sq = (predf * (a * a)[None]) @ onehot
+    return jnp.stack([kp, sm, sq], axis=-1)
+
+
+def stratified_weighted_moments_ref(c_t: jnp.ndarray, a: jnp.ndarray,
+                                    leaf: jnp.ndarray, w: jnp.ndarray,
+                                    qlo_t: jnp.ndarray, qhi_t: jnp.ndarray,
+                                    k: int, d: int) -> jnp.ndarray:
+    """Weighted variant of :func:`stratified_moments_ref`: each sample's
+    predicate contribution is scaled by ``w`` (S,) f32 (bootstrap resample
+    weights; padding samples must carry ``w == 0``). Returns (Q, k, 3)
+    [sum w*pred, sum w*pred*a, sum w*pred*a^2]."""
+    S = a.shape[0]
+    Q = qlo_t.shape[1]
+    pred = jnp.ones((Q, S), dtype=jnp.bool_)
+    for j in range(d):
+        cj = c_t[j][None, :]
+        pred = pred & (qlo_t[j][:, None] <= cj) & (cj <= qhi_t[j][:, None])
+    pred = pred & (leaf >= 0)[None, :]
+    predf = pred.astype(jnp.float32) * w[None, :]
     onehot = (leaf[:, None] == jnp.arange(k, dtype=jnp.int32)[None]
               ).astype(jnp.float32)              # (S,k)
     kp = predf @ onehot                          # (Q,k)
@@ -85,5 +125,6 @@ def query_eval_ref(leaf_lo_t: jnp.ndarray, leaf_hi_t: jnp.ndarray,
     return rel, exact
 
 
-__all__ = ["segment_reduce_ref", "stratified_moments_ref", "query_eval_ref",
-           "NEG_BIG", "POS_BIG"]
+__all__ = ["segment_reduce_ref", "weighted_segment_reduce_ref",
+           "stratified_moments_ref", "stratified_weighted_moments_ref",
+           "query_eval_ref", "NEG_BIG", "POS_BIG"]

@@ -95,4 +95,58 @@ def segment_reduce(values: jnp.ndarray, seg_ids: jnp.ndarray, k: int,
     return out
 
 
-__all__ = ["segment_reduce", "auto_block_n"]
+def _kernel_weighted(v_ref, w_ref, id_ref, out_ref, *, bk: int):
+    """Weighted per-segment sums: [sum w*v, sum w*v^2, sum w] per segment.
+
+    The one-hot MXU mapping of ``_kernel`` with the moment matrix scaled by
+    the per-row weight — the reduce the uncertainty subsystem's Poisson
+    bootstrap runs once per resample replicate."""
+    j = pl.program_id(1)
+    kt = pl.program_id(0)
+    v = v_ref[...]                # (BN,)
+    w = w_ref[...]                # (BN,)
+    ids = id_ref[...]             # (BN,)
+    k_base = kt * bk
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (v.shape[0], bk), 1) + k_base
+    onehot = (ids[:, None] == k_iota).astype(jnp.float32)       # (BN, BK)
+    moments = jnp.stack([w * v, w * v * v, w], axis=-1)         # (BN, 3)
+    part = jax.lax.dot_general(onehot, moments,
+                               (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (BK,3)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[:, 0:3] = part
+        out_ref[:, 3:8] = jnp.zeros((bk, 5), jnp.float32)
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[:, 0:3] += part
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "bk", "interpret"))
+def weighted_segment_reduce(values: jnp.ndarray, weights: jnp.ndarray,
+                            seg_ids: jnp.ndarray, k: int,
+                            bn: int = 2048, bk: int = 256,
+                            interpret: bool = True) -> jnp.ndarray:
+    """values/weights (N,) f32, seg_ids (N,) int32 (-1 = padding; padding
+    rows must carry weight 0), N % bn == 0, k % bk == 0.
+    Returns (k, 8): [sum w*v, sum w*v^2, sum w, 0, 0, 0, 0, 0]."""
+    n = values.shape[0]
+    assert n % bn == 0 and k % bk == 0, (n, bn, k, bk)
+    grid = (k // bk, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel_weighted, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda kt, j: (j,)),
+            pl.BlockSpec((bn,), lambda kt, j: (j,)),
+            pl.BlockSpec((bn,), lambda kt, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bk, 8), lambda kt, j: (kt, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 8), jnp.float32),
+        interpret=interpret,
+    )(values, weights, seg_ids)
+
+
+__all__ = ["segment_reduce", "weighted_segment_reduce", "auto_block_n"]

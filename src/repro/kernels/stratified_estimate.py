@@ -22,9 +22,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref, out_ref,
-            *, bk: int, d: int):
-    st = pl.program_id(2)
+def _moment_tile(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref,
+                 *, bk: int, d: int, w=None):
+    """Shared kernel body: the (BQ, BK, 3) moment tile of one grid step.
+
+    ``w`` (BS,) optionally reweights each sample's contribution (the
+    uncertainty subsystem's bootstrap resample weights); ``w=None`` is the
+    plain unweighted pass."""
     kt = pl.program_id(1)
     a = a_ref[...]                        # (BS,)
     leaf = leaf_ref[...]                  # (BS,)
@@ -37,6 +41,8 @@ def _kernel(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref, out_ref,
         hi = qhi_ref[j, :][:, None]
         pred = pred & (lo <= cj) & (cj <= hi)
     predf = pred.astype(jnp.float32)
+    if w is not None:
+        predf = predf * w[None, :]
     k_base = kt * bk
     k_iota = jax.lax.broadcasted_iota(jnp.int32, (bs, bk), 1) + k_base
     onehot = (leaf[:, None] == k_iota).astype(jnp.float32)  # (BS, BK)
@@ -48,7 +54,28 @@ def _kernel(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref, out_ref,
     kp = mm(predf)
     sm = mm(predf * a[None, :])
     sq = mm(predf * (a * a)[None, :])
-    tile = jnp.stack([kp, sm, sq], axis=-1)               # (BQ, BK, 3)
+    return jnp.stack([kp, sm, sq], axis=-1)               # (BQ, BK, 3)
+
+
+def _kernel(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref, out_ref,
+            *, bk: int, d: int):
+    st = pl.program_id(2)
+    tile = _moment_tile(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref, bk=bk, d=d)
+
+    @pl.when(st == 0)
+    def _init():
+        out_ref[...] = tile
+
+    @pl.when(st != 0)
+    def _acc():
+        out_ref[...] += tile
+
+
+def _kernel_weighted(c_ref, a_ref, leaf_ref, w_ref, qlo_ref, qhi_ref,
+                     out_ref, *, bk: int, d: int):
+    st = pl.program_id(2)
+    tile = _moment_tile(c_ref, a_ref, leaf_ref, qlo_ref, qhi_ref, bk=bk, d=d,
+                        w=w_ref[...])
 
     @pl.when(st == 0)
     def _init():
@@ -88,4 +115,38 @@ def stratified_moments(c_t: jnp.ndarray, a: jnp.ndarray, leaf: jnp.ndarray,
     )(c_t, a, leaf, qlo_t, qhi_t)
 
 
-__all__ = ["stratified_moments"]
+@functools.partial(jax.jit,
+                   static_argnames=("k", "d", "bq", "bk", "bs", "interpret"))
+def stratified_weighted_moments(c_t: jnp.ndarray, a: jnp.ndarray,
+                                leaf: jnp.ndarray, w: jnp.ndarray,
+                                qlo_t: jnp.ndarray, qhi_t: jnp.ndarray,
+                                k: int, d: int, bq: int = 128, bk: int = 128,
+                                bs: int = 1024, interpret: bool = True
+                                ) -> jnp.ndarray:
+    """Weighted variant of :func:`stratified_moments`: every sample's
+    predicate contribution is scaled by ``w`` (S,) f32 — the resample-weight
+    pass of the uncertainty subsystem's Poisson bootstrap. Padding samples
+    must carry ``w == 0`` (the adapters enforce it).
+    Returns (Q, k, 3) f32 = [sum w*pred, sum w*pred*a, sum w*pred*a^2]."""
+    d_pad, S = c_t.shape
+    Q = qlo_t.shape[1]
+    assert S % bs == 0 and Q % bq == 0 and k % bk == 0, (S, bs, Q, bq, k, bk)
+    grid = (Q // bq, k // bk, S // bs)
+    return pl.pallas_call(
+        functools.partial(_kernel_weighted, bk=bk, d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_pad, bs), lambda qt, kt, st: (0, st)),
+            pl.BlockSpec((bs,), lambda qt, kt, st: (st,)),
+            pl.BlockSpec((bs,), lambda qt, kt, st: (st,)),
+            pl.BlockSpec((bs,), lambda qt, kt, st: (st,)),
+            pl.BlockSpec((d_pad, bq), lambda qt, kt, st: (0, qt)),
+            pl.BlockSpec((d_pad, bq), lambda qt, kt, st: (0, qt)),
+        ],
+        out_specs=pl.BlockSpec((bq, bk, 3), lambda qt, kt, st: (qt, kt, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q, k, 3), jnp.float32),
+        interpret=interpret,
+    )(c_t, a, leaf, w, qlo_t, qhi_t)
+
+
+__all__ = ["stratified_moments", "stratified_weighted_moments"]

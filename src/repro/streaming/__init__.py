@@ -16,11 +16,11 @@ vectorized batched inserts and delta-merge serving (DESIGN.md §6):
   reservoir pool -> fresh cuts -> rebuild + sample re-stratification.
 """
 from .ingest import StreamingIngestor, StreamState, ingest_batch_reference
-from .delta import merge_synopsis, subtree_leaf_matrix
+from .delta import merge_synopsis, subtree_leaf_matrix, reservoir_moments
 from .policy import DriftPolicy, reoptimize_cuts, reoptimize
 
 __all__ = [
     "StreamingIngestor", "StreamState", "ingest_batch_reference",
-    "merge_synopsis", "subtree_leaf_matrix",
+    "merge_synopsis", "subtree_leaf_matrix", "reservoir_moments",
     "DriftPolicy", "reoptimize_cuts", "reoptimize",
 ]

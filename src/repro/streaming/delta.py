@@ -78,7 +78,13 @@ def _merge_arrays(base: Synopsis, state, subtree: jnp.ndarray):
 
 def merge_synopsis(base: Synopsis, state, subtree: jnp.ndarray, *,
                    total_rows: int) -> Synopsis:
-    """Serving synopsis = base ⊕ delta (no host transfer of O(K) state)."""
+    """Serving synopsis = base ⊕ delta (no host transfer of O(K) state).
+
+    The merged sample arrays ARE the live reservoir, so downstream interval
+    estimation (``answer(..., ci=level)`` through ``repro.uncertainty``)
+    computes delta-stratum variances from the reservoir's current moments
+    and sample counts — no separate moment snapshot is needed.
+    """
     leaf_agg, tree_agg, tree_lo, tree_hi = _merge_arrays(base, state, subtree)
     return dataclasses.replace(
         base,
@@ -92,4 +98,20 @@ def merge_synopsis(base: Synopsis, state, subtree: jnp.ndarray, *,
         total_rows=total_rows)
 
 
-__all__ = ["subtree_leaf_matrix", "merge_synopsis"]
+@jax.jit
+def reservoir_moments(state) -> jnp.ndarray:
+    """(k, 3) f32 per-stratum live-reservoir moments [n, mean, var].
+
+    The uncertainty subsystem's streaming diagnostics: the per-stratum
+    sample mean/variance the interval composition will see when serving
+    from the delta-merged state (masked over valid reservoir slots)."""
+    valid = state.sample_valid.astype(jnp.float32)           # (k, s)
+    n = jnp.sum(valid, axis=1)
+    nn = jnp.maximum(n, 1.0)
+    a = state.sample_a.astype(jnp.float32)
+    mean = jnp.sum(valid * a, axis=1) / nn
+    var = jnp.maximum(jnp.sum(valid * a * a, axis=1) / nn - mean ** 2, 0.0)
+    return jnp.stack([n, mean, var], axis=-1)
+
+
+__all__ = ["subtree_leaf_matrix", "merge_synopsis", "reservoir_moments"]

@@ -161,8 +161,7 @@ def _batch_occupancy(leaf: jnp.ndarray) -> jnp.ndarray:
     return jnp.zeros(b, jnp.int32).at[order].set(occ_sorted)
 
 
-@partial(jax.jit, static_argnames=("backend_name",))
-def _ingest_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
+def _ingest_core(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
                  u: jnp.ndarray, backend_name: str) -> StreamState:
     """One ingested batch -> new state (pure; all counters device-side)."""
     be = get_backend(backend_name)
@@ -222,6 +221,24 @@ def _ingest_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
         oob=state.oob + oob.astype(jnp.int32))
 
 
+@partial(jax.jit, static_argnames=("backend_name",))
+def _ingest_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
+                 u: jnp.ndarray, backend_name: str) -> StreamState:
+    """Explicit-uniforms entry (tests / oracle replay)."""
+    return _ingest_core(state, c, a, u, backend_name)
+
+
+@partial(jax.jit, static_argnames=("backend_name",))
+def _ingest_step_keyed(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
+                       key: jax.Array, backend_name: str) -> StreamState:
+    """PRNG-key entry: the reservoir-replacement uniforms are drawn from
+    ``key`` *inside* the jitted step (threefry is bit-stable across jax
+    versions, so a seeded ingest sequence is reproducible everywhere —
+    unlike the host numpy Generator this replaces)."""
+    u = jax.random.uniform(key, (a.shape[0],), jnp.float32)
+    return _ingest_core(state, c, a, u, backend_name)
+
+
 def init_state(base: Synopsis) -> StreamState:
     """Fresh delta state anchored on an immutable base synopsis."""
     k = base.num_leaves
@@ -250,13 +267,16 @@ class StreamingIngestor:
     """
 
     def __init__(self, base: Synopsis, *, seed: int = 0,
-                 backend: str | None = None):
+                 key: jax.Array | None = None, backend: str | None = None):
         from .delta import subtree_leaf_matrix
         self.base = base
         self.state = init_state(base)
         self._subtree = subtree_leaf_matrix(base.tree, base.num_leaves)
         self._backend = get_backend(backend).name
-        self._rng = np.random.default_rng(seed)
+        # Explicit PRNG key threaded through reservoir replacement: each
+        # ingest() splits off a per-batch subkey, so a seeded sequence is
+        # deterministic across hosts and jax versions (threefry-stable).
+        self._key = key if key is not None else jax.random.PRNGKey(seed)
         self.n_stream = 0
         self._merged: Synopsis | None = None
 
@@ -264,8 +284,10 @@ class StreamingIngestor:
     def ingest(self, c_rows, a_vals, u=None) -> "StreamingIngestor":
         """Ingest a (B, d) coordinate batch + (B,) value batch.
 
-        The wrapper stays sync-free: everything per-batch happens inside
-        one jitted step (reuse a fixed batch size to hit the jit cache).
+        The wrapper stays sync-free: everything per-batch — including the
+        reservoir uniforms, drawn from the threaded PRNG key when ``u`` is
+        not supplied — happens inside one jitted step (reuse a fixed batch
+        size to hit the jit cache).
         """
         c = jnp.asarray(c_rows, jnp.float32)
         if c.ndim == 1:
@@ -273,9 +295,12 @@ class StreamingIngestor:
         a = jnp.reshape(jnp.asarray(a_vals, jnp.float32), (-1,))
         b = a.shape[0]
         if u is None:
-            u = self._rng.random(b, dtype=np.float32)
-        u = jnp.asarray(u, jnp.float32)
-        self.state = _ingest_step(self.state, c, a, u, self._backend)
+            self._key, sub = jax.random.split(self._key)
+            self.state = _ingest_step_keyed(self.state, c, a, sub,
+                                            self._backend)
+        else:
+            u = jnp.asarray(u, jnp.float32)
+            self.state = _ingest_step(self.state, c, a, u, self._backend)
         self.n_stream += b
         self._merged = None
         return self

@@ -1,0 +1,23 @@
+"""Uncertainty subsystem: trustworthy intervals over the PASS engine
+(DESIGN.md §7).
+
+The paper's reliability thesis — exact-covered strata contribute zero
+variance, so intervals tighten as the aggregate tree answers more of the
+predicate — lives here as two estimators over the executor's shared
+one-pass artifacts:
+
+* :mod:`intervals` — stratified CLT composition with finite-population
+  correction, exactly-zero variance on planner-resolved strata, and
+  empirical-Bernstein / range fallbacks for small-effective-n strata;
+* :mod:`bootstrap` — a deterministic key-threaded on-device Poisson
+  bootstrap (weighted one-pass kernels) as a cross-check for non-linear
+  aggregates.
+
+Serving entry point: ``engine.answer(syn, queries, kinds, ci=0.95)``
+returns QueryResults whose ``.interval()`` is (estimate, lo, hi).
+"""
+from .intervals import normal_quantile, compose_interval, answer_with_ci
+from .bootstrap import poisson_bootstrap, BOOT_KINDS
+
+__all__ = ["normal_quantile", "compose_interval", "answer_with_ci",
+           "poisson_bootstrap", "BOOT_KINDS"]

@@ -1,0 +1,147 @@
+"""Deterministic, key-threaded on-device Poisson bootstrap (DESIGN.md §7).
+
+Cross-check estimator for non-linear aggregates (AVG = ratio of two HT
+estimates, where the delta-method CLT is only asymptotically valid): each
+replicate draws i.i.d. Poisson(1) resample weights over the stratified
+sample — the streaming-friendly surrogate for multinomial resampling, one
+weight per sample, no index shuffling — and re-runs the per-stratum
+estimate through the *weighted* one-pass kernels:
+
+* per-(query, stratum) weighted relevant moments via the registry's
+  ``weighted_moments`` op (the Pallas ``stratified_estimate`` kernel with a
+  resample-weight operand);
+* per-stratum resampled sizes ``K*_i = sum_j w_j`` via the Pallas-backed
+  ``weighted_segment_reduce`` (one query-independent reduce per replicate),
+  used for the Hájek normalization ``N_i / K*_i`` that keeps AVG replicates
+  scale-stable when a stratum resamples light or heavy.
+
+Everything runs in one ``lax.scan`` over replicates inside a single jit;
+randomness is threaded from a single PRNG key with ``fold_in(key, r)``, so
+a given (key, n_boot) is bit-reproducible across runs and jax versions.
+Exact-covered strata enter every replicate through the artifact stage's
+exact accumulation with no resample noise, so fully exact-covered queries
+produce zero-width percentile intervals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import (QueryBatch, QueryResult, AGG_SUM, AGG_COUNT)
+from ..engine import executor as _executor
+from ..engine.assemble import assemble as _assemble_kind
+from ..kernels.registry import get_backend
+
+BOOT_KINDS = ("sum", "count", "avg")
+
+
+def _flat_samples(syn):
+    k, s, d = syn.sample_c.shape
+    leaf = jnp.where(syn.sample_valid.reshape(k * s),
+                     jnp.repeat(jnp.arange(k, dtype=jnp.int32), s), -1)
+    return (syn.sample_c.reshape(k * s, d), syn.sample_a.reshape(k * s),
+            leaf)
+
+
+def _replicate_estimates(syn, art, queries, key, r, kinds, normalize,
+                         backend_name):
+    """One bootstrap replicate: (kind -> (Q,) estimate)."""
+    be = get_backend(backend_name)
+    sc, sa, leaf = _flat_samples(syn)
+    k = syn.num_leaves
+    w = jax.random.poisson(jax.random.fold_in(key, r), 1.0,
+                           (sa.shape[0],)).astype(jnp.float32)
+    w = jnp.where(leaf >= 0, w, 0.0)
+    mom = be.weighted_moments_flat(sc, sa, leaf, w, queries.lo, queries.hi, k)
+    w_pred, ws_sum = mom[..., 0], mom[..., 1]
+    Ni = syn.n_rows.astype(jnp.float32)[None]
+    Ki = jnp.maximum(syn.k_per_leaf.astype(jnp.float32)[None], 1.0)
+    if normalize == "hajek":
+        k_star = be.weighted_segment_reduce(sa, w, leaf, k)[:, 2][None]
+        scale = Ni / jnp.maximum(k_star, 1.0)
+    else:                                   # 'ht': fixed design scale
+        scale = Ni / Ki
+    partf = (art.partial & ~art.cover).astype(jnp.float32)
+    s_part = jnp.sum(partf * scale * ws_sum, axis=1)
+    c_part = jnp.sum(partf * scale * w_pred, axis=1)
+    out = {}
+    if "sum" in kinds:
+        out["sum"] = art.exact[:, AGG_SUM] + s_part
+    if "count" in kinds:
+        out["count"] = art.exact[:, AGG_COUNT] + c_part
+    if "avg" in kinds:
+        S = art.exact[:, AGG_SUM] + s_part
+        C = jnp.maximum(art.exact[:, AGG_COUNT] + c_part, 1.0)
+        out["avg"] = S / C
+    return out
+
+
+@partial(jax.jit, static_argnames=("kinds", "n_boot", "level", "normalize",
+                                   "use_aggregates", "backend_name"))
+def _bootstrap_jit(syn, queries, plan_masks, key, kinds, n_boot, level,
+                   normalize, use_aggregates, backend_name):
+    art = _executor.compute_artifacts(syn, queries, kinds,
+                                      use_aggregates=use_aggregates,
+                                      backend_name=backend_name,
+                                      plan_masks=plan_masks)
+
+    def step(carry, r):
+        est = _replicate_estimates(syn, art, queries, key, r, kinds,
+                                   normalize, backend_name)
+        return carry, jnp.stack([est[k] for k in kinds], axis=0)   # (K, Q)
+
+    _, reps = jax.lax.scan(step, 0, jnp.arange(n_boot))            # (R, K, Q)
+    alpha = (1.0 - level) / 2.0
+    qs = jnp.quantile(reps, jnp.asarray([alpha, 1.0 - alpha]), axis=0)
+    out = {}
+    for i, kind in enumerate(kinds):
+        res = _assemble_kind(syn, art, kind,
+                                 use_aggregates=use_aggregates)
+        lo, hi = qs[0, i], qs[1, i]
+        if use_aggregates:
+            lo = jnp.clip(lo, res.lower, res.upper)
+            hi = jnp.clip(hi, res.lower, res.upper)
+        out[kind] = dataclasses.replace(
+            res, ci_half=0.5 * (hi - lo), ci_lo=lo, ci_hi=hi)
+    return out
+
+
+def poisson_bootstrap(syn, queries: QueryBatch, kinds=("avg",), *,
+                      level: float = 0.95, n_boot: int = 200,
+                      key: jax.Array | None = None, seed: int = 0,
+                      normalize: str = "hajek", use_aggregates: bool = True,
+                      backend: str | None = None,
+                      plan=None) -> dict[str, QueryResult]:
+    """Percentile bootstrap intervals for ``kinds`` (subset of SUM/COUNT/
+    AVG). Returns ``{kind: QueryResult}`` with ``ci_lo``/``ci_hi`` set to
+    the (1-level)/2 replicate percentiles and ``estimate`` the plain
+    (non-resampled) estimator.
+
+    ``key`` (or ``seed``) fully determines the resample weights —
+    replicates use ``fold_in(key, r)``, so results are bit-reproducible.
+    ``normalize='hajek'`` rescales each stratum by its resampled size
+    (recommended for AVG); ``'ht'`` keeps the fixed N_i/K_i design scale.
+    """
+    if not 0.0 < level < 1.0:
+        raise ValueError(f"confidence level must be in (0, 1), got {level}")
+    if normalize not in ("hajek", "ht"):
+        raise ValueError(f"unknown normalize: {normalize!r}")
+    kinds = (kinds,) if isinstance(kinds, str) else tuple(kinds)
+    for kind in kinds:
+        if kind not in BOOT_KINDS:
+            raise ValueError(f"bootstrap supports {BOOT_KINDS}, got {kind!r}")
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    syn = _executor.resolve_synopsis(syn)
+    _executor.count_artifact_pass(kinds)
+    return _bootstrap_jit(syn, queries, _executor.plan_to_masks(plan), key,
+                          kinds=kinds, n_boot=int(n_boot),
+                          level=float(level), normalize=normalize,
+                          use_aggregates=use_aggregates,
+                          backend_name=get_backend(backend).name)
+
+
+__all__ = ["poisson_bootstrap", "BOOT_KINDS"]

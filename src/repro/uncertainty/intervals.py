@@ -1,0 +1,242 @@
+"""Stratified confidence intervals with exact-strata zeroing and
+small-stratum fallbacks (paper §2.1.1, §3.3; DESIGN.md §7).
+
+The PASS reliability claim — intervals shrink as more of the predicate is
+answered exactly — is reproduced here as a per-stratum composition over the
+executor's shared artifacts:
+
+* strata the planner/classifier resolves exactly (covered nodes of the
+  Algorithm 1 DFS, or whole covered leaves) contribute **exactly zero**
+  variance, so fully exact-covered queries return zero-width intervals
+  bit-identical to the exact answer;
+* sampled strata with a healthy effective sample size use the CLT
+  per-stratum variance with the finite-population correction;
+* sampled strata whose effective n (`k_pred`, the relevant-sample count)
+  falls below ``small_n_threshold`` leave the CLT regime: their CLT term is
+  replaced by an empirical-Bernstein bound (Maurer–Pontil) on the stratum
+  contribution, built from the same one-pass moments plus the stratum's
+  exact value range — and by the deterministic range bound when the stratum
+  holds no samples at all (where the CLT would silently report zero
+  variance, the failure mode "Joins on Samples" documents);
+* interval endpoints are clipped into the §2.3 deterministic hard bounds
+  (truth always lies inside them, so clipping only tightens).
+
+The composed half-width is ``z * sqrt(sum CLT variances) + sum fallback
+half-widths`` — sub-additive, hence conservative for the fallback strata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from ..core.types import (Synopsis, QueryBatch, QueryResult,
+                          AGG_MIN, AGG_MAX)
+from ..engine import executor as _executor
+from ..engine.assemble import assemble as _assemble_kind, avg_ratio_terms
+
+
+def _z_of(level) -> jnp.ndarray:
+    """Two-sided standard-normal quantile as a (traceable) jnp scalar."""
+    return ndtri(0.5 + jnp.float32(level) / 2.0)
+
+
+def normal_quantile(level: float) -> float:
+    """Two-sided standard-normal quantile: z with P(|N(0,1)| <= z) = level.
+    Host-eager entry (validates the level); traced code uses :func:`_z_of`.
+    """
+    if not 0.0 < level < 1.0:
+        raise ValueError(f"confidence level must be in (0, 1), got {level}")
+    return float(_z_of(level))
+
+
+def _fpc(n_rows, k_leaf):
+    n = jnp.maximum(n_rows, 1.0)
+    return jnp.clip((n - k_leaf) / jnp.maximum(n - 1.0, 1.0), 0.0, 1.0)
+
+
+def _stratum_terms(syn: Synopsis, art, kind: str, use_fpc: bool):
+    """Per-(query, stratum) CLT variance + empirical-Bernstein ingredients
+    for one linear kind ('sum' | 'count').
+
+    Returns (v_clt, var_hat, range_hi, range_lo, no_sample_half), each
+    (Q, k) f32, where v_clt is the CLT variance of the stratum's estimate
+    contribution, var_hat the empirical variance of the per-sample
+    contribution phi, [range_lo, range_hi] the support of phi from the
+    stratum's exact MIN/MAX aggregates, and no_sample_half the
+    deterministic half-width used when the stratum holds zero samples.
+    """
+    leaf_agg = syn.leaf_agg.astype(jnp.float32)
+    Ni = syn.n_rows.astype(jnp.float32)[None]
+    k_leaf = syn.k_per_leaf.astype(jnp.float32)[None]
+    Ki = jnp.maximum(k_leaf, 1.0)
+    fpc = _fpc(Ni, k_leaf) if use_fpc else jnp.ones_like(Ni)
+    leaf_min = leaf_agg[:, AGG_MIN][None]
+    leaf_max = leaf_agg[:, AGG_MAX][None]
+
+    if kind == "sum":
+        mean_phi = art.s_sum / Ki                       # E[pred * a]
+        mean_phi2 = art.s_sumsq / Ki
+        range_lo = jnp.minimum(leaf_min, 0.0)           # phi support
+        range_hi = jnp.maximum(leaf_max, 0.0)
+        no_sample_half = Ni * jnp.maximum(range_hi, -range_lo)
+    elif kind == "count":
+        mean_phi = art.k_pred / Ki                      # E[pred]
+        mean_phi2 = mean_phi
+        range_lo = jnp.zeros_like(Ni)
+        range_hi = jnp.ones_like(Ni)
+        no_sample_half = Ni
+    else:
+        raise ValueError(f"no stratum terms for kind: {kind}")
+
+    var_hat = jnp.maximum(mean_phi2 - mean_phi ** 2, 0.0)
+    v_clt = Ni * Ni * var_hat / Ki * fpc
+    return v_clt, var_hat * fpc, range_hi, range_lo, no_sample_half
+
+
+def _fallback_half(syn: Synopsis, var_hat, range_hi, range_lo,
+                   no_sample_half, log_term):
+    """(Q, k) empirical-Bernstein half-width of each stratum's contribution:
+    Ni * (sqrt(2 V L / K) + 3 R L / K), degrading to the deterministic range
+    bound for strata with zero allocated samples."""
+    Ni = syn.n_rows.astype(jnp.float32)[None]
+    k_leaf = syn.k_per_leaf.astype(jnp.float32)[None]
+    Ki = jnp.maximum(k_leaf, 1.0)
+    rng = jnp.maximum(range_hi - range_lo, 0.0)
+    bern = Ni * (jnp.sqrt(2.0 * var_hat * log_term / Ki)
+                 + 3.0 * rng * log_term / Ki)
+    return jnp.where(k_leaf > 0, bern, no_sample_half)
+
+
+def compose_interval(syn: Synopsis, art, kind: str, level: float,
+                     small_n_threshold: int = 12, use_fpc: bool = True,
+                     avg_mode: str = "ratio"):
+    """Half-width of the ``level`` interval for one kind from shared
+    artifacts. Returns (half, n_fallback) with half (Q,) f32 and
+    n_fallback (Q,) the number of strata answered by the fallback bound.
+
+    Exact strata are forced to exactly zero variance: every term below is
+    masked to sampled (partial, non-covered) strata, so a query whose MCF is
+    all covered nodes accumulates an empty sum and ``half == 0.0``.
+    """
+    z = _z_of(level)
+    delta = 1.0 - level
+    log_term = jnp.float32(jnp.log(3.0 / delta))
+    sampled = art.partial & ~art.cover
+    sampf = sampled.astype(jnp.float32)
+    k_pred = art.k_pred
+    fb = sampled & (k_pred < float(small_n_threshold))
+    fbf = fb.astype(jnp.float32)
+    cltf = sampf * (1.0 - fbf)
+    n_fallback = jnp.sum(fbf, axis=1)
+
+    if kind in ("sum", "count"):
+        v_clt, var_hat, r_hi, r_lo, ns_half = _stratum_terms(
+            syn, art, kind, use_fpc)
+        half_clt = z * jnp.sqrt(jnp.sum(cltf * v_clt, axis=1))
+        h_fb = _fallback_half(syn, var_hat, r_hi, r_lo, ns_half, log_term)
+        # where-mask, not multiply: empty leaves carry +/-inf extremes and
+        # 0 * inf would leak NaN through a multiplicative mask
+        return (half_clt + jnp.sum(jnp.where(fb, h_fb, 0.0), axis=1),
+                n_fallback)
+
+    if kind == "avg":
+        if avg_mode != "ratio":
+            raise ValueError(
+                "calibrated intervals support avg_mode='ratio' only")
+        # The exact estimator being served + its delta-method terms come
+        # from the assembler's shared helper, so the interval is centered
+        # and scaled on the same ratio estimate.
+        est, C, sampled_r, var_s, var_c, cov_sc = avg_ratio_terms(
+            syn, art, use_fpc)
+        clt_r = (sampled_r & ~fb).astype(jnp.float32)
+        VS = jnp.sum(clt_r * var_s, axis=1)
+        VC = jnp.sum(clt_r * var_c, axis=1)
+        CSC = jnp.sum(clt_r * cov_sc, axis=1)
+        var_ratio = jnp.maximum(VS - 2 * est * CSC + est * est * VC, 0.0) \
+            / (C * C)
+        half_clt = z * jnp.sqrt(var_ratio)
+        # Fallback strata perturb both numerator and denominator:
+        # |S/C - S*/C*| <= (hS + |est| hC) / max(C - hC, 1).
+        _, vh_sum, rhi_s, rlo_s, ns_s = _stratum_terms(
+            syn, art, "sum", use_fpc)
+        _, vh_cnt, rhi_c, rlo_c, ns_c = _stratum_terms(
+            syn, art, "count", use_fpc)
+        hS = jnp.sum(jnp.where(fb, _fallback_half(syn, vh_sum, rhi_s, rlo_s,
+                                                  ns_s, log_term), 0.0),
+                     axis=1)
+        hC = jnp.sum(jnp.where(fb, _fallback_half(syn, vh_cnt, rhi_c, rlo_c,
+                                                  ns_c, log_term), 0.0),
+                     axis=1)
+        half_fb = (hS + jnp.abs(est) * hC) / jnp.maximum(C - hC, 1.0)
+        return half_clt + half_fb, n_fallback
+
+    raise ValueError(f"no interval composition for kind: {kind}")
+
+
+def _with_interval(res: QueryResult, half, clip_bounds: bool) -> QueryResult:
+    lo = res.estimate - half
+    hi = res.estimate + half
+    if clip_bounds:
+        # Truth always lies inside the deterministic hard bounds, so the
+        # clip preserves coverage while tightening the interval.
+        lo = jnp.clip(lo, res.lower, res.upper)
+        hi = jnp.clip(hi, res.lower, res.upper)
+    return dataclasses.replace(res, ci_half=half, ci_lo=lo, ci_hi=hi)
+
+
+@partial(jax.jit, static_argnames=("kinds", "level", "small_n_threshold",
+                                   "use_fpc", "zero_var_rule",
+                                   "use_aggregates", "avg_mode",
+                                   "backend_name"))
+def _ci_answer_jit(syn, queries, plan_masks, kinds, level, small_n_threshold,
+                   use_fpc, zero_var_rule, use_aggregates, avg_mode,
+                   backend_name):
+    """One compiled program: one artifact stage feeding every requested
+    kind's estimate epilogue AND its interval composition."""
+    z = _z_of(level)
+    art = _executor.compute_artifacts(syn, queries, kinds,
+                                      use_aggregates=use_aggregates,
+                                      backend_name=backend_name,
+                                      plan_masks=plan_masks)
+    out = {}
+    for kind in kinds:
+        res = _assemble_kind(syn, art, kind, z, use_fpc, zero_var_rule,
+                                 use_aggregates, avg_mode)
+        if kind in ("sum", "count", "avg"):
+            half, _ = compose_interval(syn, art, kind, level,
+                                       small_n_threshold=small_n_threshold,
+                                       use_fpc=use_fpc, avg_mode=avg_mode)
+            out[kind] = _with_interval(res, half, clip_bounds=use_aggregates)
+        else:
+            # MIN/MAX: assemble already sets the deterministic envelope as
+            # the interval (the estimate sits at one end of it).
+            out[kind] = res
+    return out
+
+
+def answer_with_ci(syn, queries: QueryBatch, kinds, *, level: float,
+                   small_n_threshold: int = 12, use_fpc: bool = True,
+                   zero_var_rule: bool = True, use_aggregates: bool = True,
+                   avg_mode: str = "ratio", backend: str | None = None,
+                   plan=None) -> dict[str, QueryResult]:
+    """`engine.answer(..., ci=level)` backend: every requested kind's
+    QueryResult carries calibrated ``ci_lo``/``ci_hi`` endpoints (and
+    ``ci_half`` set to the composed half-width), from ONE artifact pass."""
+    normal_quantile(level)                       # validate eagerly
+    from ..kernels.registry import get_backend
+    syn = _executor.resolve_synopsis(syn)
+    kinds = tuple(kinds)
+    _executor.count_artifact_pass(kinds)
+    return _ci_answer_jit(syn, queries, _executor.plan_to_masks(plan),
+                          kinds=kinds, level=float(level),
+                          small_n_threshold=int(small_n_threshold),
+                          use_fpc=use_fpc, zero_var_rule=zero_var_rule,
+                          use_aggregates=use_aggregates, avg_mode=avg_mode,
+                          backend_name=get_backend(backend).name)
+
+
+__all__ = ["normal_quantile", "compose_interval", "answer_with_ci"]

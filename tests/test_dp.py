@@ -124,3 +124,42 @@ def test_adp_partition_end_to_end():
     # the high-variance region (c > 80) should receive several partitions
     hi = np.unique(assign[c > 80])
     assert len(hi) >= 3
+
+
+def test_dp_monotone_jnp_rejects_degenerate_inputs():
+    """Satellite: k > m / empty inputs raise a clear error instead of
+    back-tracking through garbage parents into silent NaN cuts."""
+    import jax.numpy as jnp
+    vals = jnp.asarray(np.arange(6, dtype=np.float32))
+    with pytest.raises(ValueError, match="k=8 partitions over m=6"):
+        dp_mod.dp_monotone_jnp(vals, 8)
+    with pytest.raises(ValueError, match="empty value vector"):
+        dp_mod.dp_monotone_jnp(jnp.zeros((0,), jnp.float32), 2)
+    with pytest.raises(ValueError, match="k >= 1"):
+        dp_mod.dp_monotone_jnp(vals, 0)
+    with pytest.raises(ValueError, match="must be 1-D"):
+        dp_mod.dp_monotone_jnp(jnp.zeros((3, 2), jnp.float32), 2)
+    # boundary cases stay legal: k == m and k == 1
+    cuts, _ = dp_mod.dp_monotone_jnp(vals, 6)
+    assert int(cuts[0]) == 0 and int(cuts[-1]) == 6
+    cuts1, _ = dp_mod.dp_monotone_jnp(vals, 1)
+    assert np.array_equal(np.asarray(cuts1), [0, 6])
+
+
+def test_cuts_to_thresholds_jnp_rejects_degenerate_inputs():
+    import jax.numpy as jnp
+    c = jnp.asarray(np.arange(8, dtype=np.float32))
+    with pytest.raises(ValueError, match="empty coordinate vector"):
+        dp_mod.cuts_to_thresholds_jnp(jnp.zeros((0,), jnp.float32),
+                                      jnp.asarray([0, 0]))
+    with pytest.raises(ValueError, match="at least"):
+        dp_mod.cuts_to_thresholds_jnp(c, jnp.asarray([0]))
+    with pytest.raises(ValueError, match="partitions over"):
+        dp_mod.cuts_to_thresholds_jnp(
+            jnp.asarray([1.0, 2.0]), jnp.asarray([0, 1, 1, 2]))
+    with pytest.raises(ValueError, match="must be 1-D"):
+        dp_mod.cuts_to_thresholds_jnp(jnp.zeros((3, 1), jnp.float32),
+                                      jnp.asarray([0, 3]))
+    # legal path unchanged: thresholds are midpoints between cut neighbours
+    thr = dp_mod.cuts_to_thresholds_jnp(c, jnp.asarray([0, 4, 8]))
+    np.testing.assert_allclose(np.asarray(thr), [3.5])

@@ -1,0 +1,344 @@
+"""Uncertainty subsystem: zero-width exact intervals (bit-identical to the
+exact answer), empirical coverage within tolerance of nominal, small-stratum
+fallbacks, deterministic key-threaded bootstrap, and weighted-kernel
+backend agreement."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st
+
+from repro import engine, uncertainty
+from repro.core import build_synopsis, ground_truth, random_queries
+from repro.core.types import QueryBatch
+from repro.kernels import ops
+
+
+def _make(seed=0, n=20000, k=16, samples_per_leaf=64):
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.lognormal(0, 1, n) * (1 + np.sin(c / 5))
+    syn, _ = build_synopsis(c, a, k=k, sample_budget=k * samples_per_leaf,
+                            method="eq", seed=seed)
+    return c, a, syn
+
+
+def _aligned_queries(syn, spans=((0, -1), (2, 9))):
+    """Queries exactly covering leaf-box runs: answered purely exactly."""
+    blo = np.asarray(syn.leaf_lo)[:, 0]
+    bhi = np.asarray(syn.leaf_hi)[:, 0]
+    lo = [[blo[i]] for i, _ in spans]
+    hi = [[bhi[j]] for _, j in spans]
+    return QueryBatch(jnp.asarray(lo, jnp.float32),
+                      jnp.asarray(hi, jnp.float32))
+
+
+def _cov(res, truth):
+    _, lo, hi = res.interval()
+    return float(np.mean((np.asarray(lo) <= truth)
+                         & (truth <= np.asarray(hi))))
+
+
+# --------------------------------------------------------------------------
+# Exact path: zero-width, bit-identical
+# --------------------------------------------------------------------------
+
+def test_exact_covered_queries_zero_width_bit_identical():
+    """A query whose MCF is all covered nodes must return lo == est == hi
+    bit-identical to the exact answer, at any level and for CLT and
+    bootstrap methods alike."""
+    c, a, syn = _make()
+    qs = _aligned_queries(syn)
+    plain = engine.answer(syn, qs, kinds=("sum", "count", "avg"))
+    for level in (0.9, 0.99):
+        res = engine.answer(syn, qs, kinds=("sum", "count", "avg"), ci=level)
+        for kind, r in res.items():
+            est, lo, hi = (np.asarray(x) for x in r.interval())
+            assert np.array_equal(est, lo), (kind, level)
+            assert np.array_equal(est, hi), (kind, level)
+            assert np.array_equal(est, np.asarray(plain[kind].estimate)), kind
+            assert np.all(np.asarray(r.ci_half) == 0.0), (kind, level)
+    boot = engine.answer(syn, qs, kinds=("sum", "avg"), ci=0.95,
+                         ci_method="bootstrap", n_boot=16)
+    for kind, r in boot.items():
+        est, lo, hi = (np.asarray(x) for x in r.interval())
+        assert np.array_equal(est, lo) and np.array_equal(est, hi), kind
+
+
+def test_interval_method_falls_back_to_ci_half():
+    """Without ci=, .interval() returns the symmetric ci_half envelope."""
+    c, a, syn = _make(k=8, n=5000)
+    qs = random_queries(c, 8, seed=3)
+    r = engine.answer(syn, qs, kinds=("sum",))["sum"]
+    assert r.ci_lo is None and r.ci_hi is None
+    est, lo, hi = r.interval()
+    np.testing.assert_array_equal(np.asarray(lo),
+                                  np.asarray(r.estimate - r.ci_half))
+    np.testing.assert_array_equal(np.asarray(hi),
+                                  np.asarray(r.estimate + r.ci_half))
+
+
+# --------------------------------------------------------------------------
+# Coverage calibration
+# --------------------------------------------------------------------------
+
+def test_empirical_coverage_close_to_nominal():
+    """Acceptance: with healthy per-stratum sample sizes (>= 50), empirical
+    coverage over fresh sample draws stays within 3 points of nominal."""
+    rng = np.random.default_rng(0)
+    n, k, level = 30000, 16, 0.95
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.lognormal(0, 1, n) * (1 + np.sin(c / 5))
+    qs = random_queries(c, 128, seed=1, min_frac=0.02, max_frac=0.4)
+    truth = {kd: ground_truth(c, a, qs, kind=kd)
+             for kd in ("sum", "count", "avg")}
+    hits = {kd: [] for kd in truth}
+    for t in range(5):
+        syn, _ = build_synopsis(c, a, k=k, sample_budget=k * 64,
+                                method="eq", seed=100 + t)
+        res = engine.answer(syn, qs, kinds=tuple(truth), ci=level)
+        for kd in truth:
+            _, lo, hi = res[kd].interval()
+            hits[kd].append((np.asarray(lo) <= truth[kd])
+                            & (truth[kd] <= np.asarray(hi)))
+    for kd, h in hits.items():
+        cov = float(np.mean(np.asarray(h)))
+        assert abs(cov - level) <= 0.03, (kd, cov)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_coverage_property_never_far_below_nominal(seed):
+    """Hypothesis property: on random synthetic workloads the interval
+    coverage never drops more than tolerance below nominal (conservative
+    fallbacks may over-cover; under-coverage is the bug)."""
+    rng = np.random.default_rng(seed)
+    n, k = 8000, 8
+    c = np.sort(rng.uniform(0, 50, n))
+    a = rng.lognormal(0, 1, n)
+    syn, _ = build_synopsis(c, a, k=k, sample_budget=k * 48, method="eq",
+                            seed=seed + 1)
+    qs = random_queries(c, 64, seed=seed + 2, min_frac=0.05, max_frac=0.5)
+    res = engine.answer(syn, qs, kinds=("sum",), ci=0.95)["sum"]
+    truth = ground_truth(c, a, qs, kind="sum")
+    assert _cov(res, truth) >= 0.95 - 0.08     # 64 queries: +-3.5% noise
+
+
+# --------------------------------------------------------------------------
+# Small-stratum fallback
+# --------------------------------------------------------------------------
+
+def test_small_stratum_fallback_widens_and_counts():
+    """With a starved sample budget every sampled stratum falls below the
+    effective-n threshold: the Bernstein/range fallback must engage
+    (n_fallback > 0) and produce intervals at least as wide as the plain
+    CLT's, restoring coverage where the CLT under-covers."""
+    c, a, syn = _make(seed=5, k=16, samples_per_leaf=4)   # n_eff << 12
+    qs = random_queries(c, 64, seed=6, min_frac=0.02, max_frac=0.3)
+    from repro.engine import executor as ex
+    art = ex.artifacts(syn, qs, kinds=("sum",))
+    half, n_fb = uncertainty.compose_interval(syn, art, "sum", 0.95)
+    assert float(jnp.max(n_fb)) >= 1.0
+    z = uncertainty.normal_quantile(0.95)
+    clt = engine.answer(syn, qs, kinds=("sum",), lam=z)["sum"]
+    sampled_q = np.asarray(n_fb) > 0
+    assert np.all(np.asarray(half)[sampled_q]
+                  >= np.asarray(clt.ci_half)[sampled_q] - 1e-5)
+    res = engine.answer(syn, qs, kinds=("sum",), ci=0.95)["sum"]
+    truth = ground_truth(c, a, qs, kind="sum")
+    assert _cov(res, truth) >= 0.92
+
+
+def test_zero_sample_stratum_gets_range_bound_not_zero_variance():
+    """A partial stratum holding zero samples must NOT contribute zero
+    variance (the silent CLT failure): the interval falls back to the
+    deterministic range bound and still contains the truth."""
+    rng = np.random.default_rng(9)
+    n, k = 8000, 8
+    c = np.sort(rng.uniform(0, 80, n))
+    a = rng.lognormal(0, 1, n)
+    syn, _ = build_synopsis(c, a, k=k, sample_budget=k * 16, method="eq",
+                            seed=0)
+    # strip every sample from stratum 3 but keep it partial-relevant
+    import dataclasses
+    syn_starved = dataclasses.replace(
+        syn, sample_valid=syn.sample_valid.at[3].set(False),
+        k_per_leaf=syn.k_per_leaf.at[3].set(0))
+    blo = np.asarray(syn.leaf_lo)[:, 0]
+    bhi = np.asarray(syn.leaf_hi)[:, 0]
+    mid3 = 0.5 * (blo[3] + bhi[3])
+    qs = QueryBatch(jnp.asarray([[blo[1]]], jnp.float32),
+                    jnp.asarray([[mid3]], jnp.float32))   # cuts stratum 3
+    res = engine.answer(syn_starved, qs, kinds=("sum",), ci=0.95)["sum"]
+    truth = ground_truth(c, a, qs, kind="sum")
+    est, lo, hi = (np.asarray(x) for x in res.interval())
+    assert float(hi[0] - lo[0]) > 0.0
+    assert lo[0] <= truth[0] <= hi[0]
+
+
+# --------------------------------------------------------------------------
+# Bootstrap
+# --------------------------------------------------------------------------
+
+def test_bootstrap_key_deterministic():
+    c, a, syn = _make(k=8, n=10000, samples_per_leaf=32)
+    qs = random_queries(c, 32, seed=2, min_frac=0.05, max_frac=0.4)
+    k1 = jax.random.PRNGKey(42)
+    r1 = uncertainty.poisson_bootstrap(syn, qs, ("avg",), n_boot=32, key=k1)
+    r2 = uncertainty.poisson_bootstrap(syn, qs, ("avg",), n_boot=32, key=k1)
+    np.testing.assert_array_equal(np.asarray(r1["avg"].ci_lo),
+                                  np.asarray(r2["avg"].ci_lo))
+    r3 = uncertainty.poisson_bootstrap(syn, qs, ("avg",), n_boot=32,
+                                       key=jax.random.PRNGKey(7))
+    assert not np.array_equal(np.asarray(r1["avg"].ci_lo),
+                              np.asarray(r3["avg"].ci_lo))
+
+
+def test_bootstrap_covers_and_agrees_with_clt_cross_check():
+    """The bootstrap is the cross-check estimator: its AVG intervals must
+    cover the truth at roughly nominal rate and overlap the CLT intervals
+    on (nearly) every query."""
+    c, a, syn = _make(seed=3, k=16, samples_per_leaf=64, n=30000)
+    qs = random_queries(c, 96, seed=4, min_frac=0.05, max_frac=0.4)
+    truth = ground_truth(c, a, qs, kind="avg")
+    boot = engine.answer(syn, qs, kinds=("avg",), ci=0.95,
+                         ci_method="bootstrap", n_boot=128)["avg"]
+    clt = engine.answer(syn, qs, kinds=("avg",), ci=0.95)["avg"]
+    assert _cov(boot, truth) >= 0.88
+    b_lo, b_hi = np.asarray(boot.ci_lo), np.asarray(boot.ci_hi)
+    c_lo, c_hi = np.asarray(clt.ci_lo), np.asarray(clt.ci_hi)
+    overlap = np.mean((b_lo <= c_hi) & (c_lo <= b_hi))
+    assert overlap >= 0.95
+
+
+def test_bootstrap_rejects_bad_args():
+    c, a, syn = _make(k=4, n=2000)
+    qs = random_queries(c, 4, seed=0)
+    with pytest.raises(ValueError, match="bootstrap supports"):
+        uncertainty.poisson_bootstrap(syn, qs, ("min",))
+    with pytest.raises(ValueError, match="confidence level"):
+        uncertainty.poisson_bootstrap(syn, qs, ("sum",), level=1.5)
+    with pytest.raises(ValueError, match="unknown normalize"):
+        uncertainty.poisson_bootstrap(syn, qs, ("sum",), normalize="x")
+
+
+# --------------------------------------------------------------------------
+# Engine wiring + streaming
+# --------------------------------------------------------------------------
+
+def test_answer_ci_single_artifact_pass():
+    """ci= must not add a second data sweep: one classification + one
+    moment pass, same as the plain multi-kind path."""
+    engine.reset_op_counts()
+    c, a, syn = _make(k=8, n=5000)
+    qs = random_queries(c, 16, seed=1)
+    engine.answer(syn, qs, kinds=("sum", "count", "avg"), ci=0.95)
+    assert engine.OP_COUNTS["classify"] == 1
+    assert engine.OP_COUNTS["moments"] == 1
+    engine.reset_op_counts()
+
+
+def test_answer_ci_streaming_ingestor():
+    """Intervals serve straight from the delta-merged streaming state, the
+    delta strata estimated from the live reservoir's moments."""
+    from repro.streaming import StreamingIngestor, reservoir_moments
+    c, a, syn = _make(k=8, n=10000, samples_per_leaf=48)
+    rng = np.random.default_rng(11)
+    ing = StreamingIngestor(syn, seed=2).ingest(
+        rng.uniform(0, 100, 2048), rng.lognormal(0, 1, 2048))
+    qs = random_queries(c, 32, seed=5, min_frac=0.1, max_frac=0.5)
+    res = engine.answer(ing, qs, kinds=("sum", "avg"), ci=0.95)
+    merged = engine.answer(ing.as_synopsis(), qs, kinds=("sum", "avg"),
+                           ci=0.95)
+    for kd in res:
+        np.testing.assert_array_equal(np.asarray(res[kd].ci_lo),
+                                      np.asarray(merged[kd].ci_lo))
+        assert np.all(np.asarray(res[kd].ci_lo)
+                      <= np.asarray(res[kd].ci_hi))
+    mom = np.asarray(reservoir_moments(ing.state))
+    assert mom.shape == (8, 3)
+    np.testing.assert_array_equal(
+        mom[:, 0], np.asarray(ing.state.sample_valid).sum(axis=1))
+
+
+def test_answer_rejects_bad_ci_args():
+    c, a, syn = _make(k=4, n=2000)
+    qs = random_queries(c, 4, seed=0)
+    with pytest.raises(ValueError, match="confidence level"):
+        engine.answer(syn, qs, kinds=("sum",), ci=2.0)
+    with pytest.raises(ValueError, match="unknown ci_method"):
+        engine.answer(syn, qs, kinds=("sum",), ci=0.95, ci_method="magic")
+    with pytest.raises(ValueError, match="ratio"):
+        engine.answer(syn, qs, kinds=("avg",), ci=0.95, avg_mode="stratum")
+    with pytest.raises(ValueError, match="ratio"):
+        engine.answer(syn, qs, kinds=("avg",), ci=0.95,
+                      ci_method="bootstrap", avg_mode="stratum")
+
+
+def test_minmax_interval_is_deterministic_envelope():
+    """MIN/MAX estimates sit at one END of the deterministic envelope, so
+    .interval() must return [lower, upper] (a symmetric est +/- ci_half
+    interval would exclude valid truths and overshoot the hard bound)."""
+    c, a, syn = _make(k=8, n=8000)
+    qs = random_queries(c, 32, seed=8, min_frac=0.05, max_frac=0.4)
+    for kind in ("min", "max"):
+        for r in (engine.answer(syn, qs, kinds=(kind,))[kind],
+                  engine.answer(syn, qs, kinds=(kind,), ci=0.95)[kind]):
+            est, lo, hi = r.interval()
+            np.testing.assert_array_equal(np.asarray(lo),
+                                          np.asarray(r.lower))
+            np.testing.assert_array_equal(np.asarray(hi),
+                                          np.asarray(r.upper))
+            truth = ground_truth(c, a, qs, kind=kind)
+            # f32 envelope vs f64 ground truth: allow rounding epsilon
+            tol = 1e-5 * np.maximum(np.abs(truth), 1e-6)
+            assert np.all((np.asarray(lo) <= truth + tol)
+                          & (truth <= np.asarray(hi) + tol))
+
+
+# --------------------------------------------------------------------------
+# Weighted kernel ops
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_weighted_ops_match_jnp_reference(backend):
+    rng = np.random.default_rng(1)
+    S, d, k, Q = 192, 2, 6, 9
+    c = jnp.asarray(rng.uniform(0, 10, (S, d)), jnp.float32)
+    a = jnp.asarray(rng.lognormal(0, 1, S), jnp.float32)
+    leaf = jnp.asarray(rng.integers(-1, k, S), jnp.int32)
+    w = jnp.where(leaf >= 0,
+                  jnp.asarray(rng.poisson(1.0, S), jnp.float32), 0.0)
+    qlo = jnp.asarray(rng.uniform(0, 5, (Q, d)), jnp.float32)
+    qhi = qlo + jnp.asarray(rng.uniform(1, 5, (Q, d)), jnp.float32)
+    want = np.asarray(ops.weighted_moments_op(c, a, leaf, w, qlo, qhi, k,
+                                              backend="jnp"))
+    got = np.asarray(ops.weighted_moments_op(c, a, leaf, w, qlo, qhi, k,
+                                             backend=backend))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+    want_s = np.asarray(ops.weighted_segment_reduce_op(a, w, leaf, k,
+                                                       backend="jnp"))
+    got_s = np.asarray(ops.weighted_segment_reduce_op(a, w, leaf, k,
+                                                      backend=backend))
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-5, atol=1e-4)
+
+
+def test_weighted_ops_reduce_to_unweighted_at_ones():
+    """Unit weights must reproduce the plain moment pass exactly."""
+    rng = np.random.default_rng(2)
+    S, d, k, Q = 128, 1, 4, 6
+    c = jnp.asarray(rng.uniform(0, 10, (S, d)), jnp.float32)
+    a = jnp.asarray(rng.lognormal(0, 1, S), jnp.float32)
+    leaf = jnp.asarray(rng.integers(0, k, S), jnp.int32)
+    ones = jnp.ones(S, jnp.float32)
+    qlo = jnp.asarray(rng.uniform(0, 5, (Q, d)), jnp.float32)
+    qhi = qlo + jnp.asarray(rng.uniform(1, 5, (Q, d)), jnp.float32)
+    plain = np.asarray(ops.stratified_moments_op(c, a, leaf, qlo, qhi, k,
+                                                 backend="jnp"))
+    weighted = np.asarray(ops.weighted_moments_op(c, a, leaf, ones, qlo,
+                                                  qhi, k, backend="jnp"))
+    np.testing.assert_array_equal(plain, weighted)
