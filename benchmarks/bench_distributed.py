@@ -1,0 +1,78 @@
+"""Distributed psum merge: the multi-device synopsis-build path
+(``core.distributed.build_leaf_aggregates``) as a bench-smoke case.
+
+Rows shard over a data-parallel mesh spanning every visible device; each
+device reduces its shard with the segment_reduce kernel and one (k, 5)
+``psum``/``pmax`` merges the mergeable summaries (collective bytes O(k),
+independent of N). Compared against the single-device kernel reduce over
+the same rows, so ``BENCH_pr.json`` tracks the shard_map + collective
+overhead of the distributed serving path even on a 1-device CI host
+(force more with XLA_FLAGS=--xla_force_host_platform_device_count=8).
+
+Run: PYTHONPATH=src python -m benchmarks.bench_distributed
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed as dist
+from repro.kernels import ops as kops
+
+
+def _bench(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n_rows: int = 1_000_000, k: int = 256, seed: int = 0) -> dict:
+    """Returns a flat metric dict (consumed by bench_smoke/BENCH_pr.json)."""
+    devices = jax.devices()
+    n_dev = len(devices)
+    n = (n_rows // n_dev) * n_dev                 # rows must tile the mesh
+    rng = np.random.default_rng(seed)
+    values = jnp.asarray(rng.lognormal(0, 1, n), jnp.float32)
+    assign = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    merged_fn = jax.jit(lambda v, a: dist.build_leaf_aggregates(
+        mesh, v, a, k))
+    local_fn = jax.jit(lambda v, a: kops.segment_reduce_op(v, a, k))
+
+    t_merged = _bench(merged_fn, values, assign)
+    t_local = _bench(local_fn, values, assign)
+
+    # correctness cross-check: the psum merge must reproduce the
+    # single-device reduce (SUM/SUMSQ/COUNT add, MIN/MAX combine)
+    got = np.asarray(merged_fn(values, assign))
+    want = np.asarray(local_fn(values, assign))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+    metrics = {
+        "dist_psum_merge_ms": t_merged * 1e3,
+        "dist_local_reduce_ms": t_local * 1e3,
+        "dist_devices_rows": float(n_dev),
+    }
+    print(f"distributed psum merge: n={n:,} rows, k={k}, "
+          f"{n_dev} device(s)")
+    print(f"  sharded build_leaf_aggregates {t_merged * 1e3:8.2f} ms "
+          f"({n / t_merged / 1e6:.1f} M rows/s)")
+    print(f"  single-device segment_reduce  {t_local * 1e3:8.2f} ms")
+    return metrics
+
+
+def tiny_config() -> dict:
+    """CI-sized run (bench_smoke)."""
+    return dict(n_rows=200_000, k=64)
+
+
+if __name__ == "__main__":
+    run(**(tiny_config() if os.environ.get("REPRO_BENCH_TINY") else {}))

@@ -1,12 +1,13 @@
 """CI bench-smoke: tiny-config perf runs -> BENCH_pr.json.
 
-Runs the PASS serving hillclimb, the streaming ingest benchmark, and the
-CI-calibration + build-path smoke in their CI-sized configs and writes a
-flat metric JSON. ``check_regression`` compares it against the checked-in
-``BENCH_baseline.json`` (fails on >2x regression on wall-clock/speedup
-metrics; coverage metrics are informational). The calibration table is
-written next to the metrics JSON (``CI_calibration.json``) and uploaded as
-a workflow artifact. Locally:
+Runs the PASS serving hillclimb (incl. the prepared-query steady-state
+case), the streaming ingest benchmark, the distributed psum-merge case,
+and the CI-calibration + build-path smoke in their CI-sized configs and
+writes a flat metric JSON. ``check_regression`` compares it against the
+checked-in ``BENCH_baseline.json`` (fails on >2x regression on
+wall-clock/speedup metrics; coverage metrics are informational). The
+calibration table is written next to the metrics JSON
+(``CI_calibration.json``) and uploaded as a workflow artifact. Locally:
 
     PYTHONPATH=src python -m benchmarks.bench_smoke [out.json]
     PYTHONPATH=src python -m benchmarks.check_regression BENCH_pr.json
@@ -18,13 +19,14 @@ import pathlib
 import platform
 import sys
 
+from . import bench_distributed
 from . import bench_streaming_ingest
 from . import fig_ci_calibration
 from . import perf_pass_serving
 
 
 def run() -> tuple[dict, list]:
-    serve_rows, serve_speedup = perf_pass_serving.run(
+    serve_rows, serve_speedups = perf_pass_serving.run(
         **perf_pass_serving.tiny_config())
     stream = bench_streaming_ingest.run(**bench_streaming_ingest.tiny_config())
     metrics = dict(stream)
@@ -32,7 +34,9 @@ def run() -> tuple[dict, list]:
     for name, t in serve_rows:
         key = name.split("(")[0]                  # strip dynamic suffixes
         metrics[f"serving_{key}_ms"] = t * 1e3
-    metrics["serving_multi_aggregate_speedup_x"] = serve_speedup
+    metrics.update(serve_speedups)
+    # multi-device serving path: psum merge of the mergeable summaries
+    metrics.update(bench_distributed.run(**bench_distributed.tiny_config()))
     # uncertainty smoke: empirical coverage + the build-path wall clock
     cal_metrics, cal_rows = fig_ci_calibration.run(
         **fig_ci_calibration.tiny_config())

@@ -13,9 +13,9 @@ import time
 import numpy as np
 import jax
 
+from repro.api import PassEngine, ServingConfig
 from repro.core import build_synopsis, random_queries
 from repro.core.updates import UpdatableSynopsis
-from repro.engine import answer as engine_answer
 from repro.streaming import StreamingIngestor
 
 
@@ -58,10 +58,17 @@ def run(n_base: int = 200_000, k: int = 256, n_stream: int = 100_000,
 
     # delta-merge serving: answer a query batch straight from the ingestor
     qs = random_queries(c, q_serve, seed=2)
-    engine_answer(ing, qs, kinds=("sum", "count", "avg"))      # compile+merge
-    ing._merged = None                                         # re-merge too
+    eng = PassEngine(ing, serving=ServingConfig(kinds=("sum", "count",
+                                                       "avg")))
+    eng.answer(qs)
+    eng.answer(qs)             # 2nd call AOT-compiles the prepared entry
+    # Timed: one epoch bump (as every ingest() performs) so the prepared
+    # plan re-pins the delta merge — the steady-state ingest-then-serve
+    # path: device-only base+delta combine + the compiled answer.
+    ing._merged = None
+    ing._epoch += 1
     t0 = time.perf_counter()
-    res = engine_answer(ing, qs, kinds=("sum", "count", "avg"))
+    res = eng.answer(qs)
     jax.block_until_ready(res["sum"].estimate)
     t_serve = time.perf_counter() - t0
 

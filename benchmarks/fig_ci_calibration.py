@@ -3,8 +3,9 @@ reliability claim behind Fig. 1's "trustworthy intervals" pitch).
 
 For each trial a fresh stratified sample is drawn (new build seed) and a
 query workload is answered with calibrated intervals
-(``engine.answer(..., ci=level)``); coverage is the fraction of queries
-whose ground truth lands inside [lo, hi]. Compared estimators:
+(``PassEngine(syn, ci=CIConfig(level)).answer(qs)``); coverage is the
+fraction of queries whose ground truth lands inside [lo, hi]. Compared
+estimators:
 
 * ``pass``    — PASS synopsis: exact-covered strata contribute zero
   variance, sampled strata CLT + small-n Bernstein fallback;
@@ -26,7 +27,7 @@ import time
 
 import numpy as np
 
-from repro import engine
+from repro.api import PassEngine, ServingConfig, CIConfig
 from repro.core import build_synopsis, ground_truth, random_queries
 
 SEL_BUCKETS = ((0.0, 0.02), (0.02, 0.1), (0.1, 1.01))
@@ -61,11 +62,13 @@ def run(n=100_000, k=64, samples_per_leaf=64, Q=200, trials=8,
         build_ms.append((time.perf_counter() - t0) * 1e3)
         uni, _ = build_synopsis(c, a, k=1, sample_budget=budget,
                                 method="eq", seed=seed + 10 + t)
+        eng_p = PassEngine(syn, serving=ServingConfig(kinds=tuple(kinds),
+                                                      backend=backend))
+        eng_u = PassEngine(uni, serving=ServingConfig(
+            kinds=tuple(kinds), backend=backend, use_aggregates=False))
         for level in levels:
-            res_p = engine.answer(syn, qs, kinds=kinds, ci=level,
-                                  backend=backend)
-            res_u = engine.answer(uni, qs, kinds=kinds, ci=level,
-                                  use_aggregates=False, backend=backend)
+            res_p = eng_p.answer(qs, ci=CIConfig(level=level))
+            res_u = eng_u.answer(qs, ci=CIConfig(level=level))
             for kind in kinds:
                 for method, res in (("pass", res_p), ("uniform", res_u)):
                     _, lo, hi = res[kind].interval()

@@ -10,21 +10,27 @@ on this host, so these iterations are wall-clock measured. Iterations:
   it3  two-phase skip: classify first, then moments only over strata that
        any query touches (the tree's data-skipping, batched)
   it4  multi-aggregate serving: SUM+COUNT+AVG from ONE engine artifact pass
-       (engine.answer(kinds=...)) vs looping the legacy single-kind
+       (PassEngine.answer) vs looping the legacy single-kind
        estimate() three times — the layered engine's shared classification
        + moments must deliver >= 2x throughput here.
+  it5  prepared-query steady state: a pinned PreparedQuery handle (config
+       pre-validated, backend pre-resolved, AOT-compiled entry) vs per-call
+       engine.answer() on repeated same-shape batches — the facade's
+       Python-overhead win (ISSUE 4 acceptance).
 
 Run: PYTHONPATH=src python -m benchmarks.perf_pass_serving
 """
 from __future__ import annotations
 
 import time
+import warnings
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro import engine
+from repro.api import PassEngine, ServingConfig
 from repro.core import build_synopsis, random_queries
 from repro.core import estimators as E
 from repro.core.types import QueryBatch
@@ -36,6 +42,7 @@ SERVE_KINDS = ("sum", "count", "avg")
 
 def bench(fn, *args, reps=5):
     fn(*args)
+    fn(*args)       # 2nd warmup: prepared handles AOT-compile on call #2
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -43,7 +50,7 @@ def bench(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run(Q=2048, k=256, rate=0.01, scale=0.05, Q4=1024, rate4=0.03):
+def run(Q=2048, k=256, rate=0.01, scale=0.05, Q4=1024, rate4=0.03, Q5=64):
     c, a = synthetic.nyc_taxi(scale=scale)
     syn, _ = build_synopsis(c, a, k=k, sample_rate=rate, kind="sum")
     qs = random_queries(c, Q, seed=3)
@@ -97,13 +104,15 @@ def run(Q=2048, k=256, rate=0.01, scale=0.05, Q4=1024, rate4=0.03):
                              kind="sum")
     qs4 = random_queries(c, Q4, seed=4)
 
+    eng4 = PassEngine(syn4, serving=ServingConfig(kinds=SERVE_KINDS))
+
     def legacy_loop(lo, hi):
         q = QueryBatch(lo, hi)
         return tuple(E.estimate(syn4, q, kind=kd).estimate
                      for kd in SERVE_KINDS)
 
     def multi_answer(lo, hi):
-        res = engine.answer(syn4, QueryBatch(lo, hi), kinds=SERVE_KINDS)
+        res = eng4.answer(QueryBatch(lo, hi))
         return tuple(res[kd].estimate for kd in SERVE_KINDS)
 
     t_legacy = bench(legacy_loop, qs4.lo, qs4.hi)
@@ -111,20 +120,62 @@ def run(Q=2048, k=256, rate=0.01, scale=0.05, Q4=1024, rate4=0.03):
     rows.append((f"it4a_legacy_loop_{len(SERVE_KINDS)}_kinds", t_legacy))
     rows.append((f"it4b_engine_multi_aggregate", t_multi))
 
+    # it5: steady-state serving through a pinned PreparedQuery handle vs
+    # per-call engine.answer() — same compiled program, the delta is pure
+    # Python re-setup (kwarg plumbing, validation, synopsis re-resolution,
+    # jit-cache dispatch vs the AOT executable). Measured on a SMALL batch
+    # against the low-rate synopsis so the per-call overhead — the thing
+    # the prepared layer removes — is the dominant cost, as in a
+    # high-QPS serving steady state; interleaved median-of-many because
+    # sub-ms wall clocks jitter under host contention.
+    qs5 = random_queries(c, Q5, seed=5)
+    eng5 = PassEngine(syn, serving=ServingConfig(kinds=SERVE_KINDS))
+    prepared = eng5.prepare(qs5)
+
+    def per_call_answer(lo, hi):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            res = engine.answer(syn, QueryBatch(lo, hi), kinds=SERVE_KINDS)
+        return tuple(res[kd].estimate for kd in SERVE_KINDS)
+
+    def prepared_call(lo, hi):
+        res = prepared(QueryBatch(lo, hi))
+        return tuple(res[kd].estimate for kd in SERVE_KINDS)
+
+    for fn in (per_call_answer, prepared_call, prepared_call):
+        jax.block_until_ready(fn(qs5.lo, qs5.hi))   # warm jit + AOT paths
+    t_a, t_p = [], []
+    for _ in range(30):
+        t0 = time.perf_counter()
+        jax.block_until_ready(per_call_answer(qs5.lo, qs5.hi))
+        t_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(prepared_call(qs5.lo, qs5.hi))
+        t_p.append(time.perf_counter() - t0)
+    t_per_call = float(np.median(t_a))
+    t_prepared = float(np.median(t_p))
+    rows.append(("it5a_per_call_engine_answer", t_per_call))
+    rows.append(("it5b_prepared_query", t_prepared))
+
     print(f"PASS serving hillclimb: Q={Q}, k={k}, samples={kk*s}")
     base = rows[0][1]
     for name, t in rows:
         print(f"  {name:42s} {t*1e3:8.2f} ms/batch "
               f"({t/Q*1e6:6.2f} us/query, {base/t:4.2f}x vs it0)")
     speedup = t_legacy / t_multi
+    prepared_speedup = t_per_call / t_prepared
     print(f"  multi-aggregate serving speedup: {speedup:.2f}x "
-          f"(engine.answer kinds={SERVE_KINDS} vs legacy estimate() loop)")
-    return rows, speedup
+          f"(PassEngine.answer kinds={SERVE_KINDS} vs legacy estimate() loop)")
+    print(f"  prepared-query speedup: {prepared_speedup:.2f}x "
+          f"(PreparedQuery steady state vs per-call engine.answer)")
+    return rows, {"serving_multi_aggregate_speedup_x": speedup,
+                  "serving_prepared_speedup_x": prepared_speedup}
 
 
 def tiny_config() -> dict:
     """CI-sized run (bench_smoke / REPRO_BENCH_TINY)."""
-    return dict(Q=256, k=64, rate=0.01, scale=0.01, Q4=128, rate4=0.02)
+    return dict(Q=256, k=64, rate=0.01, scale=0.01, Q4=128, rate4=0.02,
+                Q5=48)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,8 @@ trips.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (build_synopsis, answer, ground_truth, random_queries,
+from repro.api import PassEngine, ServingConfig
+from repro.core import (build_synopsis, ground_truth, random_queries,
                         relative_error)
 from repro.core.estimators import skip_rate
 from repro.core.types import QueryBatch
@@ -26,6 +27,7 @@ def main():
                               kind="sum", method="kd")
     print(f"KD-PASS built for the 2-D template in {rep.seconds_total:.2f}s")
 
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
     for t in (1, 2, 3, 4):
         qs_t = random_queries(c[:, :t], 200, seed=42 + t,
                               min_frac=0.1, max_frac=0.5)
@@ -35,7 +37,7 @@ def main():
         lo[:, :shared] = np.asarray(qs_t.lo)[:, :shared]
         hi[:, :shared] = np.asarray(qs_t.hi)[:, :shared]
         qs2 = QueryBatch(jnp.asarray(lo), jnp.asarray(hi))
-        res = answer(syn, qs2, kind="sum")
+        res = eng.answer(qs2)["sum"]
         gt = ground_truth(c[:, :2], a, qs2, kind="sum")
         keep = np.abs(gt) > 1e-9
         err = np.median(relative_error(res, gt)[keep])
@@ -75,17 +77,27 @@ def streaming_demo():
     drift_q = (np.asarray(qs.hi).reshape(-1) > c.max())[keep]
 
     def med(src, label):
-        res = answer(src, qs, kind="sum")
+        res = PassEngine(src).answer(qs)["sum"]
         rel = relative_error(res, gt)[keep]
         print(f"  {label:34s} median rel err {np.median(rel)*100:6.3f}% "
               f"(drift-touching queries {np.median(rel[drift_q])*100:6.3f}%)")
 
     med(syn, "frozen base (stale)")
-    med(ing, "delta-merged stream")
+    # One engine serves the live stream; replace_source() swaps in the
+    # re-optimized ingestor and invalidates every prepared plan.
+    live = PassEngine(ing)
+    rel = relative_error(live.answer(qs)["sum"], gt)[keep]
+    print(f"  {'delta-merged stream':34s} median rel err "
+          f"{np.median(rel)*100:6.3f}% "
+          f"(drift-touching queries {np.median(rel[drift_q])*100:6.3f}%)")
     pol = DriftPolicy(staleness_threshold=0.2)
     ing2, report = pol.maybe_reoptimize(ing, c_all, a_all)
     assert report is not None
-    med(ing2, "re-optimized (dp_monotone_jnp)")
+    live.replace_source(ing2)
+    rel = relative_error(live.answer(qs)["sum"], gt)[keep]
+    print(f"  {'re-optimized (dp_monotone_jnp)':34s} median rel err "
+          f"{np.median(rel)*100:6.3f}% "
+          f"(drift-touching queries {np.median(rel[drift_q])*100:6.3f}%)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,33 @@
+"""Public serving API for the PASS reproduction (DESIGN.md §8).
+
+One front door for static and streaming serving::
+
+    from repro.api import PassEngine, ServingConfig, CIConfig
+
+    eng = PassEngine(syn_or_ingestor,
+                     serving=ServingConfig(kinds=("sum", "count", "avg")),
+                     ci=CIConfig(level=0.95))
+    results = eng.answer(queries)          # {kind: QueryResult}
+    prepared = eng.prepare(queries)        # pinned steady-state entry
+    results = prepared(queries)            # no per-call Python re-setup
+
+Everything else (``engine.answer``, ``core.query.answer``,
+``core.estimators.estimate``, ``uncertainty.answer_with_ci`` /
+``poisson_bootstrap``) is a deprecated shim over this package; the frozen
+config dataclasses here are the single source of truth for serving
+defaults. The public surface below is snapshot-tested
+(tests/test_api_surface.py) so it only changes deliberately.
+"""
+from .config import ServingConfig, CIConfig, as_ci_config
+from .engine import PassEngine, PreparedQuery
+from .deprecation import warn_once, reset_deprecation_warnings
+
+__all__ = [
+    "PassEngine",
+    "PreparedQuery",
+    "ServingConfig",
+    "CIConfig",
+    "as_ci_config",
+    "warn_once",
+    "reset_deprecation_warnings",
+]

@@ -1,0 +1,152 @@
+"""Typed, frozen serving configuration (DESIGN.md §8).
+
+These two dataclasses are the single source of truth for every serving
+default. The legacy free functions (``engine.answer``,
+``core.query.answer``, ``core.estimators.estimate``, the uncertainty
+entrypoints) used to duplicate the same fourteen keyword defaults across
+four signatures; they now read them from here, and :class:`PassEngine`
+consumes the configs directly.
+
+Both configs are immutable (``frozen=True``) so a config can key the
+engine's prepared-plan cache: :meth:`cache_key` returns a fully hashable
+token (PRNG keys are digested to a tuple of ints).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+KINDS = ("sum", "count", "avg", "min", "max")
+CI_METHODS = ("clt", "bootstrap")
+DELTA_BUDGETS = ("stratum", "union")
+BOOT_NORMALIZE = ("hajek", "ht")
+
+
+def _normalize_kinds(kinds) -> tuple[str, ...]:
+    return (kinds,) if isinstance(kinds, str) else tuple(kinds)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """What to serve and how to estimate it (paper §2.1-§2.3, §3.4).
+
+    ``kinds``          aggregate kinds answered per batch (one shared
+                       artifact pass covers all of them).
+    ``backend``        kernel-backend registry name (``pallas|jnp|ref``);
+                       None picks the process default.
+    ``lam``            CLT multiplier for the legacy ``ci_half`` field.
+    ``use_fpc``        finite-population correction (§2.1.1 footnote 1).
+    ``zero_var_rule``  §3.4 zero-variance promotion (stratum-mode AVG).
+    ``use_aggregates`` exact-cover shortcut + deterministic hard bounds;
+                       False turns the engine into classic stratified
+                       sampling (the ST/US baselines).
+    ``avg_mode``       'ratio' (est-SUM/est-COUNT) or the paper-literal
+                       'stratum' weighting.
+    """
+    kinds: tuple[str, ...] = ("sum",)
+    backend: str | None = None
+    lam: float = 2.576
+    use_fpc: bool = True
+    zero_var_rule: bool = True
+    use_aggregates: bool = True
+    avg_mode: str = "ratio"
+
+    def __post_init__(self):
+        object.__setattr__(self, "kinds", _normalize_kinds(self.kinds))
+
+    def validate(self) -> "ServingConfig":
+        for k in self.kinds:
+            if k not in KINDS:
+                raise ValueError(f"unknown kind: {k}")
+        if self.avg_mode not in ("ratio", "stratum"):
+            raise ValueError(f"unknown avg_mode: {self.avg_mode!r}")
+        return self
+
+    def cache_key(self) -> tuple:
+        return (self.kinds, self.backend, float(self.lam), self.use_fpc,
+                self.zero_var_rule, self.use_aggregates, self.avg_mode)
+
+
+def _key_token(key):
+    """Hashable digest of a PRNG key (None | int seed | key array)."""
+    if key is None or isinstance(key, int):
+        return key
+    try:
+        import jax
+        if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
+            key = jax.random.key_data(key)
+    except (AttributeError, TypeError):
+        pass
+    return tuple(np.asarray(key).reshape(-1).tolist())
+
+
+@dataclasses.dataclass(frozen=True)
+class CIConfig:
+    """Calibrated-interval configuration (DESIGN.md §7).
+
+    ``level``             nominal two-sided confidence level in (0, 1).
+    ``method``            'clt' (stratified composition with Bernstein/range
+                          fallbacks) or 'bootstrap' (on-device Poisson).
+    ``small_n_threshold`` effective-n below which a sampled stratum leaves
+                          the CLT regime (CLT method only).
+    ``delta_budget``      fallback failure-probability budgeting: 'stratum'
+                          gives every fallback stratum the full delta =
+                          1 - level (the historical behaviour); 'union'
+                          splits delta / n_fallback_strata per query, the
+                          union bound that makes the JOINT fallback
+                          guarantee hold at the reported level.
+    ``n_boot``            bootstrap replicate count (bootstrap method only).
+    ``key``               PRNG key or int seed for the bootstrap resample
+                          weights (None = seed 0); excluded from equality
+                          and digested for cache keys.
+    ``boot_normalize``    'hajek' (resampled-size rescale, recommended for
+                          AVG) or 'ht' (fixed design scale).
+    """
+    level: float = 0.95
+    method: str = "clt"
+    small_n_threshold: int = 12
+    delta_budget: str = "stratum"
+    n_boot: int = 200
+    key: object = dataclasses.field(default=None, compare=False)
+    boot_normalize: str = "hajek"
+
+    def validate(self) -> "CIConfig":
+        if not 0.0 < self.level < 1.0:
+            raise ValueError(
+                f"confidence level must be in (0, 1), got {self.level}")
+        if self.method not in CI_METHODS:
+            raise ValueError(f"unknown ci_method: {self.method!r}")
+        if self.delta_budget not in DELTA_BUDGETS:
+            raise ValueError(f"unknown delta_budget: {self.delta_budget!r}")
+        if self.boot_normalize not in BOOT_NORMALIZE:
+            raise ValueError(f"unknown normalize: {self.boot_normalize!r}")
+        return self
+
+    def cache_key(self) -> tuple:
+        return (float(self.level), self.method, int(self.small_n_threshold),
+                self.delta_budget, int(self.n_boot), _key_token(self.key),
+                self.boot_normalize)
+
+
+def as_ci_config(ci) -> CIConfig | None:
+    """Coerce ``None | float level | CIConfig`` to an optional CIConfig."""
+    if ci is None or isinstance(ci, CIConfig):
+        return ci
+    return CIConfig(level=float(ci))
+
+
+def merge_overrides(cfg, **overrides):
+    """``dataclasses.replace(cfg, ...)`` dropping ``None`` values.
+
+    Shared by the deprecated legacy shims, whose every keyword defaults to
+    ``None`` = "inherit the config's default": only kwargs the caller
+    actually set reach the frozen config, so the defaults live in exactly
+    one place.
+    """
+    real = {k: v for k, v in overrides.items() if v is not None}
+    return dataclasses.replace(cfg, **real) if real else cfg
+
+
+__all__ = ["ServingConfig", "CIConfig", "as_ci_config", "merge_overrides",
+           "KINDS", "CI_METHODS", "DELTA_BUDGETS", "BOOT_NORMALIZE"]

@@ -1,0 +1,349 @@
+"""`PassEngine`: the one front door for PASS serving (DESIGN.md §8).
+
+PASS's value proposition is a physical design you *build once and serve
+many queries against* (paper §2, §4); this module gives the codebase the
+matching API shape. A :class:`PassEngine` is constructed once from a
+:class:`~repro.core.types.Synopsis` **or** a streaming ingestor plus two
+frozen typed configs, then answers query batches forever:
+
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum", "avg")),
+                     ci=CIConfig(level=0.95))
+    results = eng.answer(queries)            # {kind: QueryResult}
+
+Steady-state serving goes through the **prepared-query layer**:
+``eng.prepare(queries)`` returns a :class:`PreparedQuery` handle pinning
+the resolved synopsis, backend resolution, and the compiled program for
+that batch shape x config; repeated ``prepared(queries)`` calls skip every
+piece of per-call Python plumbing (kwarg threading, kind validation,
+synopsis re-resolution, jit-cache lookup — the handle AOT-compiles the
+entry on its second concrete call and then invokes the executable
+directly). An LRU plan cache keyed on batch shape x config lives in the
+engine, so plain ``eng.answer(...)`` also reuses prepared entries;
+``eng.stats()`` exposes hits/misses/evictions/invalidations.
+
+Streaming sources carry an ``epoch`` that bumps on every ``ingest()`` /
+re-optimization swap; prepared artifacts (the pinned delta-merged
+synopsis) are invalidated on epoch change, so handles stay correct across
+ingestion without being rebuilt (the compiled executable survives as long
+as the synopsis shapes do).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import jax
+
+from ..core.types import QueryBatch, QueryResult
+from ..engine import executor as _executor
+from ..engine.assemble import _answer_jit
+from ..kernels.registry import get_backend
+from .config import ServingConfig, CIConfig, as_ci_config
+
+class _Unset:
+    """Sentinel distinguishing 'inherit the engine's CIConfig' from an
+    explicit ci=None (= no intervals); stable repr for signature
+    snapshots."""
+
+    def __repr__(self):
+        return "<inherit>"
+
+
+_UNSET = _Unset()
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def _resolve_key(key):
+    """CIConfig.key (None | int seed | PRNG key array) -> PRNG key array."""
+    if key is None:
+        return jax.random.PRNGKey(0)
+    if isinstance(key, int):
+        return jax.random.PRNGKey(key)
+    return key
+
+
+def _validate_request(serving: ServingConfig, ci: CIConfig | None) -> None:
+    serving.validate()
+    if ci is None:
+        return
+    ci.validate()
+    if ci.method == "bootstrap":
+        from ..uncertainty.bootstrap import BOOT_KINDS
+        for kind in serving.kinds:
+            if kind not in BOOT_KINDS:
+                raise ValueError(
+                    f"bootstrap supports {BOOT_KINDS}, got {kind!r}")
+    if "avg" in serving.kinds and serving.avg_mode != "ratio":
+        # Both ci methods center AVG intervals on the ratio estimator.
+        raise ValueError(
+            f"{ci.method} intervals support avg_mode='ratio' only"
+            if ci.method == "bootstrap" else
+            "calibrated intervals support avg_mode='ratio' only")
+
+
+def _dispatch_entry(serving: ServingConfig, ci: CIConfig | None):
+    """(jit entry, static kwargs, args builder) for one serving config.
+
+    The three compiled entries (plain / CLT intervals / bootstrap) all take
+    ``plan_masks`` as a dynamic pytree (None = batched classification) and
+    every config field as a static, so one (shape x config) pair maps to
+    exactly one executable. The builder closes over everything per-call
+    code would otherwise recompute (backend resolution, key material), so
+    a prepared call only assembles the dynamic argument tuple.
+    """
+    backend_name = get_backend(serving.backend).name
+    if ci is None:
+        lam = serving.lam
+        return (_answer_jit,
+                dict(kinds=serving.kinds, use_fpc=serving.use_fpc,
+                     zero_var_rule=serving.zero_var_rule,
+                     use_aggregates=serving.use_aggregates,
+                     avg_mode=serving.avg_mode, backend_name=backend_name),
+                lambda syn, queries, plan_masks: (syn, queries, lam,
+                                                  plan_masks))
+    if ci.method == "clt":
+        from ..uncertainty import intervals as _intervals
+        return (_intervals._ci_answer_jit,
+                dict(kinds=serving.kinds, level=float(ci.level),
+                     small_n_threshold=int(ci.small_n_threshold),
+                     use_fpc=serving.use_fpc,
+                     zero_var_rule=serving.zero_var_rule,
+                     use_aggregates=serving.use_aggregates,
+                     avg_mode=serving.avg_mode,
+                     delta_budget=ci.delta_budget,
+                     backend_name=backend_name),
+                lambda syn, queries, plan_masks: (syn, queries, plan_masks))
+    from ..uncertainty import bootstrap as _bootstrap
+    key = _resolve_key(ci.key)
+    return (_bootstrap._bootstrap_jit,
+            dict(kinds=serving.kinds, n_boot=int(ci.n_boot),
+                 level=float(ci.level), normalize=ci.boot_normalize,
+                 use_aggregates=serving.use_aggregates,
+                 backend_name=backend_name),
+            lambda syn, queries, plan_masks: (syn, queries, plan_masks, key))
+
+
+class PreparedQuery:
+    """A pinned (batch shape x config) serving entry (DESIGN.md §8).
+
+    Calling the handle with a same-shaped :class:`QueryBatch` runs the
+    pinned compiled program with no Python-side re-setup: configs are
+    pre-validated, the backend is pre-resolved, the synopsis is pinned
+    (re-resolved only when the source's epoch bumps), and from the second
+    concrete call on the jit dispatch itself is bypassed via an
+    AOT-compiled executable (``jit.lower(...).compile()`` — bit-identical
+    to the jit path, it is the same program).
+
+    Differently-shaped batches fall back to ``engine.answer`` (a plan-cache
+    miss there), so a handle never answers wrongly — it only ever loses its
+    fast path.
+    """
+
+    def __init__(self, engine: "PassEngine", serving: ServingConfig,
+                 ci: CIConfig | None, shape: tuple):
+        self._engine = engine
+        self.serving = serving
+        self.ci = ci
+        self.shape = tuple(shape)
+        self._epoch = engine.epoch
+        self._generation = engine._generation
+        self._syn = engine.resolve()
+        self._fn, self._statics, self._build = _dispatch_entry(serving, ci)
+        self._aot = None
+        self._aot_failed = False
+        self._calls = 0
+
+    def _refresh(self) -> None:
+        """Re-pin the serving synopsis after a source epoch bump or a
+        replace_source() swap (two immutable synopses both report epoch 0,
+        so source identity is tracked via the engine generation)."""
+        eng = self._engine
+        if eng.epoch == self._epoch and eng._generation == self._generation:
+            return
+        old_syn = self._syn
+        self._epoch = eng.epoch
+        self._generation = eng._generation
+        self._syn = eng.resolve()
+        eng._stats["invalidations"] += 1
+        # The executable only bakes shapes; drop it iff they changed
+        # (e.g. a re-optimization rebuilt the synopsis at a different k).
+        try:
+            same = jax.tree_util.tree_all(jax.tree_util.tree_map(
+                lambda a, b: (getattr(a, "shape", None)
+                              == getattr(b, "shape", None)),
+                old_syn, self._syn))
+        except ValueError:            # pytree structure itself changed
+            same = False
+        if not same:
+            self._aot = None
+            self._aot_failed = False
+
+    def _build_aot(self, args) -> None:
+        try:
+            self._aot = self._fn.lower(*args, **self._statics).compile()
+            self._engine._stats["aot_compiles"] += 1
+        except Exception:
+            # Keep serving through the jit path on any AOT quirk
+            # (jax-version drift, backend without lowering support, ...).
+            self._aot_failed = True
+
+    def __call__(self, queries: QueryBatch) -> dict[str, QueryResult]:
+        if tuple(queries.lo.shape) != self.shape:
+            return self._engine.answer(queries, kinds=self.serving.kinds,
+                                       ci=self.ci, serving=self.serving)
+        self._refresh()
+        _executor.count_artifact_pass(self.serving.kinds)
+        args = self._build(self._syn, queries, None)
+        self._calls += 1
+        if not _is_tracer(queries.lo):
+            if self._aot is None and not self._aot_failed and self._calls >= 2:
+                self._build_aot(args)
+            if self._aot is not None:
+                try:
+                    return self._aot(*args)
+                except TypeError:
+                    # e.g. same shape but different dtype than the lowering
+                    # was compiled for — the jit path recompiles and
+                    # answers; the handle loses only its fast path.
+                    pass
+        return self._fn(*args, **self._statics)
+
+
+class PassEngine:
+    """Stateful PASS serving facade: configure once, serve many.
+
+    ``source`` is a :class:`~repro.core.types.Synopsis` or any delta-merge
+    source exposing ``as_synopsis()`` (a ``StreamingIngestor`` serves
+    straight from its device-resident base+delta combine). ``serving`` and
+    ``ci`` are the frozen typed configs; ``ci=None`` serves plain
+    estimates, ``ci=0.95`` is shorthand for ``CIConfig(level=0.95)``.
+
+    ``answer()`` routes through an LRU prepared-plan cache keyed on
+    (batch shape, serving config, ci config); source changes invalidate
+    lazily through the epoch/generation counters, not the key.
+    ``prepare()`` returns the cache entry as an explicit handle. See
+    :class:`PreparedQuery` for what a hit skips.
+    """
+
+    def __init__(self, source, serving: ServingConfig | None = None,
+                 ci: CIConfig | float | None = None,
+                 plan_cache_size: int = 32):
+        self._source = source
+        self.serving = (serving or ServingConfig()).validate()
+        self.ci = as_ci_config(ci)
+        _validate_request(self.serving, self.ci)
+        if plan_cache_size < 1:
+            raise ValueError("plan_cache_size must be >= 1")
+        self._plan_cache_size = int(plan_cache_size)
+        self._cache: OrderedDict[tuple, PreparedQuery] = OrderedDict()
+        self._generation = 0
+        self._stats = {"hits": 0, "misses": 0, "evictions": 0,
+                       "invalidations": 0, "aot_compiles": 0}
+
+    # -- source ------------------------------------------------------------
+    @property
+    def source(self):
+        return self._source
+
+    @property
+    def epoch(self) -> int:
+        """Monotone change counter of the source (0 for an immutable
+        synopsis; streaming ingestors bump it per ingest/re-optimization)."""
+        return getattr(self._source, "epoch", 0)
+
+    def resolve(self):
+        """Current serving synopsis (delta-merged for streaming sources)."""
+        return _executor.resolve_synopsis(self._source)
+
+    def replace_source(self, source) -> "PassEngine":
+        """Swap the serving source (e.g. after ``reoptimize`` returned a
+        fresh ingestor) and invalidate every cached plan. The generation
+        bump also reaches handles the user still holds from ``prepare()``
+        (epochs alone cannot: two immutable synopses both report 0)."""
+        self._source = source
+        self._generation += 1
+        self.clear_cache()
+        self._stats["invalidations"] += 1
+        return self
+
+    # -- config plumbing ---------------------------------------------------
+    def _effective(self, kinds, ci, serving):
+        sv = serving if serving is not None else self.serving
+        if kinds is not None:
+            sv = dataclasses.replace(sv, kinds=kinds)
+        cfg = self.ci if ci is _UNSET else as_ci_config(ci)
+        _validate_request(sv.validate(), cfg)
+        return sv, cfg
+
+    # -- plan cache --------------------------------------------------------
+    # Epoch bumps need no eager sweep here: every PreparedQuery.__call__
+    # starts with _refresh(), which lazily re-pins the delta merge (and
+    # counts one invalidation) the next time that plan is actually used —
+    # O(1) per ingest instead of O(cache) per bump.
+
+    def _lookup(self, shape, serving, ci) -> PreparedQuery:
+        key = (tuple(shape), serving.cache_key(),
+               ci.cache_key() if ci is not None else None)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self._stats["hits"] += 1
+            return hit
+        self._stats["misses"] += 1
+        prepared = PreparedQuery(self, serving, ci, shape)
+        self._cache[key] = prepared
+        if len(self._cache) > self._plan_cache_size:
+            self._cache.popitem(last=False)
+            self._stats["evictions"] += 1
+        return prepared
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+    def stats(self) -> dict:
+        """Plan-cache instrumentation: hits/misses/evictions/invalidations/
+        aot_compiles plus current entry count and source epoch."""
+        return dict(self._stats, entries=len(self._cache), epoch=self.epoch)
+
+    # -- serving -----------------------------------------------------------
+    def prepare(self, queries_or_shape, *, kinds=None, ci=_UNSET,
+                serving: ServingConfig | None = None) -> PreparedQuery:
+        """Pin a (batch shape x config) serving entry and return the handle.
+
+        ``queries_or_shape`` is a :class:`QueryBatch` (its shape is used) or
+        a ``(Q, d)`` tuple. The handle is registered in the plan cache, so a
+        later same-shaped ``answer()`` call reuses it (and vice versa).
+        """
+        shape = (tuple(queries_or_shape.lo.shape)
+                 if hasattr(queries_or_shape, "lo")
+                 else tuple(queries_or_shape))
+        if len(shape) != 2:
+            raise ValueError(f"expected a (Q, d) batch shape, got {shape}")
+        sv, cfg = self._effective(kinds, ci, serving)
+        return self._lookup(shape, sv, cfg)
+
+    def answer(self, queries: QueryBatch, *, kinds=None, ci=_UNSET,
+               serving: ServingConfig | None = None,
+               plan=None) -> dict[str, QueryResult]:
+        """Answer a batch for every configured kind from one shared
+        artifact pass; returns ``{kind: QueryResult}``.
+
+        ``kinds=`` / ``ci=`` / ``serving=`` override the engine configs for
+        this call (overrides are themselves cached per shape x config).
+        ``plan=`` injects a planner ``QueryPlan``; plans are batch-specific
+        so that path bypasses the prepared-plan cache.
+        """
+        sv, cfg = self._effective(kinds, ci, serving)
+        if plan is not None:
+            _executor.count_artifact_pass(sv.kinds)
+            fn, statics, build = _dispatch_entry(sv, cfg)
+            args = build(self.resolve(), queries,
+                         _executor.plan_to_masks(plan))
+            return fn(*args, **statics)
+        return self._lookup(tuple(queries.lo.shape), sv, cfg)(queries)
+
+
+__all__ = ["PassEngine", "PreparedQuery"]

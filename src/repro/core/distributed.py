@@ -69,12 +69,12 @@ def serve_queries_sharded(mesh: Mesh, syn: Synopsis, queries: QueryBatch,
                           kind: str = "sum", lam: float = 2.576):
     """shard_queries mode: replicate synopsis, shard the query batch over
     every mesh axis. Q must divide the device count (pad upstream)."""
-    from . import estimators
+    from ..api import PassEngine, ServingConfig
+    eng = PassEngine(syn, serving=ServingConfig(kinds=(kind,), lam=lam))
     axes = tuple(mesh.axis_names)
 
     def shard_fn(q_lo, q_hi):
-        res = estimators.estimate(syn, QueryBatch(q_lo, q_hi), kind=kind,
-                                  lam=lam)
+        res = eng.answer(QueryBatch(q_lo, q_hi))[kind]
         return res.estimate, res.ci_half, res.lower, res.upper
 
     qspec = P(axes)

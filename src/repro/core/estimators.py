@@ -25,10 +25,11 @@ from .types import Synopsis, QueryBatch, QueryResult, REL_PARTIAL
 
 
 def estimate(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
-             lam: float = 2.576, use_fpc: bool = True,
-             zero_var_rule: bool = True, use_aggregates: bool = True,
-             avg_mode: str = "ratio") -> QueryResult:
-    """Answer a batch of rectangular aggregate queries from the synopsis.
+             lam: float | None = None, use_fpc: bool | None = None,
+             zero_var_rule: bool | None = None,
+             use_aggregates: bool | None = None,
+             avg_mode: str | None = None) -> QueryResult:
+    """Deprecated shim: answer one aggregate kind from the synopsis.
 
     use_aggregates=False disables the exact-cover shortcut and deterministic
     bounds: every relevant stratum is estimated from its samples. This turns
@@ -42,12 +43,22 @@ def estimate(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
     N_i for covered strata). 'stratum' is the paper's literal whole-stratum
     N_i weighting (biased when boundary strata are cut asymmetrically; kept
     for fidelity tests).
+
+    Use ``repro.api.PassEngine(syn,
+    serving=ServingConfig(kinds=(kind,))).answer(queries)[kind]`` instead;
+    unset kwargs inherit the ``ServingConfig`` defaults.
     """
-    from .. import engine
-    return engine.answer(syn, queries, kinds=(kind,), lam=lam,
-                         use_fpc=use_fpc, zero_var_rule=zero_var_rule,
-                         use_aggregates=use_aggregates,
-                         avg_mode=avg_mode)[kind]
+    from .. import api
+    from ..api.config import merge_overrides
+    api.warn_once(
+        "repro.core.estimators.estimate",
+        "repro.api.PassEngine(source, "
+        "serving=ServingConfig(kinds=(kind,))).answer(queries)[kind]")
+    serving = merge_overrides(
+        api.ServingConfig(kinds=(kind,)),
+        lam=lam, use_fpc=use_fpc, zero_var_rule=zero_var_rule,
+        use_aggregates=use_aggregates, avg_mode=avg_mode)
+    return api.PassEngine(syn, serving=serving).answer(queries)[kind]
 
 
 def _partial_mask(syn: Synopsis, queries: QueryBatch) -> jnp.ndarray:

@@ -17,31 +17,40 @@ from .types import Synopsis, QueryBatch, QueryResult
 
 
 def answer(syn: Synopsis, queries: QueryBatch, kind: str = "sum",
-           lam: float = 2.576, use_fpc: bool = True,
-           zero_var_rule: bool = True, use_aggregates: bool = True,
-           avg_mode: str = "ratio", kinds=None, backend: str | None = None,
-           plan=None, ci: float | None = None, ci_method: str = "clt",
-           small_n_threshold: int = 12, n_boot: int = 200, ci_key=None):
-    """Single-kind compatibility entry over the layered engine.
+           lam: float | None = None, use_fpc: bool | None = None,
+           zero_var_rule: bool | None = None,
+           use_aggregates: bool | None = None, avg_mode: str | None = None,
+           kinds=None, backend: str | None = None,
+           plan=None, ci: float | None = None, ci_method: str | None = None,
+           small_n_threshold: int | None = None, n_boot: int | None = None,
+           ci_key=None):
+    """Deprecated single-kind compatibility entry over the serving facade.
 
     Pass ``kinds=(...)`` to answer several aggregate kinds from one shared
     classification + moment pass; the result is then a ``{kind:
-    QueryResult}`` dict (see ``repro.engine.answer``). ``backend`` selects a
-    registered kernel backend per call; ``plan`` injects a planner
-    ``QueryPlan``. ``ci=0.95`` returns calibrated intervals through the
-    uncertainty subsystem: ``result.interval()`` is (estimate, lo, hi).
+    QueryResult}`` dict. Use ``repro.api.PassEngine`` instead — unset
+    kwargs inherit the ``ServingConfig``/``CIConfig`` defaults (the single
+    source of truth), and a long-lived engine caches prepared plans.
     """
-    from .. import engine
+    from .. import api
+    from ..api.config import merge_overrides
+    api.warn_once(
+        "repro.core.answer",
+        "repro.api.PassEngine(source, serving=ServingConfig(kinds=...), "
+        "ci=CIConfig(level=...)).answer(queries)")
     multi = kinds is not None
-    if not multi:
-        kinds = (kind,)
-    out = engine.answer(syn, queries, kinds=kinds, lam=lam, use_fpc=use_fpc,
-                        zero_var_rule=zero_var_rule,
-                        use_aggregates=use_aggregates, avg_mode=avg_mode,
-                        backend=backend, plan=plan, ci=ci,
-                        ci_method=ci_method,
-                        small_n_threshold=small_n_threshold, n_boot=n_boot,
-                        ci_key=ci_key)
+    serving = merge_overrides(
+        api.ServingConfig(kinds=kinds if multi else (kind,),
+                          backend=backend),
+        lam=lam, use_fpc=use_fpc, zero_var_rule=zero_var_rule,
+        use_aggregates=use_aggregates, avg_mode=avg_mode)
+    ci_cfg = None
+    if ci is not None:
+        ci_cfg = merge_overrides(
+            api.CIConfig(level=float(ci)), method=ci_method,
+            small_n_threshold=small_n_threshold, n_boot=n_boot, key=ci_key)
+    out = api.PassEngine(syn, serving=serving, ci=ci_cfg).answer(
+        queries, plan=plan)
     return out if multi else out[kind]
 
 

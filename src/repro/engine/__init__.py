@@ -6,11 +6,10 @@
   frontier aggregates, stratified moments) computed once per batch through
   the kernel-backend registry.
 * :mod:`assemble` — every requested aggregate kind derived from the shared
-  artifacts: ``answer(syn, queries, kinds=("sum", "count", "avg"))``;
-  ``answer(..., ci=0.95)`` routes through :mod:`repro.uncertainty` and
-  returns calibrated (estimate, lo, hi) intervals per kind.
+  artifacts from one compiled program (``_answer_jit``).
 
-``core.estimators`` remains a thin compatibility shim over this package.
+The user-facing serving entry is :mod:`repro.api` (``PassEngine``); this
+package's ``answer`` and ``core.estimators`` are deprecated shims over it.
 """
 from .planner import QueryPlan, plan_queries, relation_masks
 from .executor import Artifacts, artifacts, compute_artifacts, OP_COUNTS, \

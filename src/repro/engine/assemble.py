@@ -16,9 +16,11 @@ Estimator semantics follow the paper exactly:
   * 0-variance rule for AVG (§3.4): partial strata with MIN == MAX behave as
     covered.
 
-`answer` is the serving entry point: one classification + one moment pass
-answers the whole ``kinds`` tuple, so a 3-aggregate request costs one
-artifact stage instead of three.
+``_answer_jit`` is the compiled serving core: one classification + one
+moment pass answers the whole ``kinds`` tuple, so a 3-aggregate request
+costs one artifact stage instead of three. The user-facing entry is
+``repro.api.PassEngine`` (this module's ``answer`` is its deprecated
+free-function shim).
 """
 from __future__ import annotations
 
@@ -232,60 +234,39 @@ def _answer_jit(syn, queries, lam, plan_masks, kinds, use_fpc,
 
 
 def answer(syn: Synopsis, queries: QueryBatch, kinds=("sum",), *,
-           lam: float = 2.576, use_fpc: bool = True,
-           zero_var_rule: bool = True, use_aggregates: bool = True,
-           avg_mode: str = "ratio", backend: str | None = None,
-           plan=None, ci: float | None = None, ci_method: str = "clt",
-           small_n_threshold: int = 12, n_boot: int = 200,
+           lam: float | None = None, use_fpc: bool | None = None,
+           zero_var_rule: bool | None = None,
+           use_aggregates: bool | None = None, avg_mode: str | None = None,
+           backend: str | None = None,
+           plan=None, ci: float | None = None, ci_method: str | None = None,
+           small_n_threshold: int | None = None, n_boot: int | None = None,
            ci_key=None) -> dict[str, QueryResult]:
-    """Answer a batch of rectangular aggregate queries for every requested
-    aggregate kind from one shared artifact pass.
+    """Deprecated shim: answer a batch of rectangular aggregate queries for
+    every requested aggregate kind from one shared artifact pass.
 
-    Returns ``{kind: QueryResult}``. ``syn`` may be a :class:`Synopsis` or a
-    delta-merge source with ``as_synopsis()`` (a streaming ingestor serves
-    straight from its device-resident base+delta combine). ``backend`` picks
-    a registered kernel backend per call; ``plan`` substitutes a planner
-    QueryPlan's frontier for the batched leaf classification.
-    ``use_aggregates=False`` disables the exact-cover shortcut and
-    deterministic bounds (the ST/US baselines).
-
-    ``ci=level`` (e.g. ``ci=0.95``) routes through the uncertainty
-    subsystem: each QueryResult's ``.interval()`` returns calibrated
-    (estimate, lo, hi) endpoints — exact-covered queries get zero-width
-    intervals, strata with effective n below ``small_n_threshold`` use the
-    Bernstein/range fallback. ``ci_method='bootstrap'`` swaps in the
-    key-threaded Poisson bootstrap (``n_boot`` replicates, ``ci_key`` or
-    the default key 0).
+    Returns ``{kind: QueryResult}``. Use ``repro.api.PassEngine`` instead —
+    the frozen ``ServingConfig`` / ``CIConfig`` dataclasses there are the
+    single source of truth for every default this signature used to
+    duplicate (unset kwargs below inherit them), and a long-lived engine
+    additionally caches prepared per-shape plans across calls.
     """
-    syn = _executor.resolve_synopsis(syn)
-    if isinstance(kinds, str):
-        kinds = (kinds,)
-    kinds = tuple(kinds)
-    for k in kinds:
-        if k not in KINDS:
-            raise ValueError(f"unknown kind: {k}")
+    from .. import api
+    from ..api.config import merge_overrides
+    api.warn_once(
+        "repro.engine.answer",
+        "repro.api.PassEngine(source, serving=ServingConfig(kinds=...), "
+        "ci=CIConfig(level=...)).answer(queries)")
+    serving = merge_overrides(
+        api.ServingConfig(kinds=kinds, backend=backend),
+        lam=lam, use_fpc=use_fpc, zero_var_rule=zero_var_rule,
+        use_aggregates=use_aggregates, avg_mode=avg_mode)
+    ci_cfg = None
     if ci is not None:
-        from .. import uncertainty
-        if ci_method == "clt":
-            return uncertainty.answer_with_ci(
-                syn, queries, kinds, level=ci,
-                small_n_threshold=small_n_threshold, use_fpc=use_fpc,
-                zero_var_rule=zero_var_rule, use_aggregates=use_aggregates,
-                avg_mode=avg_mode, backend=backend, plan=plan)
-        if ci_method == "bootstrap":
-            if "avg" in kinds and avg_mode != "ratio":
-                raise ValueError(
-                    "bootstrap intervals support avg_mode='ratio' only")
-            return uncertainty.poisson_bootstrap(
-                syn, queries, kinds, level=ci, n_boot=n_boot, key=ci_key,
-                use_aggregates=use_aggregates, backend=backend, plan=plan)
-        raise ValueError(f"unknown ci_method: {ci_method!r}")
-    _executor.count_artifact_pass(kinds)
-    plan_masks = _executor.plan_to_masks(plan)
-    from ..kernels.registry import get_backend
-    return _answer_jit(syn, queries, lam, plan_masks, kinds, use_fpc,
-                       zero_var_rule, use_aggregates, avg_mode,
-                       get_backend(backend).name)
+        ci_cfg = merge_overrides(
+            api.CIConfig(level=float(ci)), method=ci_method,
+            small_n_threshold=small_n_threshold, n_boot=n_boot, key=ci_key)
+    eng = api.PassEngine(syn, serving=serving, ci=ci_cfg)
+    return eng.answer(queries, plan=plan)
 
 
 __all__ = ["assemble", "answer", "avg_ratio_terms", "KINDS"]

@@ -278,7 +278,15 @@ class StreamingIngestor:
         # deterministic across hosts and jax versions (threefry-stable).
         self._key = key if key is not None else jax.random.PRNGKey(seed)
         self.n_stream = 0
+        self._epoch = 0
         self._merged: Synopsis | None = None
+
+    @property
+    def epoch(self) -> int:
+        """Monotone delta-merge epoch: bumps on every ingested batch, so
+        serving layers (``repro.api.PassEngine``) can invalidate prepared
+        artifacts pinned to a stale merge."""
+        return self._epoch
 
     # -- ingestion -----------------------------------------------------------
     def ingest(self, c_rows, a_vals, u=None) -> "StreamingIngestor":
@@ -302,6 +310,7 @@ class StreamingIngestor:
             u = jnp.asarray(u, jnp.float32)
             self.state = _ingest_step(self.state, c, a, u, self._backend)
         self.n_stream += b
+        self._epoch += 1
         self._merged = None
         return self
 

@@ -13,8 +13,10 @@ one-pass artifacts:
   bootstrap (weighted one-pass kernels) as a cross-check for non-linear
   aggregates.
 
-Serving entry point: ``engine.answer(syn, queries, kinds, ci=0.95)``
-returns QueryResults whose ``.interval()`` is (estimate, lo, hi).
+Serving entry point: ``repro.api.PassEngine(syn, ci=CIConfig(level=0.95))``
+returns QueryResults whose ``.interval()`` is (estimate, lo, hi); the
+``answer_with_ci`` / ``poisson_bootstrap`` free functions are deprecated
+shims over it.
 """
 from .intervals import normal_quantile, compose_interval, answer_with_ci
 from .bootstrap import poisson_bootstrap, BOOT_KINDS

@@ -115,33 +115,34 @@ def poisson_bootstrap(syn, queries: QueryBatch, kinds=("avg",), *,
                       normalize: str = "hajek", use_aggregates: bool = True,
                       backend: str | None = None,
                       plan=None) -> dict[str, QueryResult]:
-    """Percentile bootstrap intervals for ``kinds`` (subset of SUM/COUNT/
-    AVG). Returns ``{kind: QueryResult}`` with ``ci_lo``/``ci_hi`` set to
-    the (1-level)/2 replicate percentiles and ``estimate`` the plain
-    (non-resampled) estimator.
+    """Deprecated shim: percentile bootstrap intervals for ``kinds``
+    (subset of SUM/COUNT/AVG). Returns ``{kind: QueryResult}`` with
+    ``ci_lo``/``ci_hi`` set to the (1-level)/2 replicate percentiles and
+    ``estimate`` the plain (non-resampled) estimator.
 
     ``key`` (or ``seed``) fully determines the resample weights —
     replicates use ``fold_in(key, r)``, so results are bit-reproducible.
     ``normalize='hajek'`` rescales each stratum by its resampled size
     (recommended for AVG); ``'ht'`` keeps the fixed N_i/K_i design scale.
+
+    Use ``repro.api.PassEngine(syn, serving=ServingConfig(kinds=...),
+    ci=CIConfig(method='bootstrap', ...)).answer(queries)`` instead.
     """
-    if not 0.0 < level < 1.0:
-        raise ValueError(f"confidence level must be in (0, 1), got {level}")
-    if normalize not in ("hajek", "ht"):
-        raise ValueError(f"unknown normalize: {normalize!r}")
-    kinds = (kinds,) if isinstance(kinds, str) else tuple(kinds)
-    for kind in kinds:
-        if kind not in BOOT_KINDS:
-            raise ValueError(f"bootstrap supports {BOOT_KINDS}, got {kind!r}")
-    if key is None:
-        key = jax.random.PRNGKey(seed)
-    syn = _executor.resolve_synopsis(syn)
-    _executor.count_artifact_pass(kinds)
-    return _bootstrap_jit(syn, queries, _executor.plan_to_masks(plan), key,
-                          kinds=kinds, n_boot=int(n_boot),
-                          level=float(level), normalize=normalize,
-                          use_aggregates=use_aggregates,
-                          backend_name=get_backend(backend).name)
+    from .. import api
+    api.warn_once(
+        "repro.uncertainty.poisson_bootstrap",
+        "repro.api.PassEngine(syn, serving=ServingConfig(kinds=...), "
+        "ci=CIConfig(level=..., method='bootstrap', n_boot=..., key=...))"
+        ".answer(queries)")
+    eng = api.PassEngine(
+        syn,
+        serving=api.ServingConfig(kinds=kinds,
+                                  use_aggregates=use_aggregates,
+                                  backend=backend),
+        ci=api.CIConfig(level=level, method="bootstrap", n_boot=int(n_boot),
+                        key=key if key is not None else int(seed),
+                        boot_normalize=normalize))
+    return eng.answer(queries, plan=plan)
 
 
 __all__ = ["poisson_bootstrap", "BOOT_KINDS"]

@@ -113,7 +113,7 @@ def _fallback_half(syn: Synopsis, var_hat, range_hi, range_lo,
 
 def compose_interval(syn: Synopsis, art, kind: str, level: float,
                      small_n_threshold: int = 12, use_fpc: bool = True,
-                     avg_mode: str = "ratio"):
+                     avg_mode: str = "ratio", delta_budget: str = "stratum"):
     """Half-width of the ``level`` interval for one kind from shared
     artifacts. Returns (half, n_fallback) with half (Q,) f32 and
     n_fallback (Q,) the number of strata answered by the fallback bound.
@@ -121,10 +121,22 @@ def compose_interval(syn: Synopsis, art, kind: str, level: float,
     Exact strata are forced to exactly zero variance: every term below is
     masked to sampled (partial, non-covered) strata, so a query whose MCF is
     all covered nodes accumulates an empty sum and ``half == 0.0``.
+
+    ``delta_budget`` picks how the fallback failure probability is split
+    over a query's fallback strata (ROADMAP follow-up):
+
+    * ``'stratum'`` — every fallback stratum spends the full
+      ``delta = 1 - level`` (the historical behaviour; the summed bound's
+      JOINT failure probability is only bounded by ``n_fb * delta``);
+    * ``'union'``   — per-query union-bound budgeting
+      ``delta_i = (1 - level) / n_fallback_strata``, making the joint
+      fallback guarantee hold at the reported level (identical when a
+      query has at most one fallback stratum).
     """
+    if delta_budget not in ("stratum", "union"):
+        raise ValueError(f"unknown delta_budget: {delta_budget!r}")
     z = _z_of(level)
     delta = 1.0 - level
-    log_term = jnp.float32(jnp.log(3.0 / delta))
     sampled = art.partial & ~art.cover
     sampf = sampled.astype(jnp.float32)
     k_pred = art.k_pred
@@ -132,6 +144,12 @@ def compose_interval(syn: Synopsis, art, kind: str, level: float,
     fbf = fb.astype(jnp.float32)
     cltf = sampf * (1.0 - fbf)
     n_fallback = jnp.sum(fbf, axis=1)
+    if delta_budget == "union":
+        # (Q, 1): each stratum's Bernstein bound runs at delta / n_fb.
+        log_term = jnp.log(
+            3.0 * jnp.maximum(n_fallback, 1.0) / delta)[:, None]
+    else:
+        log_term = jnp.float32(jnp.log(3.0 / delta))
 
     if kind in ("sum", "count"):
         v_clt, var_hat, r_hi, r_lo, ns_half = _stratum_terms(
@@ -191,10 +209,10 @@ def _with_interval(res: QueryResult, half, clip_bounds: bool) -> QueryResult:
 @partial(jax.jit, static_argnames=("kinds", "level", "small_n_threshold",
                                    "use_fpc", "zero_var_rule",
                                    "use_aggregates", "avg_mode",
-                                   "backend_name"))
+                                   "delta_budget", "backend_name"))
 def _ci_answer_jit(syn, queries, plan_masks, kinds, level, small_n_threshold,
                    use_fpc, zero_var_rule, use_aggregates, avg_mode,
-                   backend_name):
+                   delta_budget, backend_name):
     """One compiled program: one artifact stage feeding every requested
     kind's estimate epilogue AND its interval composition."""
     z = _z_of(level)
@@ -209,7 +227,8 @@ def _ci_answer_jit(syn, queries, plan_masks, kinds, level, small_n_threshold,
         if kind in ("sum", "count", "avg"):
             half, _ = compose_interval(syn, art, kind, level,
                                        small_n_threshold=small_n_threshold,
-                                       use_fpc=use_fpc, avg_mode=avg_mode)
+                                       use_fpc=use_fpc, avg_mode=avg_mode,
+                                       delta_budget=delta_budget)
             out[kind] = _with_interval(res, half, clip_bounds=use_aggregates)
         else:
             # MIN/MAX: assemble already sets the deterministic envelope as
@@ -222,21 +241,30 @@ def answer_with_ci(syn, queries: QueryBatch, kinds, *, level: float,
                    small_n_threshold: int = 12, use_fpc: bool = True,
                    zero_var_rule: bool = True, use_aggregates: bool = True,
                    avg_mode: str = "ratio", backend: str | None = None,
-                   plan=None) -> dict[str, QueryResult]:
-    """`engine.answer(..., ci=level)` backend: every requested kind's
-    QueryResult carries calibrated ``ci_lo``/``ci_hi`` endpoints (and
-    ``ci_half`` set to the composed half-width), from ONE artifact pass."""
-    normal_quantile(level)                       # validate eagerly
-    from ..kernels.registry import get_backend
-    syn = _executor.resolve_synopsis(syn)
-    kinds = tuple(kinds)
-    _executor.count_artifact_pass(kinds)
-    return _ci_answer_jit(syn, queries, _executor.plan_to_masks(plan),
-                          kinds=kinds, level=float(level),
-                          small_n_threshold=int(small_n_threshold),
-                          use_fpc=use_fpc, zero_var_rule=zero_var_rule,
-                          use_aggregates=use_aggregates, avg_mode=avg_mode,
-                          backend_name=get_backend(backend).name)
+                   plan=None, delta_budget: str = "stratum"
+                   ) -> dict[str, QueryResult]:
+    """Deprecated shim: every requested kind's QueryResult carries
+    calibrated ``ci_lo``/``ci_hi`` endpoints from ONE artifact pass.
+
+    Use ``repro.api.PassEngine(syn, serving=ServingConfig(kinds=...),
+    ci=CIConfig(level=...)).answer(queries)`` instead — the configs there
+    are the single source of truth for these defaults.
+    """
+    from .. import api
+    api.warn_once(
+        "repro.uncertainty.answer_with_ci",
+        "repro.api.PassEngine(syn, serving=ServingConfig(kinds=...), "
+        "ci=CIConfig(level=..., method='clt')).answer(queries)")
+    eng = api.PassEngine(
+        syn,
+        serving=api.ServingConfig(
+            kinds=tuple(kinds), backend=backend, use_fpc=use_fpc,
+            zero_var_rule=zero_var_rule, use_aggregates=use_aggregates,
+            avg_mode=avg_mode),
+        ci=api.CIConfig(level=float(level), method="clt",
+                        small_n_threshold=int(small_n_threshold),
+                        delta_budget=delta_budget))
+    return eng.answer(queries, plan=plan)
 
 
 __all__ = ["normal_quantile", "compose_interval", "answer_with_ci"]

@@ -1,0 +1,384 @@
+"""PassEngine facade: bit-identity with the legacy free-function API (all
+kinds, both ci methods, static and streaming sources), the prepared-query
+plan cache (hits/misses/evictions/invalidation, no extra artifact passes),
+and the warn-once deprecation shims."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+import jax
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st
+
+from repro import engine, uncertainty
+from repro.api import (PassEngine, PreparedQuery, ServingConfig, CIConfig,
+                       reset_deprecation_warnings)
+from repro.core import build_synopsis, random_queries
+from repro.core import query as core_query
+from repro.core import estimators as E
+from repro.core.types import QueryBatch
+
+ALL_KINDS = ("sum", "count", "avg", "min", "max")
+FIELDS = ("estimate", "ci_half", "lower", "upper", "frac_rows_touched")
+
+
+@pytest.fixture()
+def op_counts():
+    engine.reset_op_counts()
+    from repro.engine import planner
+    planner.clear_relation_cache()
+    yield engine.OP_COUNTS
+    engine.reset_op_counts()
+
+
+def _make(seed=0, n=20000, k=16, rate=0.02):
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.lognormal(0, 1, n) * (1 + np.sin(c / 5))
+    syn, _ = build_synopsis(c, a, k=k, sample_rate=rate, method="eq",
+                            seed=seed)
+    return c, a, syn
+
+
+def _legacy(fn, *args, **kw):
+    """Run a deprecated entrypoint with its warning suppressed."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kw)
+
+
+def _assert_results_equal(got, want, fields=FIELDS):
+    assert set(got) == set(want)
+    for kind in want:
+        for f in fields:
+            g, w = getattr(got[kind], f), getattr(want[kind], f)
+            if g is None or w is None:
+                assert g is None and w is None, (kind, f)
+                continue
+            assert np.array_equal(np.asarray(g), np.asarray(w)), (kind, f)
+
+
+# --------------------------------------------------------------------------
+# Bit-identity with the legacy path
+# --------------------------------------------------------------------------
+
+def test_passengine_bit_identical_to_legacy_all_kinds():
+    """Acceptance: PassEngine answers == legacy engine.answer, every kind,
+    every result field, repeated calls (cache hits) included."""
+    c, a, syn = _make()
+    qs = random_queries(c, 64, seed=1)
+    legacy = _legacy(engine.answer, syn, qs, kinds=ALL_KINDS)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=ALL_KINDS))
+    _assert_results_equal(eng.answer(qs), legacy)
+    _assert_results_equal(eng.answer(qs), legacy)   # cache-hit path
+    _assert_results_equal(eng.answer(qs), legacy)   # AOT path
+    assert eng.stats()["hits"] == 2
+
+
+def test_passengine_bit_identical_ci_both_methods():
+    c, a, syn = _make(seed=3)
+    qs = random_queries(c, 48, seed=2, min_frac=0.05, max_frac=0.4)
+    kinds = ("sum", "count", "avg")
+    # CLT composition
+    legacy = _legacy(engine.answer, syn, qs, kinds=kinds, ci=0.95)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=kinds), ci=0.95)
+    for _ in range(3):                               # jit, AOT-build, AOT
+        got = eng.answer(qs)
+        _assert_results_equal(got, legacy,
+                              fields=FIELDS + ("ci_lo", "ci_hi"))
+    # Poisson bootstrap (key-deterministic)
+    key = jax.random.PRNGKey(7)
+    legacy_b = _legacy(uncertainty.poisson_bootstrap, syn, qs, ("avg",),
+                       n_boot=24, key=key)
+    eng_b = PassEngine(syn, serving=ServingConfig(kinds=("avg",)),
+                      ci=CIConfig(level=0.95, method="bootstrap",
+                                  n_boot=24, key=key))
+    for _ in range(3):
+        _assert_results_equal(eng_b.answer(qs), legacy_b,
+                              fields=FIELDS + ("ci_lo", "ci_hi"))
+
+
+def test_passengine_streaming_source_bit_identical():
+    """Both ci methods serve a streaming ingestor identically to the
+    legacy path on the same delta-merged state."""
+    from repro.streaming import StreamingIngestor
+    c, a, syn = _make(k=8, n=10000)
+    rng = np.random.default_rng(5)
+    ing = StreamingIngestor(syn, seed=2).ingest(
+        rng.uniform(0, 100, 2048), rng.lognormal(0, 1, 2048))
+    qs = random_queries(c, 32, seed=5, min_frac=0.1, max_frac=0.5)
+    legacy = _legacy(engine.answer, ing, qs, kinds=("sum", "avg"), ci=0.95)
+    eng = PassEngine(ing, serving=ServingConfig(kinds=("sum", "avg")),
+                     ci=0.95)
+    _assert_results_equal(eng.answer(qs), legacy,
+                          fields=FIELDS + ("ci_lo", "ci_hi"))
+    legacy_b = _legacy(engine.answer, ing, qs, kinds=("sum",), ci=0.95,
+                       ci_method="bootstrap", n_boot=16)
+    got_b = eng.answer(qs, kinds=("sum",),
+                       ci=CIConfig(level=0.95, method="bootstrap",
+                                   n_boot=16))
+    _assert_results_equal(got_b, legacy_b,
+                          fields=FIELDS + ("ci_lo", "ci_hi"))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_cached_and_uncached_answers_bit_identical(seed):
+    """Hypothesis property: a plan-cache hit (and the AOT fast path behind
+    it) returns bit-identical arrays to a fresh, uncached engine."""
+    rng = np.random.default_rng(seed)
+    n, k = 6000, 8
+    c = np.sort(rng.uniform(0, 50, n))
+    a = rng.lognormal(0, 1, n)
+    syn, _ = build_synopsis(c, a, k=k, sample_budget=k * 32, method="eq",
+                            seed=seed + 1)
+    qs = random_queries(c, 16, seed=seed + 2)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum", "avg")))
+    warm = eng.answer(qs)
+    for _ in range(2):
+        cached = eng.answer(qs)
+        fresh = PassEngine(
+            syn, serving=ServingConfig(kinds=("sum", "avg"))).answer(qs)
+        _assert_results_equal(cached, warm)
+        _assert_results_equal(cached, fresh)
+    assert eng.stats()["hits"] >= 2
+
+
+# --------------------------------------------------------------------------
+# Plan cache
+# --------------------------------------------------------------------------
+
+def test_plan_cache_hits_and_single_artifact_pass(op_counts):
+    """Same-shape batches hit the cache and cost exactly ONE artifact pass
+    per call — no extra classification/moment pass for re-preparation."""
+    c, a, syn = _make(k=8, n=5000)
+    qs = random_queries(c, 32, seed=1)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum", "avg")))
+    for i in range(4):
+        eng.answer(qs)
+        assert op_counts["classify"] == i + 1
+        assert op_counts["moments"] == i + 1
+    s = eng.stats()
+    assert s["misses"] == 1 and s["hits"] == 3 and s["entries"] == 1
+
+
+def test_plan_cache_shape_and_config_changes_miss():
+    c, a, syn = _make(k=8, n=5000)
+    qs32 = random_queries(c, 32, seed=1)
+    qs16 = random_queries(c, 16, seed=2)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    eng.answer(qs32)
+    eng.answer(qs16)                                  # shape change
+    eng.answer(qs32, kinds=("count",))                # config change
+    eng.answer(qs32, ci=0.9)                          # ci change
+    assert eng.stats()["misses"] == 4
+    assert eng.stats()["hits"] == 0
+    eng.answer(qs32)
+    eng.answer(qs16)
+    assert eng.stats()["hits"] == 2
+
+
+def test_plan_cache_lru_eviction():
+    c, a, syn = _make(k=4, n=2000)
+    eng = PassEngine(syn, plan_cache_size=2)
+    batches = [random_queries(c, q, seed=q) for q in (8, 12, 16)]
+    for qs in batches:
+        eng.answer(qs)
+    assert eng.stats() == dict(eng.stats(), evictions=1, entries=2)
+    eng.answer(batches[0])                            # evicted -> miss again
+    assert eng.stats()["misses"] == 4
+
+
+def test_streaming_ingest_invalidates_prepared_plans():
+    """An ingest() epoch bump re-pins every cached plan onto the fresh
+    delta merge: answers track the stream and stats count invalidations."""
+    from repro.streaming import StreamingIngestor
+    c, a, syn = _make(k=8, n=10000)
+    rng = np.random.default_rng(7)
+    ing = StreamingIngestor(syn, seed=3)
+    eng = PassEngine(ing, serving=ServingConfig(kinds=("count",)))
+    qs = random_queries(c, 32, seed=4, min_frac=0.2, max_frac=0.5)
+    prepared = eng.prepare(qs)
+    before = prepared(qs)
+    prepared(qs)                                       # AOT path warm
+    assert ing.epoch == 0
+    ing.ingest(rng.uniform(0, 100, 4096), rng.lognormal(0, 1, 4096))
+    assert ing.epoch == 1
+    after = prepared(qs)                               # handle stays valid
+    assert eng.stats()["invalidations"] >= 1
+    assert not np.array_equal(np.asarray(before["count"].estimate),
+                              np.asarray(after["count"].estimate))
+    # correctness of the re-pinned plan: identical to a cold engine on the
+    # same merged state
+    fresh = PassEngine(ing.as_synopsis(),
+                       serving=ServingConfig(kinds=("count",))).answer(qs)
+    _assert_results_equal(after, fresh)
+
+
+def test_prepared_handle_shape_fallback():
+    """A differently-shaped batch through a handle falls back to the
+    engine (a cache miss), never a wrong answer."""
+    c, a, syn = _make(k=8, n=5000)
+    qs32 = random_queries(c, 32, seed=1)
+    qs8 = random_queries(c, 8, seed=2)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    prepared = eng.prepare(qs32)
+    got = prepared(qs8)
+    want = PassEngine(syn, serving=ServingConfig(kinds=("sum",))).answer(qs8)
+    _assert_results_equal(got, want)
+    assert eng.stats()["misses"] == 2                  # (32,) and (8,) entries
+
+
+def test_prepare_accepts_shape_tuple_and_registers_entry():
+    c, a, syn = _make(k=4, n=2000)
+    eng = PassEngine(syn)
+    prepared = eng.prepare((16, syn.d))
+    assert isinstance(prepared, PreparedQuery)
+    qs = random_queries(c, 16, seed=3)
+    prepared(qs)
+    eng.answer(qs)                                     # hits the same entry
+    assert eng.stats()["hits"] == 1 and eng.stats()["misses"] == 1
+
+
+def test_replace_source_invalidates():
+    """replace_source() must reach both the engine cache AND handles the
+    user still holds (two immutable synopses both report epoch 0, so the
+    engine generation counter carries the invalidation)."""
+    c, a, syn = _make(k=4, n=2000)
+    c2, a2, syn2 = _make(seed=9, k=4, n=2000)
+    qs = random_queries(c, 8, seed=1)
+    eng = PassEngine(syn)
+    held = eng.prepare(qs)
+    r1 = held(qs)
+    held(qs)                                       # AOT path warm
+    eng.replace_source(syn2)
+    assert eng.stats()["entries"] == 0
+    r2 = eng.answer(qs)
+    assert not np.array_equal(np.asarray(r1["sum"].estimate),
+                              np.asarray(r2["sum"].estimate))
+    _assert_results_equal(held(qs), r2)            # held handle re-pinned
+
+
+def test_prepared_dtype_change_falls_back_not_raises():
+    """Same shape but a different dtype than the AOT lowering was built
+    for must fall through to the jit path, not raise."""
+    import jax.numpy as jnp
+    c, a, syn = _make(k=4, n=2000)
+    qs = random_queries(c, 8, seed=1)
+    eng = PassEngine(syn)
+    prepared = eng.prepare(qs)
+    prepared(qs)
+    prepared(qs)                                   # AOT built on f32
+    qs_int = QueryBatch(
+        jnp.asarray(np.floor(np.asarray(qs.lo)), jnp.int32),
+        jnp.asarray(np.ceil(np.asarray(qs.hi)), jnp.int32))
+    assert qs_int.lo.dtype != qs.lo.dtype
+    got = prepared(qs_int)
+    want = PassEngine(syn).answer(qs_int)
+    _assert_results_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# Config validation
+# --------------------------------------------------------------------------
+
+def test_config_validation_errors():
+    c, a, syn = _make(k=4, n=2000)
+    with pytest.raises(ValueError, match="unknown kind"):
+        PassEngine(syn, serving=ServingConfig(kinds=("sum", "median")))
+    with pytest.raises(ValueError, match="confidence level"):
+        PassEngine(syn, ci=2.0)
+    with pytest.raises(ValueError, match="unknown ci_method"):
+        PassEngine(syn, ci=CIConfig(method="magic"))
+    with pytest.raises(ValueError, match="unknown delta_budget"):
+        PassEngine(syn, ci=CIConfig(delta_budget="bonferroni"))
+    with pytest.raises(ValueError, match="unknown normalize"):
+        PassEngine(syn, ci=CIConfig(boot_normalize="x"))
+    with pytest.raises(ValueError, match="bootstrap supports"):
+        PassEngine(syn, serving=ServingConfig(kinds=("min",)),
+                   ci=CIConfig(method="bootstrap"))
+    with pytest.raises(ValueError, match="ratio"):
+        PassEngine(syn, serving=ServingConfig(kinds=("avg",),
+                                              avg_mode="stratum"), ci=0.95)
+    with pytest.raises(ValueError, match="plan_cache_size"):
+        PassEngine(syn, plan_cache_size=0)
+    # configs are frozen: no mutation after construction
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ServingConfig().kinds = ("sum",)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        CIConfig().level = 0.9
+
+
+# --------------------------------------------------------------------------
+# Deprecation shims
+# --------------------------------------------------------------------------
+
+def _shim_calls(syn, qs):
+    return [
+        ("repro.engine.answer",
+         lambda: engine.answer(syn, qs, kinds=("sum",))),
+        ("repro.core.answer",
+         lambda: core_query.answer(syn, qs, kind="sum")),
+        ("repro.core.estimators.estimate",
+         lambda: E.estimate(syn, qs, kind="sum")),
+        ("repro.uncertainty.answer_with_ci",
+         lambda: uncertainty.answer_with_ci(syn, qs, ("sum",), level=0.95)),
+        ("repro.uncertainty.poisson_bootstrap",
+         lambda: uncertainty.poisson_bootstrap(syn, qs, ("sum",),
+                                               n_boot=8)),
+    ]
+
+
+def test_deprecation_warns_once_per_entrypoint_with_replacement():
+    """Every legacy entrypoint fires exactly ONE DeprecationWarning per
+    process naming the PassEngine replacement; subsequent calls are
+    silent."""
+    c, a, syn = _make(k=4, n=2000)
+    qs = random_queries(c, 8, seed=1)
+    for name, call in _shim_calls(syn, qs):
+        reset_deprecation_warnings()
+        with pytest.warns(DeprecationWarning,
+                          match=r"use repro\.api\.PassEngine") as rec:
+            call()
+        ours = [w for w in rec if name in str(w.message)]
+        assert len(ours) == 1, (name, [str(w.message) for w in rec])
+        with warnings.catch_warnings(record=True) as again:
+            warnings.simplefilter("always")
+            call()
+        assert not [w for w in again
+                    if issubclass(w.category, DeprecationWarning)], name
+
+
+def test_shims_return_bit_identical_results():
+    """Old-vs-new equality through every shim (the shims ARE PassEngine
+    underneath, so this locks the argument plumbing)."""
+    c, a, syn = _make(k=8, n=5000)
+    qs = random_queries(c, 16, seed=2)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=ALL_KINDS))
+    new = eng.answer(qs)
+    legacy_multi = _legacy(engine.answer, syn, qs, kinds=ALL_KINDS)
+    _assert_results_equal(legacy_multi, new)
+    for kind in ALL_KINDS:
+        single = _legacy(E.estimate, syn, qs, kind=kind)
+        core_single = _legacy(core_query.answer, syn, qs, kind=kind)
+        for f in FIELDS:
+            assert np.array_equal(np.asarray(getattr(single, f)),
+                                  np.asarray(getattr(new[kind], f)))
+            assert np.array_equal(np.asarray(getattr(core_single, f)),
+                                  np.asarray(getattr(new[kind], f)))
+
+
+def test_answer_overrides_do_not_mutate_engine_config():
+    c, a, syn = _make(k=4, n=2000)
+    qs = random_queries(c, 8, seed=1)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    out = eng.answer(qs, kinds=("count", "max"))
+    assert set(out) == {"count", "max"}
+    assert eng.serving.kinds == ("sum",)
+    out2 = eng.answer(qs, ci=0.9)
+    assert out2["sum"].ci_lo is not None
+    assert eng.ci is None

@@ -1,0 +1,57 @@
+"""Public-API surface snapshot: `repro.api.__all__` plus the PassEngine /
+config signatures are asserted against a checked-in snapshot
+(tests/data/api_surface.json), so future PRs change the public serving
+surface deliberately, not accidentally.
+
+To update after an intentional change:
+
+    REPRO_UPDATE_API_SNAPSHOT=1 PYTHONPATH=src \
+        python -m pytest tests/test_api_surface.py
+
+then commit the regenerated snapshot together with the code change.
+"""
+import dataclasses
+import inspect
+import json
+import os
+import pathlib
+
+import repro.api as api
+
+SNAPSHOT = pathlib.Path(__file__).parent / "data" / "api_surface.json"
+
+
+def _sig(obj) -> str:
+    return str(inspect.signature(obj))
+
+
+def _config_fields(cls) -> dict:
+    return {f.name: repr(f.default) if f.default is not dataclasses.MISSING
+            else "<required>" for f in dataclasses.fields(cls)}
+
+
+def current_surface() -> dict:
+    return {
+        "repro.api.__all__": sorted(api.__all__),
+        "PassEngine.__init__": _sig(api.PassEngine.__init__),
+        "PassEngine.answer": _sig(api.PassEngine.answer),
+        "PassEngine.prepare": _sig(api.PassEngine.prepare),
+        "PassEngine.stats": _sig(api.PassEngine.stats),
+        "PassEngine.replace_source": _sig(api.PassEngine.replace_source),
+        "PreparedQuery.__call__": _sig(api.PreparedQuery.__call__),
+        "ServingConfig": _config_fields(api.ServingConfig),
+        "CIConfig": _config_fields(api.CIConfig),
+    }
+
+
+def test_api_surface_matches_snapshot():
+    surface = current_surface()
+    if os.environ.get("REPRO_UPDATE_API_SNAPSHOT"):
+        SNAPSHOT.parent.mkdir(parents=True, exist_ok=True)
+        SNAPSHOT.write_text(json.dumps(surface, indent=2, sort_keys=True)
+                            + "\n")
+    want = json.loads(SNAPSHOT.read_text())
+    assert surface == want, (
+        "public API surface drifted from tests/data/api_surface.json — "
+        "if intentional, regenerate with REPRO_UPDATE_API_SNAPSHOT=1 "
+        "and commit the snapshot")

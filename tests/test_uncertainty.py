@@ -180,6 +180,77 @@ def test_zero_sample_stratum_gets_range_bound_not_zero_variance():
     assert lo[0] <= truth[0] <= hi[0]
 
 
+def test_union_delta_budget_valid_joint_guarantee_and_tighter_than_range():
+    """ROADMAP follow-up: per-stratum union-bound delta budgeting
+    (delta_i = (1 - level) / n_fallback_strata, CIConfig.delta_budget=
+    'union') for the Bernstein fallback.
+
+    In the stratified-sampling regime (no exact shortcut) with the
+    threshold above every stratum's sample count, every touched stratum is
+    a fallback stratum, so queries carry several of them. The union budget
+    must (a) be strictly wider per stratum than the historical full-delta
+    budgeting whenever n_fb >= 2 — that inflation is exactly what makes
+    the JOINT fallback guarantee hold at the reported level — while
+    (b) still tightening the interval well below the conservative
+    deterministic range composition for the same strata, and (c) never
+    dropping empirical coverage below nominal."""
+    from repro.api import PassEngine, ServingConfig, CIConfig
+    from repro.engine import executor as ex
+    rng = np.random.default_rng(0)
+    n, k, spl, thr = 20000, 16, 48, 64
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.lognormal(0, 1, n) * (1 + np.sin(c / 5))
+    syn, _ = build_synopsis(c, a, k=k, sample_budget=k * spl, method="eq",
+                            seed=5)
+    qs = random_queries(c, 96, seed=6, min_frac=0.05, max_frac=0.4)
+    art = ex.artifacts(syn, qs, kinds=("sum",), use_aggregates=False)
+    half_s, n_fb = uncertainty.compose_interval(
+        syn, art, "sum", 0.95, small_n_threshold=thr,
+        delta_budget="stratum")
+    half_u, n_fb_u = uncertainty.compose_interval(
+        syn, art, "sum", 0.95, small_n_threshold=thr, delta_budget="union")
+    half_s, half_u = np.asarray(half_s), np.asarray(half_u)
+    n_fb = np.asarray(n_fb)
+    np.testing.assert_array_equal(n_fb, np.asarray(n_fb_u))
+    multi = n_fb >= 2
+    assert multi.sum() >= 32                 # the workload exercises it
+    # (a) strictly wider than the (jointly invalid) full-delta budgeting
+    assert np.all(half_u[multi] > half_s[multi])
+    one = n_fb <= 1                          # identical when nothing splits
+    np.testing.assert_allclose(half_u[one], half_s[one], rtol=1e-6)
+    # (b) still far tighter than the deterministic range composition over
+    # the same fallback strata (the bound a zero-information fallback pays)
+    leaf_agg = np.asarray(syn.leaf_agg, np.float64)
+    Ni = np.asarray(syn.n_rows, np.float64)
+    ns_half = Ni * np.maximum(np.maximum(leaf_agg[:, 4], 0.0),
+                              -np.minimum(leaf_agg[:, 3], 0.0))
+    fb = (np.asarray(art.partial & ~art.cover)
+          & (np.asarray(art.k_pred) < thr))
+    det = (fb * ns_half[None]).sum(axis=1)
+    assert np.all(half_u[multi] < det[multi])
+    assert np.median((half_u / det)[multi]) < 0.6
+    # (c) threaded through CIConfig: the engines differ and union-budget
+    # coverage never drops below nominal over fresh sample draws
+    serving = ServingConfig(kinds=("sum",), use_aggregates=False)
+    truth = ground_truth(c, a, qs, kind="sum")
+    covs = []
+    for t in range(3):
+        syn_t, _ = build_synopsis(c, a, k=k, sample_budget=k * spl,
+                                  method="eq", seed=100 + t)
+        res_u = PassEngine(syn_t, serving=serving,
+                           ci=CIConfig(level=0.95, small_n_threshold=thr,
+                                       delta_budget="union")
+                           ).answer(qs)["sum"]
+        res_s = PassEngine(syn_t, serving=serving,
+                           ci=CIConfig(level=0.95, small_n_threshold=thr,
+                                       delta_budget="stratum")
+                           ).answer(qs)["sum"]
+        assert not np.array_equal(np.asarray(res_u.ci_lo),
+                                  np.asarray(res_s.ci_lo))
+        covs.append(_cov(res_u, truth))
+    assert np.mean(covs) >= 0.95
+
+
 # --------------------------------------------------------------------------
 # Bootstrap
 # --------------------------------------------------------------------------
