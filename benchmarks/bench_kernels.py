@@ -54,6 +54,29 @@ def run(backends=("jnp", "ref")):
         rows.append({"kernel": "query_eval", "backend": be,
                      "shape": f"Q={Q},k={k}",
                      "us_per_call": f"{t*1e6:.0f}"})
+        # fused bootstrap replicate moments (synopsis-shaped samples)
+        ks, ss, R = 64, 64, 16
+        scs = jnp.asarray(rng.uniform(-1, 1, (ks, ss, d)), jnp.float32)
+        sas = jnp.asarray(rng.normal(0, 1, (ks, ss)), jnp.float32)
+        svs = jnp.asarray(rng.random((ks, ss)) < 0.9)
+        W = jnp.asarray(rng.poisson(1.0, (R, ks, ss)), jnp.float32)
+        _, t = common.timed(lambda: ops.bootstrap_moments_op(
+            scs, sas, svs, W, qlo, qhi, backend=be).block_until_ready())
+        rows.append({"kernel": "bootstrap_moments", "backend": be,
+                     "shape": f"R={R},Q={Q},k={ks},s={ss}",
+                     "us_per_call": f"{t*1e6:.0f}",
+                     "repqsamples_per_s": f"{R*Q*ks*ss/t/1e9:.1f}G"})
+        # multi-D batch routing (streaming ingest hot path)
+        B = 1 << 14
+        rlo = jnp.asarray(rng.uniform(-1, 1, (k, d)), jnp.float32)
+        rhi = rlo + 0.2
+        rows_c = jnp.asarray(rng.uniform(-1.2, 1.2, (B, d)), jnp.float32)
+        _, t = common.timed(lambda: ops.route_multid_op(
+            rlo, rhi, rows_c, backend=be)[0].block_until_ready())
+        rows.append({"kernel": "route_multid", "backend": be,
+                     "shape": f"B={B},k={k}",
+                     "us_per_call": f"{t*1e6:.0f}",
+                     "rows_per_s": f"{B/t/1e6:.1f}M"})
     return common.emit(rows, "kernels")
 
 

@@ -20,6 +20,7 @@ import platform
 import sys
 
 from . import bench_distributed
+from . import bench_fused
 from . import bench_streaming_ingest
 from . import fig_ci_calibration
 from . import perf_pass_serving
@@ -35,6 +36,8 @@ def run() -> tuple[dict, list]:
         key = name.split("(")[0]                  # strip dynamic suffixes
         metrics[f"serving_{key}_ms"] = t * 1e3
     metrics.update(serve_speedups)
+    # fused hot paths: bootstrap megakernel + tiled multi-D router
+    metrics.update(bench_fused.run(**bench_fused.tiny_config()))
     # multi-device serving path: psum merge of the mergeable summaries
     metrics.update(bench_distributed.run(**bench_distributed.tiny_config()))
     # uncertainty smoke: empirical coverage + the build-path wall clock

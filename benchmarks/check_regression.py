@@ -4,7 +4,11 @@ A metric regresses when it is worse than ``factor`` x its baseline:
 ``*_ms`` / ``*_us_per_row`` are lower-is-better wall-clock numbers,
 ``*_speedup_x`` are higher-is-better ratios. Metrics present on only one
 side are reported but never fail the gate (the trajectory is allowed to
-grow). Exit code 1 on any regression.
+grow) — EXCEPT the ``REQUIRED_GATED`` set, which must exist on BOTH
+sides: adding a gated metric to the bench without refreshing
+``BENCH_baseline.json``, or dropping one from the bench output, fails
+with a clear message naming the missing keys instead of silently passing
+(or KeyError-ing). Exit code 1 on any regression.
 
     PYTHONPATH=src python -m benchmarks.check_regression BENCH_pr.json \
         [baseline.json] [--factor 2.0]
@@ -17,6 +21,25 @@ import pathlib
 import sys
 
 BASELINE = pathlib.Path(__file__).with_name("BENCH_baseline.json")
+
+# Gated metrics that MUST have a baseline entry: the headline speedups the
+# acceptance criteria pin. Grow this set together with the baseline.
+REQUIRED_GATED = (
+    "bootstrap_fused_speedup_x",
+    "route_multid_tiled_speedup_x",
+    "serving_prepared_speedup_x",
+    "stream_speedup_x",
+)
+
+
+def _load_metrics(path: str, role: str) -> dict:
+    payload = json.loads(pathlib.Path(path).read_text())
+    try:
+        return payload["metrics"]
+    except KeyError:
+        raise SystemExit(
+            f"{role} file {path!r} has no top-level 'metrics' object — "
+            "expected the bench_smoke JSON layout") from None
 
 
 def lower_is_better(name: str) -> bool:
@@ -53,8 +76,24 @@ def main(argv=None) -> int:
     ap.add_argument("baseline", nargs="?", default=str(BASELINE))
     ap.add_argument("--factor", type=float, default=2.0)
     args = ap.parse_args(argv)
-    pr = json.loads(pathlib.Path(args.pr_json).read_text())["metrics"]
-    base = json.loads(pathlib.Path(args.baseline).read_text())["metrics"]
+    pr = _load_metrics(args.pr_json, "PR")
+    base = _load_metrics(args.baseline, "baseline")
+    missing_base = sorted(m for m in REQUIRED_GATED if m not in base)
+    if missing_base:
+        print(f"FAIL: gated metric(s) missing from {args.baseline}: "
+              f"{missing_base}")
+        print("      refresh the baseline (run `python -m "
+              "benchmarks.bench_smoke` on a quiet machine, pad the "
+              "envelope per its meta note) and commit it alongside the "
+              "new metrics.")
+        return 1
+    missing_pr = sorted(m for m in REQUIRED_GATED if m not in pr)
+    if missing_pr:
+        print(f"FAIL: gated metric(s) missing from {args.pr_json}: "
+              f"{missing_pr}")
+        print("      the bench stopped emitting a gated headline metric "
+              "— a silent drop would disable its gate.")
+        return 1
     failures = compare(pr, base, args.factor)
     if failures:
         print(f"FAIL: {len(failures)} metric(s) regressed >{args.factor}x: "

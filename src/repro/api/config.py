@@ -102,6 +102,11 @@ class CIConfig:
                           and digested for cache keys.
     ``boot_normalize``    'hajek' (resampled-size rescale, recommended for
                           AVG) or 'ht' (fixed design scale).
+    ``boot_fused``        True (default) serves bootstrap intervals through
+                          the fused replicate megakernel (one data pass for
+                          all replicates, DESIGN.md §10); False runs the
+                          per-replicate ``lax.scan`` reference. The two are
+                          bit-identical for the same key.
     """
     level: float = 0.95
     method: str = "clt"
@@ -110,6 +115,7 @@ class CIConfig:
     n_boot: int = 200
     key: object = dataclasses.field(default=None, compare=False)
     boot_normalize: str = "hajek"
+    boot_fused: bool = True
 
     def validate(self) -> "CIConfig":
         if not 0.0 < self.level < 1.0:
@@ -126,7 +132,7 @@ class CIConfig:
     def cache_key(self) -> tuple:
         return (float(self.level), self.method, int(self.small_n_threshold),
                 self.delta_budget, int(self.n_boot), _key_token(self.key),
-                self.boot_normalize)
+                self.boot_normalize, self.boot_fused)
 
 
 def as_ci_config(ci) -> CIConfig | None:

@@ -122,7 +122,7 @@ def _dispatch_entry(serving: ServingConfig, ci: CIConfig | None):
             dict(kinds=serving.kinds, n_boot=int(ci.n_boot),
                  level=float(ci.level), normalize=ci.boot_normalize,
                  use_aggregates=serving.use_aggregates,
-                 backend_name=backend_name),
+                 backend_name=backend_name, fused=bool(ci.boot_fused)),
             lambda syn, queries, plan_masks: (syn, queries, plan_masks, key))
 
 
@@ -196,6 +196,9 @@ class PreparedQuery:
                                        ci=self.ci, serving=self.serving)
         self._refresh()
         _executor.count_artifact_pass(self.serving.kinds)
+        if (self.ci is not None and self.ci.method == "bootstrap"
+                and self.ci.boot_fused):
+            self._engine._stats["fused_serves"] += 1
         args = self._build(self._syn, queries, None)
         self._calls += 1
         if not _is_tracer(queries.lo):
@@ -241,7 +244,8 @@ class PassEngine:
         self._cache: OrderedDict[tuple, PreparedQuery] = OrderedDict()
         self._generation = 0
         self._stats = {"hits": 0, "misses": 0, "evictions": 0,
-                       "invalidations": 0, "aot_compiles": 0}
+                       "invalidations": 0, "aot_compiles": 0,
+                       "fused_serves": 0}
 
     # -- source ------------------------------------------------------------
     @property
@@ -305,7 +309,9 @@ class PassEngine:
 
     def stats(self) -> dict:
         """Plan-cache instrumentation: hits/misses/evictions/invalidations/
-        aot_compiles plus current entry count and source epoch."""
+        aot_compiles/fused_serves (calls answered through the fused
+        bootstrap megakernel path) plus current entry count and source
+        epoch."""
         return dict(self._stats, entries=len(self._cache), epoch=self.epoch)
 
     # -- serving -----------------------------------------------------------
@@ -339,6 +345,9 @@ class PassEngine:
         sv, cfg = self._effective(kinds, ci, serving)
         if plan is not None:
             _executor.count_artifact_pass(sv.kinds)
+            if (cfg is not None and cfg.method == "bootstrap"
+                    and cfg.boot_fused):
+                self._stats["fused_serves"] += 1
             fn, statics, build = _dispatch_entry(sv, cfg)
             args = build(self.resolve(), queries,
                          _executor.plan_to_masks(plan))

@@ -78,8 +78,9 @@ def skip_rate(syn: Synopsis, queries: QueryBatch) -> jnp.ndarray:
     """Fraction of tuples safely skipped (paper §5.1.2). Shares one cached
     classification with ``ess`` for the same (synopsis, batch) objects."""
     partf = _partial_mask(syn, queries)
+    total = jnp.maximum(jnp.asarray(syn.total_rows, jnp.float32), 1.0)
     return 1.0 - jnp.sum(partf * syn.n_rows.astype(jnp.float32)[None], axis=1) \
-        / max(syn.total_rows, 1)
+        / total
 
 
 __all__ = ["classify_leaves", "sample_moments", "estimate", "ess", "skip_rate"]

@@ -142,7 +142,7 @@ def synopsis_from_assignment(c, a, assign, k, *, s_per_leaf=None,
             agg=jnp.asarray(tree.agg, jnp.float32),
             left=jnp.asarray(tree.left), right=jnp.asarray(tree.right),
             leaf_id=jnp.asarray(tree.leaf_id), level=jnp.asarray(tree.level)),
-        num_leaves=k, d=d, total_rows=n)
+        num_leaves=k, d=d, total_rows=jnp.asarray(n, jnp.float32))
     info = {"seconds_aggregate": t2 - t1, "seconds_sample": t3 - t2,
             "total_samples": int(k_per_leaf.sum())}
     return syn, info

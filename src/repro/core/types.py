@@ -66,8 +66,8 @@ class PartitionTree:
 @partial(jax.tree_util.register_dataclass,
          data_fields=["leaf_lo", "leaf_hi", "leaf_agg", "n_rows",
                       "sample_c", "sample_a", "sample_valid", "k_per_leaf",
-                      "tree"],
-         meta_fields=["num_leaves", "d", "total_rows"])
+                      "tree", "total_rows"],
+         meta_fields=["num_leaves", "d"])
 @dataclasses.dataclass
 class Synopsis:
     """A complete PASS synopsis: leaf partitions + aggregates + strata.
@@ -79,6 +79,12 @@ class Synopsis:
     ``k_per_leaf`` (k,) = true sample count per stratum.
     ``n_rows`` (k,) = exact row count per leaf (== leaf_agg[:, COUNT], kept
     as int for weighting). ``tree`` is the aggregate hierarchy.
+    ``total_rows`` is a *device scalar* pytree child, not static meta:
+    streamed batches change its value without changing the treedef, so
+    prepared AOT executables survive ingest (DESIGN.md §8, §10). It is
+    float32 like every other row count here (``n_rows``, the COUNT
+    aggregate column) — an int32 scalar would overflow past 2^31 rows,
+    and its only consumers are fraction denominators.
     """
     leaf_lo: jax.Array
     leaf_hi: jax.Array
@@ -91,7 +97,7 @@ class Synopsis:
     tree: PartitionTree
     num_leaves: int
     d: int
-    total_rows: int
+    total_rows: jax.Array | int
 
     def storage_floats(self) -> int:
         """Synopsis size in stored scalars (for BSS accounting, paper §5.1.4)."""

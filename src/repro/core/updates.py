@@ -44,7 +44,7 @@ class UpdatableSynopsis:
         self.tree_hi = np.asarray(syn.tree.hi, dtype=np.float64).copy()
         self._tpl = syn
         self.rng = np.random.default_rng(seed)
-        self.total_rows = syn.total_rows
+        self.total_rows = int(syn.total_rows)
         self.inserts_since_build = 0
         # leaf node ids in the (heap-layout) tree
         leaf_id = np.asarray(syn.tree.leaf_id)
@@ -146,7 +146,7 @@ class UpdatableSynopsis:
                 agg=jnp.asarray(self.tree_agg, jnp.float32),
                 lo=jnp.asarray(self.tree_lo, jnp.float32),
                 hi=jnp.asarray(self.tree_hi, jnp.float32)),
-            total_rows=self.total_rows)
+            total_rows=jnp.asarray(self.total_rows, jnp.float32))
 
 
 __all__ = ["UpdatableSynopsis"]

@@ -105,8 +105,11 @@ def compute_artifacts(syn: Synopsis, queries: QueryBatch, kinds,
         exact = jnp.zeros_like(exact)
 
     n_rows = syn.n_rows.astype(jnp.float32)[None]            # (1, k)
+    # total_rows is a device scalar (traced), so ingest-bumped row counts
+    # flow through without retracing — jnp.maximum, not Python max.
+    total = jnp.maximum(jnp.asarray(syn.total_rows, jnp.float32), 1.0)
     touched = (jnp.sum(partial_m.astype(jnp.float32) * n_rows, axis=1)
-               / max(syn.total_rows, 1))
+               / total)
 
     k_pred = s_sum = s_sumsq = None
     if _needs_moments(kinds):

@@ -28,6 +28,10 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .registry import register_backend
+from .bootstrap import (bootstrap_moments as _boot_pallas, auto_block_r)
+from .route import (route_multid_dense as _route_dense,
+                    route_multid_pallas as _route_pallas,
+                    auto_block_k)
 from .segment_reduce import (segment_reduce as _segment_reduce_pallas,
                              weighted_segment_reduce as _wseg_pallas,
                              auto_block_n)
@@ -100,21 +104,47 @@ def sample_moments(sample_c, sample_a, sample_valid, q_lo, q_hi):
     return k_pred, s_sum, s_sumsq
 
 
+def tree_sum_last(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-deterministic pairwise reduction over the trailing axis.
+
+    ``jnp.sum`` leaves the accumulation strategy to the XLA reduce
+    emitter, which picks different vectorizations in different fusion
+    contexts — two programs summing identical values can disagree in the
+    last ulp. This fixed-structure binary tree of *elementwise* adds pins
+    the accumulation order in the graph itself (elementwise ops are
+    bit-deterministic regardless of surrounding fusion), which is what the
+    fused-vs-scan bootstrap bit-identity contract (DESIGN.md §10) rests
+    on. Same flops as a linear sum; zero-padding to the next power of two
+    is exact (x + 0.0 == x in f32 for all finite x)."""
+    n = x.shape[-1]
+    pow2 = 1 << max(n - 1, 0).bit_length()
+    if pow2 != n:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pow2 - n)]
+        x = jnp.pad(x, widths)
+    while x.shape[-1] > 1:
+        h = x.shape[-1] // 2
+        x = x[..., :h] + x[..., h:]          # contiguous halves: SIMD-friendly
+    return x[..., 0]
+
+
 def weighted_sample_moments(sample_c, sample_a, sample_valid, weights,
                             q_lo, q_hi):
     """Per-(query, stratum) weighted relevant-sample moments.
 
     ``weights`` (k, s) f32 resample weights (the uncertainty subsystem's
     Poisson bootstrap); invalid slots are masked regardless of weight.
-    Returns (w_pred, ws_sum, ws_sumsq), each (Q, k) f32."""
+    Returns (w_pred, ws_sum, ws_sumsq), each (Q, k) f32. The slot
+    reduction is the fixed-order :func:`tree_sum_last`, so one replicate
+    computed here bit-matches the same replicate inside the fused
+    ``bootstrap_moments`` block."""
     inside = (jnp.all(q_lo[:, None, None, :] <= sample_c[None], axis=-1)
               & jnp.all(sample_c[None] <= q_hi[:, None, None, :], axis=-1))
     pred = (inside & sample_valid[None]).astype(jnp.float32)
     pred = pred * weights.astype(jnp.float32)[None]
     a = sample_a.astype(jnp.float32)[None]
-    w_pred = jnp.sum(pred, axis=-1)
-    ws_sum = jnp.sum(pred * a, axis=-1)
-    ws_sumsq = jnp.sum(pred * a * a, axis=-1)
+    w_pred = tree_sum_last(pred)
+    ws_sum = tree_sum_last(pred * a)
+    ws_sumsq = tree_sum_last(pred * a * a)
     return w_pred, ws_sum, ws_sumsq
 
 
@@ -167,6 +197,41 @@ class KernelBackend:
                               q_lo, q_hi, k: int, bq: int = 128,
                               bk: int = 128, bs: int = 1024):
         raise NotImplementedError
+
+    # -- fused bootstrap replicate moments (DESIGN.md §10) -------------------
+    # One op for the whole (R, Q, k, 3) replicate-moment block; the default
+    # is the per-replicate oracle loop (structurally bit-identical to the
+    # scan path), which `pallas`/`jnp` replace with genuinely fused
+    # formulations. ``br=None`` auto-sizes the replicate block.
+    def bootstrap_moments(self, sample_c, sample_a, sample_valid, weights,
+                          q_lo, q_hi, **kw):
+        """``weights`` (R, k, s) resample weights -> (R, Q, k, 3) f32
+        [sum w*pred, sum w*pred*a, sum w*pred*a^2] per replicate."""
+        k, s, d = sample_c.shape
+        R = weights.shape[0]
+        w = jnp.where(sample_valid[None], weights.astype(jnp.float32), 0.0)
+        return self.bootstrap_moments_flat(
+            sample_c.reshape(k * s, d), sample_a.reshape(k * s),
+            _flat_leaf_ids(sample_valid), w.reshape(R, k * s),
+            q_lo, q_hi, k, **kw)
+
+    def bootstrap_moments_flat(self, sample_c, sample_a, sample_leaf,
+                               weights, q_lo, q_hi, k: int,
+                               br: int | None = None, bq: int = 128,
+                               bk: int = 128, bs: int = 1024):
+        # Oracle default: the scan path's per-replicate op, stacked.
+        return jnp.stack([
+            self.weighted_moments_flat(sample_c, sample_a, sample_leaf,
+                                       weights[r], q_lo, q_hi, k,
+                                       bq=bq, bk=bk, bs=bs)
+            for r in range(weights.shape[0])])
+
+    # -- multi-D batch routing (streaming ingest hot path) -------------------
+    def route_multid(self, leaf_lo, leaf_hi, c, bk: int | None = None):
+        """Nearest-leaf routing for (B, d) rows against (k, d) boxes.
+        Returns (leaf ids (B,) int32, selected L1 distance (B,) f32).
+        Default: the dense (B, k) distance-matrix oracle."""
+        return _route_dense(leaf_lo, leaf_hi, c)
 
     # -- segment reduction ---------------------------------------------------
     # ``bn=None`` sizes the row block to the input (auto_block_n) — the
@@ -265,6 +330,38 @@ class PallasBackend(KernelBackend):
                              bq=bq, bk=bk, bs=bs, interpret=_interpret())
         return out[:Q, :k]
 
+    def bootstrap_moments_flat(self, sample_c, sample_a, sample_leaf,
+                               weights, q_lo, q_hi, k: int,
+                               br: int | None = None, bq: int = 128,
+                               bk: int = 128, bs: int = 1024):
+        d = sample_c.shape[1]
+        R = weights.shape[0]
+        Q = q_lo.shape[0]
+        br = br or auto_block_r(R)
+        c_t, a, leaf, qlo_t, qhi_t = _pad_moment_inputs(
+            sample_c, sample_a, sample_leaf, q_lo, q_hi, bq, bs)
+        w = _pad_axis(_pad_axis(weights.astype(jnp.float32), bs, 1), br, 0)
+        k_pad = k + ((-k) % bk)
+        out = _boot_pallas(c_t, a, leaf, w, qlo_t, qhi_t, k_pad, d,
+                           br=br, bq=bq, bk=bk, bs=bs,
+                           interpret=_interpret())
+        return out[:R, :Q, :k]
+
+    def route_multid(self, leaf_lo, leaf_hi, c, bk: int | None = None):
+        b, d = c.shape
+        k = leaf_lo.shape[0]
+        bk = bk or auto_block_k(k)
+        bb = 256 if b >= 256 else 8 * ((b + 7) // 8)
+        # Padding strata are inverted ±BIG boxes: unreachable distance.
+        lo_t = _pad_axis(_transpose_coords(leaf_lo.astype(jnp.float32)),
+                         bk, 1, fill=_ref.POS_BIG)
+        hi_t = _pad_axis(_transpose_coords(leaf_hi.astype(jnp.float32)),
+                         bk, 1, fill=_ref.NEG_BIG)
+        c_t = _pad_axis(_transpose_coords(c.astype(jnp.float32)), bb, 1)
+        idx, dist = _route_pallas(lo_t, hi_t, c_t, d, bb=bb, bk=bk,
+                                  interpret=_interpret())
+        return idx[:b], dist[:b]
+
     def segment_reduce(self, values, seg_ids, k: int, bn: int | None = 2048,
                        bk: int = 256):
         bn = bn or auto_block_n(values.shape[0])
@@ -341,6 +438,39 @@ class JnpBackend(KernelBackend):
                          q_lo, q_hi, **kw):
         return weighted_sample_moments(sample_c, sample_a, sample_valid,
                                        weights, q_lo, q_hi)
+
+    def bootstrap_moments(self, sample_c, sample_a, sample_valid, weights,
+                          q_lo, q_hi, br: int | None = None, **kw):
+        # Replicate-tiled broadcast-reduce: the predicate mask (the
+        # w-independent half of `weighted_sample_moments`) is computed once
+        # and reused by every replicate; a lax.scan walks (br, k, s) weight
+        # tiles so the (br, Q, k, s) product is the largest temporary. The
+        # per-replicate arithmetic (elementwise products + trailing-axis
+        # sums) is exactly the scan path's, so replicates are bit-identical
+        # to per-replicate `weighted_moments` calls.
+        k, s, _ = sample_c.shape
+        Q = q_lo.shape[0]
+        R = weights.shape[0]
+        br = br or auto_block_r(R)
+        w = jnp.where(sample_valid[None], weights.astype(jnp.float32), 0.0)
+        pad = (-R) % br
+        if pad:
+            w = jnp.concatenate(
+                [w, jnp.zeros((pad, k, s), jnp.float32)], axis=0)
+        inside = (jnp.all(q_lo[:, None, None, :] <= sample_c[None], axis=-1)
+                  & jnp.all(sample_c[None] <= q_hi[:, None, None, :],
+                            axis=-1))
+        pred = (inside & sample_valid[None]).astype(jnp.float32)  # (Q,k,s)
+        a = sample_a.astype(jnp.float32)[None, None]              # (1,1,k,s)
+
+        def step(carry, wt):                                      # (br,k,s)
+            p = pred[None] * wt[:, None]                          # (br,Q,k,s)
+            return carry, jnp.stack(
+                [tree_sum_last(p), tree_sum_last(p * a),
+                 tree_sum_last(p * a * a)], axis=-1)
+
+        _, out = jax.lax.scan(step, 0, w.reshape(-1, br, k, s))
+        return out.reshape(-1, Q, k, 3)[:R]
 
     def weighted_segment_reduce(self, values, weights, seg_ids, k: int,
                                 bn: int | None = 2048, bk: int = 256):

@@ -67,6 +67,33 @@ def weighted_moments_op(sample_c: jnp.ndarray, sample_a: jnp.ndarray,
         bq=bq, bk=bk, bs=bs)
 
 
+def bootstrap_moments_op(sample_c: jnp.ndarray, sample_a: jnp.ndarray,
+                         sample_valid: jnp.ndarray, weights: jnp.ndarray,
+                         q_lo: jnp.ndarray, q_hi: jnp.ndarray,
+                         br: int | None = None,
+                         backend: str | None = None) -> jnp.ndarray:
+    """Fused bootstrap replicate moments (DESIGN.md §10): all R replicates'
+    weighted relevant-sample moments in one op. sample_c (k, s, d),
+    sample_a/sample_valid (k, s), weights (R, k, s) resample weights;
+    q_lo/q_hi (Q, d). ``br=None`` auto-sizes the replicate block.
+    Returns (R, Q, k, 3) = [sum w*pred, sum w*pred*a, sum w*pred*a^2]."""
+    return get_backend(backend).bootstrap_moments(
+        sample_c, sample_a, sample_valid, weights, q_lo, q_hi, br=br)
+
+
+def route_multid_op(leaf_lo: jnp.ndarray, leaf_hi: jnp.ndarray,
+                    c: jnp.ndarray, bk: int | None = None,
+                    backend: str | None = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Nearest-leaf batch routing (streaming ingest, d > 1): leaf whose box
+    contains (distance 0) or is L1-nearest to each row; lowest leaf id wins
+    ties. leaf_lo/leaf_hi (k, d); c (B, d). Returns (leaf (B,) int32,
+    distance (B,) f32). The ``pallas`` backend streams leaf tiles with an
+    online (min, argmin) pair — no (B, k) matrix; others use the dense
+    oracle."""
+    return get_backend(backend).route_multid(leaf_lo, leaf_hi, c, bk=bk)
+
+
 def query_eval_op(leaf_lo: jnp.ndarray, leaf_hi: jnp.ndarray,
                   leaf_agg: jnp.ndarray, q_lo: jnp.ndarray,
                   q_hi: jnp.ndarray, bq: int = 128, bk: int = 128,
@@ -81,5 +108,6 @@ def query_eval_op(leaf_lo: jnp.ndarray, leaf_hi: jnp.ndarray,
 
 
 __all__ = ["segment_reduce_op", "weighted_segment_reduce_op",
-           "stratified_moments_op", "weighted_moments_op", "query_eval_op",
+           "stratified_moments_op", "weighted_moments_op",
+           "bootstrap_moments_op", "route_multid_op", "query_eval_op",
            "backend"]

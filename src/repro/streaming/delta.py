@@ -77,7 +77,7 @@ def _merge_arrays(base: Synopsis, state, subtree: jnp.ndarray):
 
 
 def merge_synopsis(base: Synopsis, state, subtree: jnp.ndarray, *,
-                   total_rows: int) -> Synopsis:
+                   total_rows) -> Synopsis:
     """Serving synopsis = base ⊕ delta (no host transfer of O(K) state).
 
     The merged sample arrays ARE the live reservoir, so downstream interval
@@ -95,7 +95,9 @@ def merge_synopsis(base: Synopsis, state, subtree: jnp.ndarray, *,
         k_per_leaf=state.k_per_leaf,
         tree=dataclasses.replace(base.tree, agg=tree_agg, lo=tree_lo,
                                  hi=tree_hi),
-        total_rows=total_rows)
+        # device scalar: the merged synopsis keeps the base treedef, so
+        # prepared AOT executables survive the ingest (DESIGN.md §8)
+        total_rows=jnp.asarray(total_rows, jnp.float32))
 
 
 @jax.jit

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.types import Synopsis, AGG_COUNT
+from ..kernels import route as _route
 from ..kernels.ref import NEG_BIG, POS_BIG
 from ..kernels.registry import get_backend
 
@@ -74,26 +75,16 @@ def empty_delta_agg(k: int) -> jnp.ndarray:
 
 
 def _route_dist(leaf_lo, leaf_hi, c):
-    """(B, k) L1 box distance; routing is the widest pass of the ingest
-    step, so every redundant (B, k) sweep matters:
+    """(B, k) dense L1 box distance matrix — the d > 1 routing oracle.
 
-    * accumulated per dimension — largest temporary is (B, k), not (B,k,d);
-    * per dim, ``max(lo-c, 0) + max(c-hi, 0)`` collapses to the
-      single-reduction ``max(lo-c, c-hi, 0)`` (at most one operand is
-      positive for a non-inverted box);
-    * empty leaves need no mask pass: their boxes are stored inverted at
-      +/-inf (build path) or +/-BIG (kernel rebuild path), which this
-      formula maps to an unreachable huge distance by itself.
+    Kept as the test/reference entry; the formulation lives in
+    ``kernels/route.py`` (per-dim ``max(lo-c, c-hi, 0)`` accumulation,
+    inverted empty boxes map to an unreachable huge distance by
+    themselves), where the registry backends share it: the ``pallas``
+    backend replaces the dense matrix with a leaf-tile streaming kernel
+    carrying an online (min, argmin) pair — same work, O(tile) memory.
     """
-    d = c.shape[1]
-    dist = None
-    for j in range(d):
-        lo = leaf_lo[:, j][None]                     # (1, k)
-        hi = leaf_hi[:, j][None]
-        cj = c[:, j][:, None]                        # (B, 1)
-        dj = jnp.maximum(jnp.maximum(lo - cj, cj - hi), 0.0)
-        dist = dj if dist is None else dist + dj
-    return dist
+    return _route.dist_matrix(leaf_lo, leaf_hi, c)
 
 
 def _route_1d(leaf_lo, leaf_hi, c):
@@ -169,13 +160,13 @@ def _ingest_core(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
     k, cap = state.sample_a.shape
 
     # 1. route (one pass against batch-entry boxes); 1-D dodges the dense
-    #    (B, k) distance matrix entirely — see _route_1d
+    #    (B, k) distance matrix entirely — see _route_1d; d > 1 dispatches
+    #    through the registry (`pallas` streams leaf tiles with an online
+    #    (min, argmin) pair, `jnp`/`ref` use the dense oracle)
     if d == 1:
         leaf, dsel = _route_1d(state.leaf_lo, state.leaf_hi, c)
     else:
-        dist = _route_dist(state.leaf_lo, state.leaf_hi, c)
-        leaf = jnp.argmin(dist, axis=1).astype(jnp.int32)
-        dsel = jnp.take_along_axis(dist, leaf[:, None], axis=1)[:, 0]
+        leaf, dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c)
     oob = jnp.sum(dsel > 0.0)
 
     # 2. per-leaf aggregate delta through the registry-dispatched
@@ -278,6 +269,7 @@ class StreamingIngestor:
         # deterministic across hosts and jax versions (threefry-stable).
         self._key = key if key is not None else jax.random.PRNGKey(seed)
         self.n_stream = 0
+        self._base_rows = int(base.total_rows)   # host copy for drift math
         self._epoch = 0
         self._merged: Synopsis | None = None
 
@@ -321,7 +313,8 @@ class StreamingIngestor:
 
     @property
     def total_rows(self) -> int:
-        return self.base.total_rows + self.n_stream
+        """Current served row count (base + streamed), as a host int."""
+        return self._base_rows + self.n_stream
 
     def staleness(self) -> float:
         """Fraction of rows streamed since the base build (§4.5)."""

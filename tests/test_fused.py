@@ -1,0 +1,272 @@
+"""Fused-kernel serving hot path (DESIGN.md §10): the bootstrap megakernel
+is bit-identical to the per-replicate ``lax.scan`` reference on every
+backend; the tiled multi-D router bit-matches the dense distance-matrix
+oracle (including argmin ties); an ingest -> prepared-serve cycle keeps
+its AOT executable (zero retraces) now that ``Synopsis.total_rows`` is a
+device scalar."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st
+
+from repro import api
+from repro.core import build_synopsis
+from repro.core.types import QueryBatch
+from repro.kernels import ops
+from repro.kernels.registry import get_backend
+from repro.kernels.route import route_multid_dense, route_multid_tiled
+from repro.streaming import StreamingIngestor
+from repro.uncertainty.bootstrap import bootstrap_replicates
+
+
+def _make(seed=0, n=20000, k=16, samples_per_leaf=32, d=1):
+    rng = np.random.default_rng(seed)
+    if d == 1:
+        c = np.sort(rng.uniform(0, 100, n))
+        method = "eq"
+    else:
+        c = rng.uniform(0, 100, (n, d))
+        method = "kd"
+    a = rng.lognormal(0, 1, n)
+    syn, _ = build_synopsis(c, a, k=k, sample_budget=k * samples_per_leaf,
+                            method=method, seed=seed)
+    return c, a, syn
+
+
+def _queries(syn, q=7, seed=3):
+    rng = np.random.default_rng(seed)
+    d = syn.d
+    lo = rng.uniform(0, 60, (q, d))
+    return QueryBatch(jnp.asarray(lo, jnp.float32),
+                      jnp.asarray(lo + 30.0, jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Bootstrap megakernel: bit-identity vs the scan reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "ref", "pallas"])
+def test_fused_replicates_bit_identical_to_scan(backend):
+    """Same key -> same (R, K, Q) replicate block, fused vs scan, on every
+    registered backend (including awkward non-multiple R)."""
+    _, _, syn = _make(k=13, samples_per_leaf=21)
+    qs = _queries(syn)
+    for n_boot in (1, 11):
+        scan = bootstrap_replicates(syn, qs, ("sum", "count", "avg"),
+                                    n_boot=n_boot, seed=7, backend=backend,
+                                    fused=False)
+        fused = bootstrap_replicates(syn, qs, ("sum", "count", "avg"),
+                                     n_boot=n_boot, seed=7, backend=backend,
+                                     fused=True)
+        assert scan.shape == (n_boot, 3, qs.num_queries)
+        assert np.array_equal(np.asarray(scan), np.asarray(fused)), \
+            (backend, n_boot)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("normalize", ["hajek", "ht"])
+def test_fused_intervals_bit_identical_to_scan(backend, normalize):
+    """The served (estimate, ci_lo, ci_hi) from CIConfig(boot_fused=True)
+    equals the scan path bit-for-bit — estimates AND both endpoints."""
+    _, _, syn = _make(d=2, k=12)
+    qs = _queries(syn, q=5)
+    results = {}
+    for fused in (False, True):
+        eng = api.PassEngine(
+            syn,
+            serving=api.ServingConfig(kinds=("sum", "avg"), backend=backend),
+            ci=api.CIConfig(method="bootstrap", n_boot=24, key=11,
+                            boot_normalize=normalize, boot_fused=fused))
+        results[fused] = eng.answer(qs)
+    for kind in ("sum", "avg"):
+        a, b = results[False][kind], results[True][kind]
+        assert np.array_equal(np.asarray(a.estimate), np.asarray(b.estimate))
+        assert np.array_equal(np.asarray(a.ci_lo), np.asarray(b.ci_lo))
+        assert np.array_equal(np.asarray(a.ci_hi), np.asarray(b.ci_hi))
+
+
+def test_fused_op_matches_ref_backend_oracle():
+    """The jnp fused op agrees with the ref backend's per-replicate oracle
+    loop to float tolerance (different contraction formulations)."""
+    _, _, syn = _make(k=9, samples_per_leaf=17)
+    qs = _queries(syn, q=4)
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.poisson(1.0, (6,) + syn.sample_a.shape), jnp.float32)
+    got = ops.bootstrap_moments_op(syn.sample_c, syn.sample_a,
+                                   syn.sample_valid, W, qs.lo, qs.hi,
+                                   backend="jnp")
+    want = ops.bootstrap_moments_op(syn.sample_c, syn.sample_a,
+                                    syn.sample_valid, W, qs.lo, qs.hi,
+                                    backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_fused_serves_counter():
+    """engine.stats() counts calls served through the fused bootstrap
+    path."""
+    _, _, syn = _make()
+    qs = _queries(syn)
+    eng = api.PassEngine(syn, serving=api.ServingConfig(kinds=("sum",)),
+                         ci=api.CIConfig(method="bootstrap", n_boot=8))
+    assert eng.stats()["fused_serves"] == 0
+    eng.answer(qs)
+    eng.answer(qs)
+    assert eng.stats()["fused_serves"] == 2
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), n_boot=st.integers(1, 24),
+       q=st.integers(1, 6))
+def test_property_fused_ci_endpoints_equal_scan(seed, n_boot, q):
+    """Hypothesis: for random keys/replicate counts/batches, the fused CI
+    endpoints equal the scan-path endpoints exactly."""
+    _, _, syn = _make(k=8, samples_per_leaf=16)
+    qs = _queries(syn, q=q, seed=seed % 97)
+    outs = []
+    for fused in (False, True):
+        eng = api.PassEngine(
+            syn, serving=api.ServingConfig(kinds=("avg",)),
+            ci=api.CIConfig(method="bootstrap", n_boot=n_boot, key=seed,
+                            boot_fused=fused))
+        outs.append(eng.answer(qs)["avg"])
+    assert np.array_equal(np.asarray(outs[0].ci_lo), np.asarray(outs[1].ci_lo))
+    assert np.array_equal(np.asarray(outs[0].ci_hi), np.asarray(outs[1].ci_hi))
+
+
+# --------------------------------------------------------------------------
+# Tiled multi-D router vs the dense oracle
+# --------------------------------------------------------------------------
+
+def _random_boxes(rng, k, d, with_ties=True):
+    lo = rng.uniform(-1, 1, (k, d)).astype(np.float32)
+    hi = lo + rng.uniform(0, 0.5, (k, d)).astype(np.float32)
+    if with_ties and k >= 4:
+        lo[k // 2], hi[k // 2] = lo[0], hi[0]          # duplicate box
+        lo[k // 4], hi[k // 4] = lo[1], hi[1]
+    if k >= 3:
+        lo[2], hi[2] = np.inf, -np.inf                 # empty leaf
+    return lo, hi
+
+
+@pytest.mark.parametrize("k,b,d,bk", [(5, 64, 2, 128), (67, 257, 3, 16),
+                                      (256, 1000, 2, 128)])
+def test_tiled_router_bit_matches_dense(k, b, d, bk):
+    rng = np.random.default_rng(k + b)
+    lo, hi = _random_boxes(rng, k, d)
+    c = rng.uniform(-1.5, 1.5, (b, d)).astype(np.float32)
+    c[: min(8, b)] = lo[0] - 0.25        # equidistant ties with duplicates
+    lo_j, hi_j, c_j = jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(c)
+    want_i, want_d = route_multid_dense(lo_j, hi_j, c_j)
+    got_i, got_d = route_multid_tiled(lo_j, hi_j, c_j, bk=bk)
+    assert np.array_equal(np.asarray(want_i), np.asarray(got_i))
+    assert np.array_equal(np.asarray(want_d), np.asarray(got_d))
+    pal_i, pal_d = get_backend("pallas").route_multid(lo_j, hi_j, c_j, bk=bk)
+    assert np.array_equal(np.asarray(want_i), np.asarray(pal_i))
+    assert np.array_equal(np.asarray(want_d), np.asarray(pal_d))
+
+
+def test_router_op_dispatches_per_backend():
+    rng = np.random.default_rng(0)
+    lo, hi = _random_boxes(rng, 12, 2)
+    c = rng.uniform(-1.5, 1.5, (40, 2)).astype(np.float32)
+    outs = [ops.route_multid_op(jnp.asarray(lo), jnp.asarray(hi),
+                                jnp.asarray(c), backend=be)
+            for be in ("jnp", "ref", "pallas")]
+    for leaf, dist in outs[1:]:
+        assert np.array_equal(np.asarray(outs[0][0]), np.asarray(leaf))
+        assert np.array_equal(np.asarray(outs[0][1]), np.asarray(dist))
+
+
+def test_streaming_multid_ingest_unchanged_by_router_backend():
+    """The d > 1 ingest routes identically through the dense (jnp) and
+    tiled (pallas) router backends — same reservoir, same aggregates."""
+    rng = np.random.default_rng(5)
+    _, _, syn = _make(d=2, k=9, n=5000)
+    c_new = rng.uniform(0, 110, (64, 2)).astype(np.float32)
+    a_new = rng.lognormal(0, 1, 64).astype(np.float32)
+    u = rng.random(64).astype(np.float32)
+    states = {}
+    for be in ("jnp", "pallas"):
+        ing = StreamingIngestor(syn, seed=1, backend=be)
+        ing.ingest(c_new, a_new, u=u)
+        states[be] = ing.state
+    for field in ("leaf_lo", "leaf_hi", "delta_agg", "sample_a",
+                  "k_per_leaf", "seen", "oob"):
+        assert np.array_equal(np.asarray(getattr(states["jnp"], field)),
+                              np.asarray(getattr(states["pallas"], field))), \
+            field
+
+
+# --------------------------------------------------------------------------
+# total_rows device scalar: ingest -> prepared serve with zero retraces
+# --------------------------------------------------------------------------
+
+def test_total_rows_is_device_scalar():
+    _, _, syn = _make()
+    assert isinstance(syn.total_rows, jax.Array)
+    leaves, treedef = jax.tree_util.tree_flatten(syn)
+    assert any(getattr(leaf, "shape", None) == () for leaf in leaves)
+
+
+def test_ingest_keeps_treedef():
+    """Streamed batches change total_rows' value, not the treedef — the
+    precondition for prepared executables surviving ingest."""
+    rng = np.random.default_rng(2)
+    _, _, syn = _make(n=5000, k=8)
+    ing = StreamingIngestor(syn, seed=0)
+    before = jax.tree_util.tree_structure(ing.as_synopsis())
+    ing.ingest(rng.uniform(0, 100, 32), rng.lognormal(0, 1, 32))
+    after = jax.tree_util.tree_structure(ing.as_synopsis())
+    assert before == after
+
+
+def test_ingest_serve_cycle_zero_recompiles():
+    """An ingest -> prepared-serve cycle re-pins the delta merge but keeps
+    the AOT executable: engine.stats() reports the invalidation and no new
+    aot compile, and the executable object is reused."""
+    rng = np.random.default_rng(3)
+    _, _, syn = _make(n=5000, k=8)
+    ing = StreamingIngestor(syn, seed=0)
+    eng = api.PassEngine(ing, serving=api.ServingConfig(kinds=("sum", "avg")))
+    qs = _queries(ing.as_synopsis(), q=4)
+    prepared = eng.prepare(qs)
+    prepared(qs)
+    prepared(qs)                       # 2nd concrete call AOT-compiles
+    assert eng.stats()["aot_compiles"] == 1
+    aot_before = prepared._aot
+    assert aot_before is not None
+    for _ in range(3):                 # ingest -> serve cycles
+        ing.ingest(rng.uniform(0, 100, 16), rng.lognormal(0, 1, 16))
+        prepared(qs)
+    s = eng.stats()
+    assert s["aot_compiles"] == 1      # zero recompiles across ingests
+    assert prepared._aot is aot_before
+    assert s["invalidations"] == 3     # one lazy re-pin per ingest
+
+    # and the served answer tracks the ingested rows (not a stale pin)
+    served = prepared(qs)["sum"]
+    from repro.engine import answer as engine_answer
+    want = engine_answer(ing.as_synopsis(), qs, kinds=("sum",))["sum"]
+    assert np.array_equal(np.asarray(served.estimate),
+                          np.asarray(want.estimate))
+
+
+def test_touched_fraction_tracks_streamed_rows():
+    """The touched/skip-rate epilogue divides by the *live* total_rows."""
+    rng = np.random.default_rng(4)
+    _, _, syn = _make(n=5000, k=8)
+    ing = StreamingIngestor(syn, seed=0)
+    qs = QueryBatch(jnp.asarray([[0.0]], jnp.float32),
+                    jnp.asarray([[100.0]], jnp.float32))
+    eng = api.PassEngine(ing, serving=api.ServingConfig(kinds=("sum",)))
+    before = float(eng.answer(qs)["sum"].frac_rows_touched[0])
+    ing.ingest(rng.uniform(0, 100, 5000), rng.lognormal(0, 1, 5000))
+    after = float(eng.answer(qs)["sum"].frac_rows_touched[0])
+    assert int(ing.as_synopsis().total_rows) == 10000
+    assert not np.isnan(before) and not np.isnan(after)
