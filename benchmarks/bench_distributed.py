@@ -1,19 +1,30 @@
-"""Distributed psum merge: the multi-device synopsis-build path
-(``core.distributed.build_leaf_aggregates``) as a bench-smoke case.
+"""Distributed synopsis benchmarks: psum merge + sharded-ingest scale curve.
 
-Rows shard over a data-parallel mesh spanning every visible device; each
-device reduces its shard with the segment_reduce kernel and one (k, 5)
-``psum``/``pmax`` merges the mergeable summaries (collective bytes O(k),
-independent of N). Compared against the single-device kernel reduce over
-the same rows, so ``BENCH_pr.json`` tracks the shard_map + collective
-overhead of the distributed serving path even on a 1-device CI host
-(force more with XLA_FLAGS=--xla_force_host_platform_device_count=8).
+Two cases feed ``BENCH_pr.json``:
+
+* **psum merge** — the multi-device aggregate path
+  (``core.distributed.build_leaf_aggregates``): rows shard over a mesh,
+  each device reduces its shard with segment_reduce, one O(k) ``psum``/
+  ``pmax`` merges the mergeable summaries. Tracks shard_map + collective
+  overhead even on a 1-device host.
+* **sharded-ingest scale curve** — the PR's headline: the full
+  data-parallel streaming path (``repro.sharded.ShardedIngestor``) run in
+  fresh subprocesses with 1/2/4 *forced host devices*
+  (``--xla_force_host_platform_device_count``), reporting rows/sec per
+  device count and the gated ``sharded_ingest_scaleup_x`` =
+  rate(D_max)/rate(1). On a multi-core host this shows real weak scaling
+  (target >= 1.5x at 4 devices); on the 1-core CI runner forced host
+  devices time-slice one core, so the envelope baseline gates against
+  collapse (serialization pathologies, per-shard recompiles), not against
+  the multi-core target.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_distributed
 """
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -74,5 +85,79 @@ def tiny_config() -> dict:
     return dict(n_rows=200_000, k=64)
 
 
+# --------------------------------------------------------------------------
+# Sharded-ingest weak-scaling curve (subprocess per device count)
+# --------------------------------------------------------------------------
+
+def _shard_worker(n_rows: int, k: int, batch: int, seed: int) -> None:
+    """Child process: build a sharded synopsis over every (forced) device,
+    then time steady-state streaming ingest. Prints one parseable line."""
+    from repro.sharded import build_synopsis_sharded
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n_rows).astype(np.float32)
+    a = rng.lognormal(0, 1, n_rows).astype(np.float32)
+    ing, rep = build_synopsis_sharded(c, a, k=k, sample_budget=8 * k,
+                                      seed=seed, batch_rows=batch)
+    cb = rng.normal(size=batch).astype(np.float32)
+    ab = rng.lognormal(0, 1, batch).astype(np.float32)
+    ing.ingest(cb, ab)                              # warmup / compile
+    jax.block_until_ready(ing.state.delta_agg)
+    reps = 6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ing.ingest(cb, ab)
+    jax.block_until_ready(ing.state.delta_agg)
+    dt = time.perf_counter() - t0
+    print(f"SHARD_RATE devices={len(jax.devices())} "
+          f"ingest_rows_per_sec={reps * batch / dt:.1f} "
+          f"build_rows_per_sec={rep['rows_per_sec']:.1f}")
+
+
+def run_scale(n_rows: int = 400_000, k: int = 64, batch: int = 65_536,
+              device_counts: tuple = (1, 2, 4), seed: int = 0) -> dict:
+    """Parent: spawn one fresh interpreter per device count (XLA device
+    topology is fixed at backend init, so forcing host devices requires a
+    clean process) and assemble the scale curve."""
+    rates: dict[int, float] = {}
+    for nd in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={nd} "
+                            + env.get("XLA_FLAGS", "")).strip()
+        cmd = [sys.executable, "-m", "benchmarks.bench_distributed",
+               "--shard-worker", str(n_rows), str(k), str(batch), str(seed)]
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=900)
+        line = next((ln for ln in proc.stdout.splitlines()
+                     if ln.startswith("SHARD_RATE")), None)
+        if proc.returncode != 0 or line is None:
+            raise RuntimeError(
+                f"sharded scale worker (D={nd}) failed:\n"
+                f"{proc.stdout}\n{proc.stderr}")
+        rates[nd] = float(line.split("ingest_rows_per_sec=")[1].split()[0])
+    d_max = max(device_counts)
+    metrics = {"sharded_ingest_scaleup_x": rates[d_max] / rates[1]}
+    for nd in device_counts:
+        metrics[f"sharded_ingest_mrows_per_s_d{nd}"] = rates[nd] / 1e6
+    print(f"sharded ingest scale curve (n={n_rows:,} build rows, k={k}, "
+          f"batch={batch:,}):")
+    for nd in device_counts:
+        print(f"  D={nd}: {rates[nd] / 1e6:7.3f} M rows/s "
+              f"({rates[nd] / rates[1]:.2f}x vs D=1)")
+    print(f"  scale-up at D={d_max}: {metrics['sharded_ingest_scaleup_x']:.2f}x")
+    return metrics
+
+
+def tiny_scale_config() -> dict:
+    """CI-sized scale curve (bench_smoke)."""
+    return dict(n_rows=60_000, k=32, batch=16_384)
+
+
 if __name__ == "__main__":
-    run(**(tiny_config() if os.environ.get("REPRO_BENCH_TINY") else {}))
+    if len(sys.argv) > 1 and sys.argv[1] == "--shard-worker":
+        _shard_worker(*(int(v) for v in sys.argv[2:6]))
+    elif os.environ.get("REPRO_BENCH_TINY"):
+        run(**tiny_config())
+        run_scale(**tiny_scale_config())
+    else:
+        run()
+        run_scale()

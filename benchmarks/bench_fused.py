@@ -158,6 +158,15 @@ def run(n_rows: int = 100_000, d: int = 2, k: int = 64,
         "route_peak_mb_dense": route_rows * route_k * 4 / 1e6,
         "route_peak_mb_tiled": route_rows * route_bk * 4 / 1e6,
     }
+    # measured counterparts of the analytic numbers (benchmarks.common):
+    # RSS high-water catches the XLA buffers the analytic model describes,
+    # the tracemalloc peak bounds host-side bench overhead. Informational
+    # (not gated) — RSS is a process-lifetime maximum.
+    from .common import measure_peak
+    _, peak = measure_peak(lambda: jax.block_until_ready(
+        route_multid_tiled(b_lo, b_hi, rows, bk=route_bk)))
+    metrics["route_peak_rss_mb"] = peak["peak_rss_mb"]
+    metrics["route_py_heap_peak_mb"] = peak["py_heap_peak_mb"]
     print(f"bootstrap R={n_boot}, Q={n_queries}, k={k}, d={d}:")
     print(f"  legacy scan (pre-fusion path) {t_legacy * 1e3:8.2f} ms")
     print(f"  scan reference                {t_scan * 1e3:8.2f} ms")

@@ -40,6 +40,9 @@ def run() -> tuple[dict, list]:
     metrics.update(bench_fused.run(**bench_fused.tiny_config()))
     # multi-device serving path: psum merge of the mergeable summaries
     metrics.update(bench_distributed.run(**bench_distributed.tiny_config()))
+    # sharded-ingest weak scaling: fresh subprocess per forced device count
+    metrics.update(bench_distributed.run_scale(
+        **bench_distributed.tiny_scale_config()))
     # uncertainty smoke: empirical coverage + the build-path wall clock
     cal_metrics, cal_rows = fig_ci_calibration.run(
         **fig_ci_calibration.tiny_config())

@@ -28,6 +28,7 @@ REQUIRED_GATED = (
     "bootstrap_fused_speedup_x",
     "route_multid_tiled_speedup_x",
     "serving_prepared_speedup_x",
+    "sharded_ingest_scaleup_x",
     "stream_speedup_x",
 )
 
@@ -43,7 +44,7 @@ def _load_metrics(path: str, role: str) -> dict:
 
 
 def lower_is_better(name: str) -> bool:
-    return not name.endswith("_speedup_x")
+    return not name.endswith(("_speedup_x", "_scaleup_x"))
 
 
 def compare(pr: dict, base: dict, factor: float) -> list[str]:

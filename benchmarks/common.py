@@ -7,7 +7,10 @@ Scale via REPRO_BENCH_SCALE (default 0.05 = CPU-friendly row counts;
 from __future__ import annotations
 
 import os
+import resource
+import sys
 import time
+import tracemalloc
 
 import numpy as np
 
@@ -59,6 +62,30 @@ def timed(fn, *args, reps=3, **kw):
     for _ in range(reps):
         out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) / reps
+
+
+def peak_rss_mb() -> float:
+    """Process high-water RSS in MB (``ru_maxrss``: KiB on Linux, bytes on
+    macOS). A lifetime maximum — it never decreases, so per-call deltas
+    are only meaningful for the largest allocation the process makes."""
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return ru / (1024.0 * 1024.0) if sys.platform == "darwin" else ru / 1024.0
+
+
+def measure_peak(fn, *args, **kw):
+    """(result, {"peak_rss_mb", "py_heap_peak_mb"}): run ``fn`` and report
+    real memory numbers instead of analytic byte counts — the process RSS
+    high-water after the call (captures XLA device buffers, which the
+    Python allocator never sees) plus the tracemalloc Python-heap peak
+    during the call (per-call exact, host allocations only)."""
+    tracemalloc.start()
+    try:
+        out = fn(*args, **kw)
+        _, py_peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    return out, {"peak_rss_mb": peak_rss_mb(),
+                 "py_heap_peak_mb": py_peak / 1e6}
 
 
 def emit(rows: list[dict], name: str):

@@ -1,4 +1,4 @@
-"""Benchmark driver: one module per paper table/figure + kernels + roofline.
+"""Benchmark driver: one module per paper table/figure + kernels.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig6]
 
@@ -18,8 +18,7 @@ def main() -> None:
 
     from . import (table1_accuracy, fig3_partitions, fig4_samplerate,
                    fig6_adversarial, fig7_challenging, fig8_multidim,
-                   fig9_workload_shift, table3_preproc, bench_kernels,
-                   roofline)
+                   fig9_workload_shift, table3_preproc, bench_kernels)
     benches = {
         "table1": table1_accuracy.run,
         "fig3": fig3_partitions.run,
@@ -30,7 +29,6 @@ def main() -> None:
         "fig9": fig9_workload_shift.run,
         "table3": table3_preproc.run,
         "kernels": bench_kernels.run,
-        "roofline": roofline.run,
     }
     only = set(args.only.split(",")) if args.only else None
     csv = ["name,us_per_call,derived"]

@@ -1,0 +1,16 @@
+"""Quarantined LM-substrate from the original seed (DESIGN.md §5).
+
+These packages (``configs``/``models``/``optim``/``launch``/``runtime``/
+``checkpoint``) are the language-model training scaffold the repo grew
+from. They are **explicitly unsupported**: nothing in the PASS/AQP engine
+imports them, they are excluded from tier-1 CI, and they may be deleted
+outright in a future PR. They are kept only as a reference for the mesh /
+sharding idioms they contain (`launch/mesh.py`, `models/sharding.py`) and
+for `optim/grad_compression.py`'s ``compressed_psum`` — which the sharded
+synopsis layer intentionally does NOT adopt: its collectives move O(k·5)
+f32 aggregates (kilobytes), where int8 quantization would cost more in
+pack/unpack latency than it saves in bytes and would break the
+mergeable-summary exactness of the COUNT column.
+
+Import at your own risk; APIs here receive no maintenance.
+"""

@@ -36,12 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import get_config, ARCHITECTURES, SHAPES
-from repro.models import model as M
-from repro.models import transformer as T
-from repro.models import sharding as shd
-from repro.optim import adamw
-from repro.launch import mesh as mesh_lib
+from repro._legacy.configs import get_config, ARCHITECTURES, SHAPES
+from repro._legacy.models import model as M
+from repro._legacy.models import transformer as T
+from repro._legacy.models import sharding as shd
+from repro._legacy.optim import adamw
+from repro._legacy.launch import mesh as mesh_lib
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")
@@ -121,7 +121,7 @@ def input_specs(cfg, shape_name: str):
 
 def _per_device_bytes(mesh, shapes_tree, specs_tree, dtype_bytes=None):
     """Sum of per-device leaf bytes given a spec tree."""
-    import repro.models.sharding as _s
+    import repro._legacy.models.sharding as _s
     total = 0
     leaves = jax.tree_util.tree_leaves(shapes_tree)
     specs = jax.tree_util.tree_leaves(

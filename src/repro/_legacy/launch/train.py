@@ -25,12 +25,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.models import model as M
-from repro.models import sharding as shd
-from repro.optim import adamw
-from repro.checkpoint.checkpoint import CheckpointManager
-from repro.runtime.fault_tolerance import (StragglerMonitor, Heartbeat,
+from repro._legacy.configs import get_config
+from repro._legacy.models import model as M
+from repro._legacy.models import sharding as shd
+from repro._legacy.optim import adamw
+from repro._legacy.checkpoint.checkpoint import CheckpointManager
+from repro._legacy.runtime.fault_tolerance import (StragglerMonitor, Heartbeat,
                                            elastic_mesh, RestartState)
 from repro.data.loader import TokenLoader
 

@@ -247,6 +247,30 @@ class PassEngine:
                        "invalidations": 0, "aot_compiles": 0,
                        "fused_serves": 0}
 
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_sharded(cls, c, a, *, k: int = 64, mesh=None,
+                     serving: ServingConfig | None = None,
+                     ci: CIConfig | float | None = None,
+                     plan_cache_size: int = 32,
+                     **build_kw) -> "PassEngine":
+        """Build a synopsis data-parallel over ``mesh`` and serve it.
+
+        Runs :func:`repro.sharded.build_synopsis_sharded` (rows sharded
+        over the mesh's ``"shards"`` axis, O(k) merge) and wraps the
+        resulting :class:`~repro.sharded.ShardedIngestor` as the engine
+        source, so the engine keeps streaming data-parallel afterwards:
+        ``eng.source.ingest(...)`` bumps the epoch and prepared plans
+        re-pin on their next call, exactly like the single-device
+        streaming source. ``build_kw`` forwards to the sharded builder
+        (``sample_budget``, ``method``, ``opt_samples``, ``seed``, ...).
+        """
+        from ..sharded import build_synopsis_sharded
+        ing, _report = build_synopsis_sharded(c, a, k=k, mesh=mesh,
+                                              **build_kw)
+        return cls(ing, serving=serving, ci=ci,
+                   plan_cache_size=plan_cache_size)
+
     # -- source ------------------------------------------------------------
     @property
     def source(self):

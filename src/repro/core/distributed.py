@@ -68,10 +68,16 @@ def build_leaf_aggregates(mesh: Mesh, values: jnp.ndarray,
 def serve_queries_sharded(mesh: Mesh, syn: Synopsis, queries: QueryBatch,
                           kind: str = "sum", lam: float = 2.576):
     """shard_queries mode: replicate synopsis, shard the query batch over
-    every mesh axis. Q must divide the device count (pad upstream)."""
+    every mesh axis. Ragged batches are handled internally: Q pads up to a
+    multiple of the device count with degenerate point queries whose rows
+    are sliced off the result, so callers never see the padding."""
     from ..api import PassEngine, ServingConfig
     eng = PassEngine(syn, serving=ServingConfig(kinds=(kind,), lam=lam))
     axes = tuple(mesh.axis_names)
+    q = queries.num_queries
+    n_dev = int(mesh.size)
+    q_lo = pad_to(queries.lo, n_dev, axis=0)
+    q_hi = pad_to(queries.hi, n_dev, axis=0)
 
     def shard_fn(q_lo, q_hi):
         res = eng.answer(QueryBatch(q_lo, q_hi))[kind]
@@ -80,8 +86,8 @@ def serve_queries_sharded(mesh: Mesh, syn: Synopsis, queries: QueryBatch,
     qspec = P(axes)
     est, ci, lo, hi = _shard_map(
         shard_fn, mesh=mesh, in_specs=(qspec, qspec),
-        out_specs=(qspec,) * 4)(queries.lo, queries.hi)
-    return est, ci, lo, hi
+        out_specs=(qspec,) * 4)(q_lo, q_hi)
+    return est[:q], ci[:q], lo[:q], hi[:q]
 
 
 def serve_samples_sharded(mesh: Mesh, syn: Synopsis, queries: QueryBatch,

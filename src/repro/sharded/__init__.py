@@ -1,0 +1,32 @@
+"""Sharded synopsis scale-out: data-parallel PASS build, streaming ingest,
+and drift re-optimization across a device mesh (DESIGN.md §11).
+
+The synopsis itself is O(K) small and replicates for serving; what scales
+with the data is the O(N) work of *filling* it — exact per-leaf
+aggregates, bounding boxes, and per-stratum reservoirs. This package
+shards that work row-wise over a 1-D ``"shards"`` mesh axis with zero
+per-batch collectives and an O(k) psum/pmin/pmax + reservoir all_gather
+merge at serve time.
+
+Entry points:
+    build_synopsis_sharded(c, a, k=...)   data-parallel build -> ingestor
+    ShardedIngestor(base)                 data-parallel streaming ingest
+    reoptimize_sharded(ing, c, a)         mesh-parallel drift rebuild
+    PassEngine.from_sharded(c, a, ...)    build + wrap in one call
+"""
+from .mesh import SHARD_AXIS, data_mesh, num_shards, shard_leading, split_rows
+from .ingest import ShardedIngestor, init_sharded_state
+from .merge import merge_sharded
+from .build import (build_synopsis_sharded, fill_skeleton, skeleton_synopsis,
+                    cut_skeleton_1d, cut_skeleton_kd, thresholds_to_boxes)
+from .reopt import (reoptimize_cuts_sharded, reoptimize_sharded,
+                    maybe_reoptimize_sharded)
+
+__all__ = [
+    "SHARD_AXIS", "data_mesh", "num_shards", "shard_leading", "split_rows",
+    "ShardedIngestor", "init_sharded_state", "merge_sharded",
+    "build_synopsis_sharded", "fill_skeleton", "skeleton_synopsis",
+    "cut_skeleton_1d", "cut_skeleton_kd", "thresholds_to_boxes",
+    "reoptimize_cuts_sharded", "reoptimize_sharded",
+    "maybe_reoptimize_sharded",
+]

@@ -1,0 +1,227 @@
+"""Data-parallel PASS synopsis build (DESIGN.md §11).
+
+The paper's partition *search* runs on a small uniform subsample
+(§4.2/§4.4), so it stays on the host; only the O(N) pass that fills the
+partition with exact aggregates and stratified samples needs the cluster.
+The sharded build exploits that split:
+
+1. **Skeleton** (host, subsample): 1-D — ADP/equal-depth cuts over
+   ``opt_samples`` rows -> (k-1,) thresholds; KD — greedy ``kd_partition``
+   boxes over the subsample with outer faces stretched to +/-BIG so the
+   skeleton tiles all of R^d. Cost independent of N and of the mesh.
+2. **Fill** (mesh, full data): rows stream through the sharded ingestor
+   in batches, routed against the *static* skeleton. Each device computes
+   its shard's exact (k, 5) aggregates via ``segment_reduce``, grows exact
+   per-leaf bounding boxes by scatter extremes, and fills its own slice of
+   every stratum's reservoir — no row ever crosses a device.
+3. **Merge + commit** (O(k) collectives): one psum/pmin/pmax + a tiled
+   reservoir all_gather produce the replicated serving synopsis, which
+   ``commit()`` folds in as the new immutable base.
+
+Because the skeleton is frozen before the fill, the row -> leaf
+assignment — hence every exact aggregate — is identical no matter how
+many shards the fill used (bit-identical on integer-valued data, where
+f32 accumulation is order-independent).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core import dp as dp_mod
+from ..core import partition_tree as pt
+from ..core.types import Synopsis, PartitionTree
+from ..kernels.ref import NEG_BIG, POS_BIG
+from .ingest import ShardedIngestor
+from .mesh import Mesh, data_mesh, num_shards
+
+
+# --------------------------------------------------------------------------
+# Cut skeletons (host, subsample — step 1)
+# --------------------------------------------------------------------------
+
+def cut_skeleton_1d(c, a, k: int, *, method: str = "adp",
+                    opt_samples: int = 4096, seed: int = 0
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """(k, 1) routing interval boxes from subsample cuts.
+
+    ``method='adp'`` runs the paper's starred Sampling+Discretization DP
+    (SUM oracle) on the subsample; ``'eq'`` takes equal-depth cuts.
+    Returns (route_lo, route_hi) with the outer faces at -/+BIG; interval
+    i is ``(thr[i-1], thr[i]]`` under the upper-leaf tie rule the build
+    step applies.
+    """
+    c = np.asarray(c, np.float32)
+    if c.ndim == 1:
+        c = c[:, None]
+    a = np.asarray(a, np.float32).reshape(-1)
+    n = a.shape[0]
+    rng = np.random.default_rng(seed)
+    m = min(int(opt_samples), n)
+    idx = rng.choice(n, size=m, replace=False) if m < n else np.arange(n)
+    sc, sa = c[idx, 0], a[idx]
+    order = np.argsort(sc, kind="stable")
+    c_sorted = jnp.asarray(sc[order])
+    if method == "adp":
+        cuts, _ = dp_mod.dp_monotone_jnp(jnp.asarray(sa[order]), k)
+    elif method == "eq":
+        cuts = jnp.asarray(dp_mod.equal_depth_boundaries(m, k))
+    else:
+        raise ValueError(f"unknown skeleton method {method!r}")
+    thr = np.asarray(dp_mod.cuts_to_thresholds_jnp(c_sorted, cuts),
+                     np.float32)
+    return thresholds_to_boxes(thr)
+
+
+def thresholds_to_boxes(thr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(k-1,) value thresholds -> (k, 1) static routing interval boxes."""
+    thr = np.asarray(thr, np.float32).reshape(-1)
+    lo = np.concatenate([[NEG_BIG], thr]).astype(np.float32)[:, None]
+    hi = np.concatenate([thr, [POS_BIG]]).astype(np.float32)[:, None]
+    return lo, hi
+
+
+def cut_skeleton_kd(c, a, k: int, *, kind: str = "sum",
+                    opt_samples: int = 4096, seed: int = 0,
+                    delta_frac: float = 0.01
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """(k, d) static KD routing boxes from a greedy subsample partition.
+
+    ``kd_partition`` tiles the subsample's bounding box; faces flush with
+    that root box stretch to +/-BIG so every future row (the full dataset,
+    plus drift) is *contained* — routing never falls into the
+    nearest-box regime and is therefore shard-count independent.
+    """
+    c = np.asarray(c, np.float64)
+    if c.ndim == 1:
+        c = c[:, None]
+    a = np.asarray(a, np.float64).reshape(-1)
+    n = a.shape[0]
+    rng = np.random.default_rng(seed)
+    m = min(int(opt_samples), n)
+    idx = rng.choice(n, size=m, replace=False) if m < n else np.arange(n)
+    from ..core import kdtree
+    _, boxes = kdtree.kd_partition(c[idx], a[idx], k=k, m=m, kind=kind,
+                                   delta_frac=delta_frac, seed=seed)
+    lo = boxes[:, :, 0].astype(np.float32)
+    hi = boxes[:, :, 1].astype(np.float32)
+    root_lo = lo.min(axis=0)
+    root_hi = hi.max(axis=0)
+    lo = np.where(lo <= root_lo, NEG_BIG, lo).astype(np.float32)
+    hi = np.where(hi >= root_hi, POS_BIG, hi).astype(np.float32)
+    return lo, hi
+
+
+# --------------------------------------------------------------------------
+# Skeleton synopsis (the empty base the fill streams into)
+# --------------------------------------------------------------------------
+
+def skeleton_synopsis(k: int, d: int, s_cap: int) -> Synopsis:
+    """Empty k-leaf synopsis: zero aggregates, inverted (+inf/-inf) boxes.
+
+    The inverted boxes matter: scatter min/max during the fill grows them
+    into the *exact data* bounding boxes (the classification-exactness
+    invariant of DESIGN.md §3), with no seeded-from-skeleton slack.
+    """
+    agg = np.zeros((k, 5))
+    agg[:, 3] = np.inf
+    agg[:, 4] = -np.inf
+    lo = np.full((k, d), np.inf)
+    hi = np.full((k, d), -np.inf)
+    tree = pt.build_tree_from_leaves(agg, lo, hi)
+    return Synopsis(
+        leaf_lo=jnp.asarray(lo, jnp.float32),
+        leaf_hi=jnp.asarray(hi, jnp.float32),
+        leaf_agg=jnp.asarray(agg, jnp.float32),
+        n_rows=jnp.zeros(k, jnp.float32),
+        sample_c=jnp.zeros((k, s_cap, d), jnp.float32),
+        sample_a=jnp.zeros((k, s_cap), jnp.float32),
+        sample_valid=jnp.zeros((k, s_cap), bool),
+        k_per_leaf=jnp.zeros(k, jnp.int32),
+        tree=PartitionTree(
+            lo=jnp.asarray(tree.lo, jnp.float32),
+            hi=jnp.asarray(tree.hi, jnp.float32),
+            agg=jnp.asarray(tree.agg, jnp.float32),
+            left=jnp.asarray(tree.left), right=jnp.asarray(tree.right),
+            leaf_id=jnp.asarray(tree.leaf_id),
+            level=jnp.asarray(tree.level)),
+        num_leaves=k, d=d, total_rows=jnp.asarray(0.0, jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Data-parallel fill (steps 2-3)
+# --------------------------------------------------------------------------
+
+def fill_skeleton(c, a, route_lo, route_hi, *, mesh: Mesh,
+                  s_cap: int, seed: int = 0, backend: str | None = None,
+                  batch_rows: int = 1 << 16) -> ShardedIngestor:
+    """Stream the full dataset through a sharded build-phase ingestor and
+    commit. Shared tail of :func:`build_synopsis_sharded` and of the
+    mesh-parallel re-optimizer (:func:`repro.sharded.reopt`)."""
+    c = np.asarray(c, np.float32)
+    if c.ndim == 1:
+        c = c[:, None]
+    a = np.asarray(a, np.float32).reshape(-1)
+    n = a.shape[0]
+    k = route_lo.shape[0]
+    ing = ShardedIngestor(skeleton_synopsis(k, c.shape[1], s_cap),
+                          mesh=mesh, seed=seed, backend=backend,
+                          route_boxes=(route_lo, route_hi))
+    for i in range(0, n, batch_rows):
+        ing.ingest(c[i:i + batch_rows], a[i:i + batch_rows])
+    ing.commit()
+    return ing
+
+
+def build_synopsis_sharded(c, a, *, k: int = 64, mesh: Mesh | None = None,
+                           method: str = "adp", kind: str = "sum",
+                           sample_budget: int | None = None,
+                           opt_samples: int = 4096, seed: int = 0,
+                           backend: str | None = None,
+                           batch_rows: int = 1 << 16
+                           ) -> tuple[ShardedIngestor, dict]:
+    """Distributed analogue of ``core.synopsis.build_synopsis``.
+
+    Returns (committed :class:`ShardedIngestor`, report). The ingestor
+    serves immediately (``PassEngine(ing)``) and keeps streaming
+    data-parallel; ``method`` picks the 1-D skeleton ('adp' | 'eq'), d > 1
+    always uses the KD skeleton. The total sample budget is rounded so the
+    per-leaf capacity divides evenly across shards (the merged serving
+    shape (k, S) stays shard-count independent when the rounded capacity
+    coincides, e.g. any multiple of the device counts being compared).
+    """
+    mesh = mesh if mesh is not None else data_mesh()
+    D = num_shards(mesh)
+    c = np.asarray(c, np.float32)
+    if c.ndim == 1:
+        c = c[:, None]
+    a = np.asarray(a, np.float32).reshape(-1)
+    n, d = c.shape
+    if sample_budget is None:
+        sample_budget = max(k, int(0.005 * n))
+    s_cap = max(1, -(-int(sample_budget) // k))
+    s_cap = D * (-(-s_cap // D))                     # multiple of D
+    t0 = time.perf_counter()
+    if d == 1:
+        route_lo, route_hi = cut_skeleton_1d(
+            c, a, k, method=method, opt_samples=opt_samples, seed=seed)
+    else:
+        route_lo, route_hi = cut_skeleton_kd(
+            c, a, k, kind=kind, opt_samples=opt_samples, seed=seed)
+    t1 = time.perf_counter()
+    ing = fill_skeleton(c, a, route_lo, route_hi, mesh=mesh, s_cap=s_cap,
+                        seed=seed + 1, backend=backend,
+                        batch_rows=batch_rows)
+    t2 = time.perf_counter()
+    report = {"k": int(route_lo.shape[0]), "n": n, "d": d,
+              "n_shards": D, "s_cap": int(s_cap),
+              "seconds_total": t2 - t0, "seconds_skeleton": t1 - t0,
+              "seconds_fill": t2 - t1,
+              "rows_per_sec": n / max(t2 - t1, 1e-9)}
+    return ing, report
+
+
+__all__ = ["build_synopsis_sharded", "fill_skeleton", "skeleton_synopsis",
+           "cut_skeleton_1d", "cut_skeleton_kd", "thresholds_to_boxes"]

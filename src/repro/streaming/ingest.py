@@ -153,11 +153,17 @@ def _batch_occupancy(leaf: jnp.ndarray) -> jnp.ndarray:
 
 
 def _ingest_core(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
-                 u: jnp.ndarray, backend_name: str) -> StreamState:
-    """One ingested batch -> new state (pure; all counters device-side)."""
+                 u: jnp.ndarray, backend_name: str,
+                 mask: jnp.ndarray | None = None) -> StreamState:
+    """One ingested batch -> new state (pure; all counters device-side).
+
+    ``mask`` (B,) bool marks real rows; ``False`` rows are padding (the
+    sharded ingest pads ragged batches up to a multiple of the shard
+    count) and must be complete no-ops: they are routed (fixed shapes) but
+    contribute nothing to aggregates, boxes, counters, or the reservoir.
+    """
     be = get_backend(backend_name)
     b, d = c.shape
-    k, cap = state.sample_a.shape
 
     # 1. route (one pass against batch-entry boxes); 1-D dodges the dense
     #    (B, k) distance matrix entirely — see _route_1d; d > 1 dispatches
@@ -167,17 +173,41 @@ def _ingest_core(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
         leaf, dsel = _route_1d(state.leaf_lo, state.leaf_hi, c)
     else:
         leaf, dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c)
-    oob = jnp.sum(dsel > 0.0)
+    return _apply_routed(state, c, a, u, leaf, dsel, backend_name, mask)
+
+
+def _apply_routed(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
+                  u: jnp.ndarray, leaf: jnp.ndarray, dsel: jnp.ndarray,
+                  backend_name: str,
+                  mask: jnp.ndarray | None = None) -> StreamState:
+    """Aggregate + box-expansion + reservoir update for pre-routed rows.
+
+    Split out of :func:`_ingest_core` so alternative routing policies (the
+    sharded build path routes against a *static* cut skeleton instead of
+    the live boxes — ``repro.sharded.build``) reuse the exact same state
+    transition.
+    """
+    be = get_backend(backend_name)
+    b, d = c.shape
+    k, cap = state.sample_a.shape
+    if mask is None:
+        mask = jnp.ones(b, dtype=bool)
+    oob = jnp.sum((dsel > 0.0) & mask)
 
     # 2. per-leaf aggregate delta through the registry-dispatched
-    #    segment_reduce kernel; leaf-box expansion is two scatter extremes
-    #    per dimension (boxes are not mergeable aggregates — they only grow)
-    agg_b = be.segment_reduce(a.astype(jnp.float32), leaf, k, bn=None)
+    #    segment_reduce kernel (padding rows carry seg id -1, which every
+    #    backend drops); leaf-box expansion is two scatter extremes per
+    #    dimension (boxes are not mergeable aggregates — they only grow) —
+    #    padding rows scatter +/-inf sentinels, a min/max no-op
+    leaf_or_pad = jnp.where(mask, leaf, -1)
+    agg_b = be.segment_reduce(a.astype(jnp.float32), leaf_or_pad, k, bn=None)
     new_lo = state.leaf_lo
     new_hi = state.leaf_hi
+    c_lo = jnp.where(mask[:, None], c, jnp.inf)
+    c_hi = jnp.where(mask[:, None], c, -jnp.inf)
     for j in range(d):
-        new_lo = new_lo.at[leaf, j].min(c[:, j])
-        new_hi = new_hi.at[leaf, j].max(c[:, j])
+        new_lo = new_lo.at[leaf, j].min(c_lo[:, j])
+        new_hi = new_hi.at[leaf, j].max(c_hi[:, j])
 
     delta = state.delta_agg
     new_delta = jnp.concatenate(
@@ -185,15 +215,18 @@ def _ingest_core(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
          jnp.minimum(delta[:, 3:4], agg_b[:, 3:4]),
          jnp.maximum(delta[:, 4:5], agg_b[:, 4:5])], axis=1)
 
-    # 3. batched Vitter reservoir
+    # 3. batched Vitter reservoir (padding rows group under sentinel id k,
+    #    so real rows' within-leaf ranks are unaffected, and their slot is
+    #    forced to -1 so they never claim a reservoir write)
     counts = agg_b[:, 2].astype(jnp.int32)                     # (k,)
-    occ = _batch_occupancy(leaf)                               # (B,)
+    occ = _batch_occupancy(jnp.where(mask, leaf, k))           # (B,)
     seen_at = state.seen[leaf] + occ + 1
     fill_pos = state.k_per_leaf[leaf] + occ
     j_draw = jnp.floor(u.astype(jnp.float32)
                        * seen_at.astype(jnp.float32)).astype(jnp.int32)
     slot = jnp.where(fill_pos < cap, fill_pos,
                      jnp.where(j_draw < cap, j_draw, -1))
+    slot = jnp.where(mask, slot, -1)
     key = jnp.where(slot >= 0, leaf * cap + slot, k * cap)
     rows = jnp.arange(b, dtype=jnp.int32)
     winner = (jnp.full(k * cap + 1, -1, jnp.int32).at[key].max(rows)

@@ -35,6 +35,7 @@ def current_surface() -> dict:
         "repro.api.__all__": sorted(api.__all__),
         "PassEngine.__init__": _sig(api.PassEngine.__init__),
         "PassEngine.answer": _sig(api.PassEngine.answer),
+        "PassEngine.from_sharded": _sig(api.PassEngine.from_sharded),
         "PassEngine.prepare": _sig(api.PassEngine.prepare),
         "PassEngine.stats": _sig(api.PassEngine.stats),
         "PassEngine.replace_source": _sig(api.PassEngine.replace_source),

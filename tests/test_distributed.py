@@ -60,6 +60,19 @@ SCRIPT = textwrap.dedent("""
     np.testing.assert_allclose(np.asarray(est2), np.asarray(ref.estimate),
                                rtol=1e-4, atol=1e-2)
     print("SERVE_S_OK")
+
+    # 4) ragged Q (13 queries over 8 devices): padded internally, padding
+    # rows sliced off — results match the replicated path exactly
+    qs13 = random_queries(c, 13, seed=2)
+    est3, ci3, lo3, hi3 = dist.serve_queries_sharded(mesh, syn, qs13,
+                                                     kind="sum")
+    ref13 = answer(syn, qs13, kind="sum")
+    assert est3.shape == (13,) and ci3.shape == (13,)
+    np.testing.assert_allclose(np.asarray(est3), np.asarray(ref13.estimate),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ci3), np.asarray(ref13.ci_half),
+                               rtol=1e-4, atol=1e-3)
+    print("SERVE_RAGGED_OK")
 """)
 
 
@@ -69,5 +82,5 @@ def test_distributed_pass_subprocess():
                        capture_output=True, text=True, cwd="/root/repo",
                        timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
-    for tag in ("BUILD_OK", "SERVE_Q_OK", "SERVE_S_OK"):
+    for tag in ("BUILD_OK", "SERVE_Q_OK", "SERVE_S_OK", "SERVE_RAGGED_OK"):
         assert tag in r.stdout

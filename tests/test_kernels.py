@@ -80,9 +80,17 @@ def test_jnp_backend_matches_pallas():
     rng = np.random.default_rng(0)
     v = jnp.asarray(rng.normal(0, 1, 2048), jnp.float32)
     ids = jnp.asarray(rng.integers(0, 9, 2048), jnp.int32)
-    os.environ["REPRO_KERNEL_BACKEND"] = "pallas"
-    a = np.asarray(ops.segment_reduce_op(v, ids, 9))
-    os.environ["REPRO_KERNEL_BACKEND"] = "jnp"
-    b = np.asarray(ops.segment_reduce_op(v, ids, 9))
-    os.environ["REPRO_KERNEL_BACKEND"] = "pallas"
+    prev = os.environ.get("REPRO_KERNEL_BACKEND")
+    try:
+        os.environ["REPRO_KERNEL_BACKEND"] = "pallas"
+        a = np.asarray(ops.segment_reduce_op(v, ids, 9))
+        os.environ["REPRO_KERNEL_BACKEND"] = "jnp"
+        b = np.asarray(ops.segment_reduce_op(v, ids, 9))
+    finally:
+        # restore: leaking "pallas"/"jnp" here silently flips the backend
+        # for every later test in the session (and their subprocesses)
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_BACKEND", None)
+        else:
+            os.environ["REPRO_KERNEL_BACKEND"] = prev
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
