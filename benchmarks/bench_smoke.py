@@ -19,6 +19,7 @@ import pathlib
 import platform
 import sys
 
+from . import bench_coalescer
 from . import bench_distributed
 from . import bench_fused
 from . import bench_streaming_ingest
@@ -38,6 +39,8 @@ def run() -> tuple[dict, list]:
     metrics.update(serve_speedups)
     # fused hot paths: bootstrap megakernel + tiled multi-D router
     metrics.update(bench_fused.run(**bench_fused.tiny_config()))
+    # multi-tenant coalesced serving (demux bit-identity asserted inside)
+    metrics.update(bench_coalescer.run(**bench_coalescer.tiny_config()))
     # multi-device serving path: psum merge of the mergeable summaries
     metrics.update(bench_distributed.run(**bench_distributed.tiny_config()))
     # sharded-ingest weak scaling: fresh subprocess per forced device count

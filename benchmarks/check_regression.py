@@ -8,7 +8,9 @@ grow) — EXCEPT the ``REQUIRED_GATED`` set, which must exist on BOTH
 sides: adding a gated metric to the bench without refreshing
 ``BENCH_baseline.json``, or dropping one from the bench output, fails
 with a clear message naming the missing keys instead of silently passing
-(or KeyError-ing). Exit code 1 on any regression.
+(or KeyError-ing). Exit code 1 on any regression. Inside GitHub Actions
+(``$GITHUB_STEP_SUMMARY`` set) the full delta table is also appended to
+the workflow step summary.
 
     PYTHONPATH=src python -m benchmarks.check_regression BENCH_pr.json \
         [baseline.json] [--factor 2.0]
@@ -17,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -26,6 +29,7 @@ BASELINE = pathlib.Path(__file__).with_name("BENCH_baseline.json")
 # acceptance criteria pin. Grow this set together with the baseline.
 REQUIRED_GATED = (
     "bootstrap_fused_speedup_x",
+    "coalesced_serving_speedup_x",
     "route_multid_tiled_speedup_x",
     "serving_prepared_speedup_x",
     "sharded_ingest_scaleup_x",
@@ -47,28 +51,71 @@ def lower_is_better(name: str) -> bool:
     return not name.endswith(("_speedup_x", "_scaleup_x"))
 
 
-def compare(pr: dict, base: dict, factor: float) -> list[str]:
-    failures = []
+def compare(pr: dict, base: dict, factor: float
+            ) -> tuple[list[str], list[dict]]:
+    failures, rows = [], []
     for name, want in sorted(base.items()):
         if name.endswith("_rows"):
             continue                           # config descriptors, not perf
         got = pr.get(name)
         if got is None:
             print(f"  MISSING  {name} (baseline {want:.3f})")
+            rows.append({"tag": "MISSING", "name": name, "got": None,
+                         "want": want, "allow": None})
             continue
         if lower_is_better(name):
             bad = got > want * factor
-            verdict = f"{got:10.3f} vs baseline {want:10.3f} (allow <= {want * factor:.3f})"
+            allow = want * factor
+            verdict = f"{got:10.3f} vs baseline {want:10.3f} (allow <= {allow:.3f})"
         else:
             bad = got < want / factor
-            verdict = f"{got:10.3f} vs baseline {want:10.3f} (allow >= {want / factor:.3f})"
+            allow = want / factor
+            verdict = f"{got:10.3f} vs baseline {want:10.3f} (allow >= {allow:.3f})"
         tag = "REGRESSED" if bad else "ok"
         print(f"  {tag:9s} {name}: {verdict}")
+        rows.append({"tag": tag, "name": name, "got": got, "want": want,
+                     "allow": allow})
         if bad:
             failures.append(name)
     for name in sorted(set(pr) - set(base)):
         print(f"  NEW      {name}: {pr[name]:.3f} (no baseline yet)")
-    return failures
+        rows.append({"tag": "NEW", "name": name, "got": pr[name],
+                     "want": None, "allow": None})
+    return failures, rows
+
+
+def write_step_summary(rows: list[dict], factor: float, ok: bool) -> None:
+    """Append a BENCH delta table to ``$GITHUB_STEP_SUMMARY`` (no-op when
+    the env var is unset, i.e. outside GitHub Actions)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    icon = {"ok": "✅", "REGRESSED": "❌", "NEW": "🆕", "MISSING": "⚠️"}
+
+    def fmt(v):
+        return "—" if v is None else f"{v:.3f}"
+
+    def delta(r):
+        if r["got"] is None or r["want"] is None or r["want"] == 0:
+            return "—"
+        d = (r["got"] / r["want"] - 1.0) * 100.0
+        return f"{d:+.1f}%"
+
+    lines = [
+        f"### bench-smoke {'✅ no regression' if ok else '❌ REGRESSED'} "
+        f"(gate factor {factor}x)",
+        "",
+        "| metric | PR | baseline | delta | allowed | status |",
+        "|---|---:|---:|---:|---:|:--:|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| `{r['name']}` | {fmt(r['got'])} | {fmt(r['want'])} "
+            f"| {delta(r)} | {fmt(r['allow'])} "
+            f"| {icon.get(r['tag'], r['tag'])} |")
+    lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main(argv=None) -> int:
@@ -95,7 +142,8 @@ def main(argv=None) -> int:
         print("      the bench stopped emitting a gated headline metric "
               "— a silent drop would disable its gate.")
         return 1
-    failures = compare(pr, base, args.factor)
+    failures, rows = compare(pr, base, args.factor)
+    write_step_summary(rows, args.factor, ok=not failures)
     if failures:
         print(f"FAIL: {len(failures)} metric(s) regressed >{args.factor}x: "
               f"{failures}")

@@ -135,6 +135,70 @@ class CIConfig:
                 self.boot_normalize, self.boot_fused)
 
 
+@dataclasses.dataclass(frozen=True)
+class CoalescerConfig:
+    """Multi-tenant request-coalescer configuration (DESIGN.md §12).
+
+    ``tick_ms``           coalescing window: how long the event-loop driver
+                          sleeps between ticks. Every request queued when a
+                          tick fires rides that tick's device dispatches
+                          (the deterministic synchronous test mode ignores
+                          it and ticks on demand).
+    ``shape_classes``     ascending padded-batch ladder. A dispatch is
+                          padded up to the smallest class holding its rows,
+                          so every bucket reuses ONE prepared AOT
+                          executable per (class x config); oversized
+                          requests round up to a multiple of the largest
+                          class (a bounded executable set either way).
+    ``max_outstanding``   per-tenant admission budget: submitted-but-not-
+                          yet-served requests beyond this are shed with
+                          :class:`~repro.serve.Overloaded`.
+    ``max_queue_depth``   global queued-request bound; submissions past it
+                          are shed regardless of tenant.
+    ``wait_window``       per-tenant queue-wait samples kept for the
+                          p50/p95 accounting in ``stats()``.
+    """
+    tick_ms: float = 2.0
+    shape_classes: tuple[int, ...] = (8, 32, 128)
+    max_outstanding: int = 8
+    max_queue_depth: int = 256
+    wait_window: int = 1024
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape_classes",
+                           tuple(int(s) for s in self.shape_classes))
+
+    def validate(self) -> "CoalescerConfig":
+        if self.tick_ms <= 0.0:
+            raise ValueError(f"tick_ms must be > 0, got {self.tick_ms}")
+        if not self.shape_classes:
+            raise ValueError("shape_classes must be non-empty")
+        if any(s <= 0 for s in self.shape_classes):
+            raise ValueError(
+                f"shape_classes must be positive, got {self.shape_classes}")
+        if tuple(sorted(self.shape_classes)) != self.shape_classes:
+            raise ValueError(
+                f"shape_classes must be ascending, got {self.shape_classes}")
+        if self.max_outstanding < 1:
+            raise ValueError("max_outstanding must be >= 1")
+        if self.max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1")
+        if self.wait_window < 1:
+            raise ValueError("wait_window must be >= 1")
+        return self
+
+    def padded_size(self, q: int) -> int:
+        """Rows -> padded batch size: the smallest ladder class that holds
+        them, or a multiple of the largest class past the ladder top."""
+        if q < 1:
+            raise ValueError(f"padded_size needs >= 1 rows, got {q}")
+        for s in self.shape_classes:
+            if q <= s:
+                return s
+        top = self.shape_classes[-1]
+        return -(-q // top) * top
+
+
 def as_ci_config(ci) -> CIConfig | None:
     """Coerce ``None | float level | CIConfig`` to an optional CIConfig."""
     if ci is None or isinstance(ci, CIConfig):
@@ -154,5 +218,6 @@ def merge_overrides(cfg, **overrides):
     return dataclasses.replace(cfg, **real) if real else cfg
 
 
-__all__ = ["ServingConfig", "CIConfig", "as_ci_config", "merge_overrides",
-           "KINDS", "CI_METHODS", "DELTA_BUDGETS", "BOOT_NORMALIZE"]
+__all__ = ["ServingConfig", "CIConfig", "CoalescerConfig", "as_ci_config",
+           "merge_overrides", "KINDS", "CI_METHODS", "DELTA_BUDGETS",
+           "BOOT_NORMALIZE"]

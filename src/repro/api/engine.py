@@ -143,11 +143,12 @@ class PreparedQuery:
     """
 
     def __init__(self, engine: "PassEngine", serving: ServingConfig,
-                 ci: CIConfig | None, shape: tuple):
+                 ci: CIConfig | None, shape: tuple, has_plan: bool = False):
         self._engine = engine
         self.serving = serving
         self.ci = ci
         self.shape = tuple(shape)
+        self.has_plan = bool(has_plan)
         self._epoch = engine.epoch
         self._generation = engine._generation
         self._syn = engine.resolve()
@@ -190,8 +191,19 @@ class PreparedQuery:
             # (jax-version drift, backend without lowering support, ...).
             self._aot_failed = True
 
-    def __call__(self, queries: QueryBatch) -> dict[str, QueryResult]:
+    def __call__(self, queries: QueryBatch,
+                 plan_masks=None) -> dict[str, QueryResult]:
+        if (plan_masks is not None) != self.has_plan:
+            raise ValueError(
+                "prepared entry was pinned with has_plan="
+                f"{self.has_plan}; pass plan_masks accordingly")
         if tuple(queries.lo.shape) != self.shape:
+            if self.has_plan:
+                # Planner masks are (Q, k)-shaped: re-key on the batch's own
+                # shape so the fallback stays a (counted) plan-cache miss.
+                return self._engine._lookup(
+                    tuple(queries.lo.shape), self.serving, self.ci,
+                    has_plan=True)(queries, plan_masks)
             return self._engine.answer(queries, kinds=self.serving.kinds,
                                        ci=self.ci, serving=self.serving)
         self._refresh()
@@ -199,7 +211,7 @@ class PreparedQuery:
         if (self.ci is not None and self.ci.method == "bootstrap"
                 and self.ci.boot_fused):
             self._engine._stats["fused_serves"] += 1
-        args = self._build(self._syn, queries, None)
+        args = self._build(self._syn, queries, plan_masks)
         self._calls += 1
         if not _is_tracer(queries.lo):
             if self._aot is None and not self._aot_failed and self._calls >= 2:
@@ -243,6 +255,7 @@ class PassEngine:
         self._plan_cache_size = int(plan_cache_size)
         self._cache: OrderedDict[tuple, PreparedQuery] = OrderedDict()
         self._generation = 0
+        self._coalescer = None
         self._stats = {"hits": 0, "misses": 0, "evictions": 0,
                        "invalidations": 0, "aot_compiles": 0,
                        "fused_serves": 0}
@@ -312,16 +325,17 @@ class PassEngine:
     # counts one invalidation) the next time that plan is actually used —
     # O(1) per ingest instead of O(cache) per bump.
 
-    def _lookup(self, shape, serving, ci) -> PreparedQuery:
+    def _lookup(self, shape, serving, ci,
+                has_plan: bool = False) -> PreparedQuery:
         key = (tuple(shape), serving.cache_key(),
-               ci.cache_key() if ci is not None else None)
+               ci.cache_key() if ci is not None else None, has_plan)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
             self._stats["hits"] += 1
             return hit
         self._stats["misses"] += 1
-        prepared = PreparedQuery(self, serving, ci, shape)
+        prepared = PreparedQuery(self, serving, ci, shape, has_plan=has_plan)
         self._cache[key] = prepared
         if len(self._cache) > self._plan_cache_size:
             self._cache.popitem(last=False)
@@ -335,8 +349,14 @@ class PassEngine:
         """Plan-cache instrumentation: hits/misses/evictions/invalidations/
         aot_compiles/fused_serves (calls answered through the fused
         bootstrap megakernel path) plus current entry count and source
-        epoch."""
-        return dict(self._stats, entries=len(self._cache), epoch=self.epoch)
+        epoch. When a :class:`repro.serve.RequestCoalescer` is attached to
+        this engine, its snapshot (dispatch amortization, per-tenant
+        served counts and queue-wait percentiles) rides along under the
+        ``"coalescer"`` key."""
+        out = dict(self._stats, entries=len(self._cache), epoch=self.epoch)
+        if self._coalescer is not None:
+            out["coalescer"] = self._coalescer.stats()
+        return out
 
     # -- serving -----------------------------------------------------------
     def prepare(self, queries_or_shape, *, kinds=None, ci=_UNSET,
@@ -363,20 +383,19 @@ class PassEngine:
 
         ``kinds=`` / ``ci=`` / ``serving=`` override the engine configs for
         this call (overrides are themselves cached per shape x config).
-        ``plan=`` injects a planner ``QueryPlan``; plans are batch-specific
-        so that path bypasses the prepared-plan cache.
+        ``plan=`` injects a planner ``QueryPlan``; the masks are dynamic
+        (Q, k) operands of the same compiled entry, so plan-carrying calls
+        share a prepared plan-cache slot per shape x config (keyed apart
+        from the plan-less entries, whose pytree lacks the mask operands)
+        instead of bypassing the cache — ``stats()`` hits/misses stay
+        truthful either way.
         """
         sv, cfg = self._effective(kinds, ci, serving)
+        shape = tuple(queries.lo.shape)
         if plan is not None:
-            _executor.count_artifact_pass(sv.kinds)
-            if (cfg is not None and cfg.method == "bootstrap"
-                    and cfg.boot_fused):
-                self._stats["fused_serves"] += 1
-            fn, statics, build = _dispatch_entry(sv, cfg)
-            args = build(self.resolve(), queries,
-                         _executor.plan_to_masks(plan))
-            return fn(*args, **statics)
-        return self._lookup(tuple(queries.lo.shape), sv, cfg)(queries)
+            return self._lookup(shape, sv, cfg, has_plan=True)(
+                queries, _executor.plan_to_masks(plan))
+        return self._lookup(shape, sv, cfg)(queries)
 
 
 __all__ = ["PassEngine", "PreparedQuery"]

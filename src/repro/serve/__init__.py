@@ -1,0 +1,26 @@
+"""Async multi-tenant serving front door (DESIGN.md §12).
+
+Many concurrent tenants, small ragged query batches, one
+:class:`~repro.api.PassEngine`::
+
+    from repro.api import PassEngine, ServingConfig, CoalescerConfig
+    from repro.serve import RequestCoalescer, TickDriver, Overloaded
+
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum", "avg")))
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(8, 32, 128)))
+    with TickDriver(co):
+        fut = co.submit("tenant-a", queries)     # Future per request
+        results = fut.result()                   # {kind: QueryResult}
+
+Requests bucket into padded shape classes, batch across tenants into one
+device dispatch per bucket per tick, and demux back to per-tenant
+futures — bit-identical to per-tenant ``engine.answer`` calls (tested).
+Admission control sheds overload with the typed :class:`Overloaded`
+error; per-tenant accounting rides along in ``engine.stats()``.
+"""
+from .coalescer import RequestCoalescer, Overloaded, PAD_LO, PAD_HI
+from .driver import TickDriver
+from ..api.config import CoalescerConfig
+
+__all__ = ["RequestCoalescer", "TickDriver", "Overloaded",
+           "CoalescerConfig", "PAD_LO", "PAD_HI"]

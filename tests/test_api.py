@@ -193,6 +193,40 @@ def test_plan_cache_lru_eviction():
     assert eng.stats()["misses"] == 4
 
 
+def test_explicit_plan_routes_through_plan_cache(op_counts):
+    """Regression (PR 4 follow-up): `answer(..., plan=)` used to bypass the
+    LRU plan cache entirely, so stats() under-reported misses and every
+    plan-carrying call rebuilt its dispatch. Plans are now a keyed-apart
+    cache entry per shape x config: repeated calls hit, results stay
+    bit-identical to the plan-less path on exact-cover batches, and each
+    call still costs exactly one artifact pass."""
+    c, a, syn = _make(k=8, n=5000)
+    qs = random_queries(c, 16, seed=1)
+    from repro.engine import plan_queries
+    plan = plan_queries(syn.tree, np.asarray(qs.lo), np.asarray(qs.hi),
+                        syn.num_leaves)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum", "avg")))
+    r1 = eng.answer(qs, plan=plan)
+    r2 = eng.answer(qs, plan=plan)
+    r3 = eng.answer(qs, plan=plan)                     # AOT path
+    s = eng.stats()
+    assert s["misses"] == 1 and s["hits"] == 2 and s["entries"] == 1
+    assert op_counts["classify"] == 3                  # one pass per call
+    _assert_results_equal(r2, r1)
+    _assert_results_equal(r3, r1)
+    # plan-carrying and plan-less entries are keyed apart (different
+    # executable pytrees), never cross-hit
+    eng.answer(qs)
+    assert eng.stats()["misses"] == 2
+    eng.answer(qs, plan=plan)
+    eng.answer(qs)
+    assert eng.stats()["hits"] == 4
+    # same answers as the legacy plan bypass (bit-identical plumbing)
+    legacy = _legacy(engine.answer, syn, qs, kinds=("sum", "avg"),
+                     plan=plan)
+    _assert_results_equal(r1, legacy)
+
+
 def test_streaming_ingest_invalidates_prepared_plans():
     """An ingest() epoch bump re-pins every cached plan onto the fresh
     delta merge: answers track the stream and stats count invalidations."""

@@ -17,6 +17,7 @@ import os
 import pathlib
 
 import repro.api as api
+import repro.serve as serve
 
 SNAPSHOT = pathlib.Path(__file__).parent / "data" / "api_surface.json"
 
@@ -42,6 +43,14 @@ def current_surface() -> dict:
         "PreparedQuery.__call__": _sig(api.PreparedQuery.__call__),
         "ServingConfig": _config_fields(api.ServingConfig),
         "CIConfig": _config_fields(api.CIConfig),
+        "CoalescerConfig": _config_fields(api.CoalescerConfig),
+        "repro.serve.__all__": sorted(serve.__all__),
+        "RequestCoalescer.__init__": _sig(serve.RequestCoalescer.__init__),
+        "RequestCoalescer.submit": _sig(serve.RequestCoalescer.submit),
+        "RequestCoalescer.answer": _sig(serve.RequestCoalescer.answer),
+        "RequestCoalescer.tick": _sig(serve.RequestCoalescer.tick),
+        "RequestCoalescer.stats": _sig(serve.RequestCoalescer.stats),
+        "TickDriver.__init__": _sig(serve.TickDriver.__init__),
     }
 
 

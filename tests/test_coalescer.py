@@ -1,0 +1,417 @@
+"""Multi-tenant request coalescer (repro.serve): demux bit-identity
+against per-tenant engine.answer (any bucketing, any arrival order,
+mid-stream epoch bumps, a hypothesis property over tenant
+interleavings), admission control / shedding, per-tenant accounting
+through engine.stats(), the event-loop driver, and a concurrent soak
+against a sharded-ingest engine (the CI multi-device leg runs it on 4
+forced host devices)."""
+import concurrent.futures as cf
+import threading
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st
+
+from repro.api import (PassEngine, ServingConfig, CIConfig, CoalescerConfig)
+from repro.core import build_synopsis, random_queries
+from repro.core.types import QueryBatch
+from repro.serve import RequestCoalescer, TickDriver, Overloaded
+
+ALL_KINDS = ("sum", "count", "avg", "min", "max")
+FIELDS = ("estimate", "ci_half", "lower", "upper", "frac_rows_touched",
+          "ci_lo", "ci_hi")
+
+
+def _make(seed=0, n=12000, k=16, rate=0.02):
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.lognormal(0, 1, n) * (1 + np.sin(c / 5))
+    syn, _ = build_synopsis(c, a, k=k, sample_rate=rate, method="eq",
+                            seed=seed)
+    return c, a, syn
+
+
+def _assert_results_equal(got, want):
+    assert set(got) == set(want)
+    for kind in want:
+        for f in FIELDS:
+            g, w = getattr(got[kind], f), getattr(want[kind], f)
+            if g is None or w is None:
+                assert g is None and w is None, (kind, f)
+                continue
+            assert np.array_equal(np.asarray(g), np.asarray(w)), (kind, f)
+
+
+def _fresh_answer(source, queries, serving, ci=None):
+    """Per-tenant oracle: a cold engine answering this batch alone."""
+    return PassEngine(source, serving=serving, ci=ci).answer(queries)
+
+
+# --------------------------------------------------------------------------
+# Demux bit-identity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ci", [None, 0.95])
+def test_coalesced_bit_identical_to_per_tenant_answers(ci):
+    """Acceptance: every tenant's demuxed slice == its own engine.answer,
+    every kind, every result field, across multiple shape classes and
+    multi-request packing inside one padded dispatch."""
+    c, a, syn = _make()
+    kinds = ("sum", "count", "avg") if ci is not None else ALL_KINDS
+    serving = ServingConfig(kinds=kinds)
+    eng = PassEngine(syn, serving=serving, ci=ci)
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(8, 32)))
+    sizes = [3, 5, 7, 2, 9, 11, 8, 1]
+    batches = {f"t{i}": random_queries(c, q, seed=20 + i)
+               for i, q in enumerate(sizes)}
+    futs = {t: co.submit(t, qs) for t, qs in batches.items()}
+    n_dispatch = co.tick()
+    # cross-tenant coalescing actually happened: fewer device dispatches
+    # than requests
+    assert 0 < n_dispatch < len(sizes)
+    for t, qs in batches.items():
+        _assert_results_equal(futs[t].result(timeout=0),
+                              _fresh_answer(syn, qs, serving, ci))
+    s = co.stats()
+    assert s["served"] == len(sizes)
+    assert s["coalesced_rows"] == sum(sizes)
+    assert s["dispatches"] == n_dispatch
+
+
+def test_coalesced_bit_identical_bootstrap():
+    c, a, syn = _make(seed=3, k=8, n=8000)
+    serving = ServingConfig(kinds=("sum", "avg"))
+    ci = CIConfig(method="bootstrap", n_boot=16)
+    co = RequestCoalescer(PassEngine(syn, serving=serving, ci=ci),
+                          CoalescerConfig(shape_classes=(16,)))
+    batches = {t: random_queries(c, q, seed=i)
+               for i, (t, q) in enumerate([("a", 4), ("b", 6), ("c", 5)])}
+    futs = {t: co.submit(t, qs) for t, qs in batches.items()}
+    assert co.tick() == 1                      # 15 rows -> one padded 16
+    for t, qs in batches.items():
+        _assert_results_equal(futs[t].result(timeout=0),
+                              _fresh_answer(syn, qs, serving, ci))
+
+
+def test_arrival_order_never_changes_answers():
+    """Demux bit-identity holds for ANY submission order: per-query rows
+    are independent, so the packing permutation must not matter."""
+    c, a, syn = _make(k=8, n=6000)
+    serving = ServingConfig(kinds=("sum", "avg"))
+    sizes = [(f"t{i}", 2 + i) for i in range(6)]
+    batches = {t: random_queries(c, q, seed=40 + q) for t, q in sizes}
+    want = {t: _fresh_answer(syn, qs, serving)
+            for t, qs in batches.items()}
+    for perm_seed in range(3):
+        order = np.random.default_rng(perm_seed).permutation(len(sizes))
+        co = RequestCoalescer(PassEngine(syn, serving=serving),
+                              CoalescerConfig(shape_classes=(4, 16)))
+        futs = {}
+        for j in order:
+            t = sizes[j][0]
+            futs[t] = co.submit(t, batches[t])
+        co.tick()
+        for t in futs:
+            _assert_results_equal(futs[t].result(timeout=0), want[t])
+
+
+def test_mixed_configs_bucket_apart_and_stay_correct():
+    """Requests with different per-request configs never share a
+    dispatch, and each still matches its own oracle."""
+    c, a, syn = _make(k=8, n=6000)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(8,)))
+    qs = random_queries(c, 4, seed=1)
+    f_plain = co.submit("a", qs)
+    f_ci = co.submit("b", qs, ci=0.9)
+    f_kinds = co.submit("c", qs, kinds=("count", "max"))
+    assert co.tick() == 3                      # three (config) buckets
+    _assert_results_equal(f_plain.result(0),
+                          _fresh_answer(syn, qs, ServingConfig(("sum",))))
+    _assert_results_equal(f_ci.result(0),
+                          _fresh_answer(syn, qs, ServingConfig(("sum",)),
+                                        ci=0.9))
+    _assert_results_equal(
+        f_kinds.result(0),
+        _fresh_answer(syn, qs, ServingConfig(("count", "max"))))
+
+
+def test_oversize_request_rounds_up_to_ladder_multiple():
+    c, a, syn = _make(k=8, n=6000)
+    serving = ServingConfig(kinds=("sum",))
+    co = RequestCoalescer(PassEngine(syn, serving=serving),
+                          CoalescerConfig(shape_classes=(4, 8)))
+    qs = random_queries(c, 19, seed=9)         # > top class 8 -> padded 24
+    fut = co.submit("big", qs)
+    assert co.tick() == 1
+    _assert_results_equal(fut.result(0), _fresh_answer(syn, qs, serving))
+    assert co.stats()["padded_rows"] == 24 - 19
+
+
+def test_mid_stream_epoch_bump_drains_then_serves_fresh_merge():
+    """Requests dispatched before an ingest answer the old epoch; requests
+    after it answer the new delta merge — each bit-identical to a
+    per-tenant engine.answer against the matching state — and the bump
+    forces one in-flight drain before re-pinning."""
+    from repro.streaming import StreamingIngestor
+    c, a, syn = _make(k=8, n=10000)
+    rng = np.random.default_rng(7)
+    ing = StreamingIngestor(syn, seed=3)
+    serving = ServingConfig(kinds=("sum", "count"))
+    eng = PassEngine(ing, serving=serving)
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(8,)))
+    qs = random_queries(c, 6, seed=5, min_frac=0.2, max_frac=0.6)
+    want_old = _fresh_answer(ing, qs, serving)   # epoch-0 oracle, eager
+    f_old = co.submit("a", qs)
+    co.tick()
+    ing.ingest(rng.uniform(0, 100, 4096), rng.lognormal(0, 1, 4096))
+    f_new = co.submit("a", qs)
+    co.tick()
+    _assert_results_equal(f_old.result(0), want_old)
+    _assert_results_equal(f_new.result(0), _fresh_answer(ing, qs, serving))
+    assert co.stats()["epoch_drains"] == 1
+    assert not np.array_equal(
+        np.asarray(f_old.result(0)["count"].estimate),
+        np.asarray(f_new.result(0)["count"].estimate))
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_property_tenant_interleavings_bit_identical(data):
+    """Hypothesis property: any interleaving of tenant requests across
+    any tick schedule (including a mid-stream ingest) demuxes
+    bit-identically to per-tenant answers against the matching epoch."""
+    from repro.streaming import StreamingIngestor
+    c, a, syn = _make(seed=11, k=8, n=6000)
+    serving = ServingConfig(kinds=("sum", "avg"))
+    n_req = data.draw(st.integers(2, 6), label="n_req")
+    sizes = [data.draw(st.integers(1, 9), label=f"q{i}")
+             for i in range(n_req)]
+    tenants = [data.draw(st.sampled_from(["a", "b", "c"]), label=f"t{i}")
+               for i in range(n_req)]
+    bump_at = data.draw(st.integers(0, n_req), label="bump_at")
+    order = data.draw(st.permutations(list(range(n_req))), label="order")
+
+    ing = StreamingIngestor(syn, seed=5)
+    eng = PassEngine(ing, serving=serving)
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(4, 16)))
+    futs, want = [], []
+    for step, j in enumerate(order):
+        if step == bump_at:
+            co.tick()                           # dispatch pre-bump queue
+            rng = np.random.default_rng(step)
+            ing.ingest(rng.uniform(0, 100, 512),
+                       rng.lognormal(0, 1, 512))
+        qs = random_queries(c, sizes[j], seed=100 + j)
+        futs.append(co.submit(tenants[j], qs))
+        want.append(_fresh_answer(ing, qs, serving))   # eager: same epoch
+    co.tick()
+    for fut, w in zip(futs, want):
+        _assert_results_equal(fut.result(timeout=0), w)
+
+
+# --------------------------------------------------------------------------
+# Admission control and accounting
+# --------------------------------------------------------------------------
+
+def test_admission_per_tenant_outstanding_sheds_typed():
+    c, a, syn = _make(k=4, n=3000)
+    co = RequestCoalescer(PassEngine(syn),
+                          CoalescerConfig(max_outstanding=2))
+    qs = random_queries(c, 4, seed=1)
+    co.submit("x", qs)
+    co.submit("x", qs)
+    with pytest.raises(Overloaded) as ei:
+        co.submit("x", qs)
+    assert ei.value.reason == "tenant_outstanding"
+    assert ei.value.tenant == "x" and ei.value.limit == 2
+    co.submit("y", qs)                         # other tenants unaffected
+    co.tick()                                  # queue drains ...
+    co.submit("x", qs)                         # ... budget frees up
+    co.tick()
+    s = co.stats()
+    assert s["shed"] == 1 and s["served"] == 4
+    assert s["tenants"]["x"]["shed"] == 1
+    assert s["tenants"]["x"]["requests"] == 3  # shed submissions don't count
+
+
+def test_admission_global_queue_depth_sheds_typed():
+    c, a, syn = _make(k=4, n=3000)
+    co = RequestCoalescer(PassEngine(syn),
+                          CoalescerConfig(max_queue_depth=3,
+                                          max_outstanding=10))
+    qs = random_queries(c, 2, seed=1)
+    for t in ("a", "b", "c"):
+        co.submit(t, qs)
+    with pytest.raises(Overloaded) as ei:
+        co.submit("d", qs)
+    assert ei.value.reason == "queue_depth" and ei.value.limit == 3
+    co.tick()
+    co.submit("d", qs)                         # depth freed by the tick
+    co.tick()
+
+
+def test_accounting_through_engine_stats():
+    """Per-tenant accounting (queries served, dispatch amortization,
+    wait percentiles) is reachable from engine.stats()."""
+    c, a, syn = _make(k=4, n=3000)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(16,)))
+    for i in range(4):
+        co.submit("alice", random_queries(c, 3, seed=i))
+    co.submit("bob", random_queries(c, 4, seed=9))
+    co.tick()
+    s = eng.stats()["coalescer"]
+    assert s["served"] == 5
+    assert s["dispatches"] == 1                # all five shared one dispatch
+    assert s["coalesced_rows"] == 16 and s["padded_rows"] == 0
+    alice = s["tenants"]["alice"]
+    assert alice["queries"] == 12 and alice["requests"] == 4
+    assert alice["wait_p95_ms"] >= alice["wait_p50_ms"] >= 0.0
+    assert s["tenants"]["bob"]["queries"] == 4
+    # buckets reuse ONE prepared executable: a second wave of the same
+    # shapes is all plan-cache hits
+    misses0 = eng.stats()["misses"]
+    for i in range(3):
+        co.submit("alice", random_queries(c, 5, seed=20 + i))
+    co.tick()
+    assert eng.stats()["misses"] == misses0
+
+
+def test_coalescer_config_validation():
+    with pytest.raises(ValueError, match="tick_ms"):
+        CoalescerConfig(tick_ms=0).validate()
+    with pytest.raises(ValueError, match="non-empty"):
+        CoalescerConfig(shape_classes=()).validate()
+    with pytest.raises(ValueError, match="ascending"):
+        CoalescerConfig(shape_classes=(32, 8)).validate()
+    with pytest.raises(ValueError, match="positive"):
+        CoalescerConfig(shape_classes=(0, 8)).validate()
+    with pytest.raises(ValueError, match="max_outstanding"):
+        CoalescerConfig(max_outstanding=0).validate()
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        CoalescerConfig(max_queue_depth=0).validate()
+    assert CoalescerConfig(shape_classes=(4, 8)).padded_size(3) == 4
+    assert CoalescerConfig(shape_classes=(4, 8)).padded_size(8) == 8
+    assert CoalescerConfig(shape_classes=(4, 8)).padded_size(17) == 24
+    c, a, syn = _make(k=4, n=3000)
+    co = RequestCoalescer(PassEngine(syn))
+    with pytest.raises(ValueError, match="non-empty"):
+        co.submit("t", QueryBatch(jnp.zeros((0, 1)), jnp.zeros((0, 1))))
+
+
+# --------------------------------------------------------------------------
+# Event-loop driver
+# --------------------------------------------------------------------------
+
+def test_tick_driver_background_serving_and_flush_on_stop():
+    c, a, syn = _make(k=8, n=6000)
+    serving = ServingConfig(kinds=("sum", "count"))
+    eng = PassEngine(syn, serving=serving)
+    co = RequestCoalescer(eng, CoalescerConfig(tick_ms=1.0,
+                                               shape_classes=(8, 32)))
+    batches = {f"t{i}": random_queries(c, 3 + i, seed=i) for i in range(6)}
+    want = {t: _fresh_answer(syn, qs, serving)
+            for t, qs in batches.items()}
+    with TickDriver(co) as driver:
+        assert driver.running
+        with cf.ThreadPoolExecutor(6) as ex:
+            got = {t: f for t, f in
+                   ((t, ex.submit(co.answer, t, qs, timeout=60))
+                    for t, qs in batches.items())}
+            for t in batches:
+                _assert_results_equal(got[t].result(), want[t])
+    assert not driver.running
+    assert co.queue_depth == 0                 # stop() flushed
+    assert co.stats()["served"] == 6
+
+
+def test_tick_driver_double_start_raises_and_stop_idempotent():
+    c, a, syn = _make(k=4, n=3000)
+    co = RequestCoalescer(PassEngine(syn))
+    driver = TickDriver(co).start()
+    with pytest.raises(RuntimeError, match="already started"):
+        driver.start()
+    driver.stop()
+    driver.stop()                              # no-op
+    driver.start().stop()                      # restartable
+
+
+# --------------------------------------------------------------------------
+# Soak: concurrent tenants against a sharded-ingest engine (the CI
+# multi-device leg forces 4 host devices for this)
+# --------------------------------------------------------------------------
+
+def test_soak_concurrent_tenants_sharded_ingest_engine():
+    """Concurrent tenant threads + a concurrent ingest writer against a
+    PassEngine.from_sharded source under the background driver: every
+    request either serves or sheds typed, counters reconcile, and the
+    plan-cache executable set stays bounded by the shape-class ladder."""
+    rng = np.random.default_rng(0)
+    n = 6000
+    c = np.sort(rng.uniform(0, 100, n))
+    a = rng.lognormal(0, 1, n)
+    serving = ServingConfig(kinds=("sum", "count"))
+    eng = PassEngine.from_sharded(c, a, k=8, sample_budget=8 * 32,
+                                  serving=serving, seed=0)
+    co = RequestCoalescer(eng, CoalescerConfig(
+        tick_ms=1.0, shape_classes=(8, 32), max_outstanding=64,
+        max_queue_depth=512))
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        wrng = np.random.default_rng(99)
+        while not stop.is_set():
+            try:
+                eng.source.ingest(wrng.uniform(0, 100, 256),
+                                  wrng.lognormal(0, 1, 256))
+            except Exception as exc:           # pragma: no cover
+                errors.append(exc)
+                return
+            stop.wait(0.003)
+
+    def tenant(tid):
+        trng = np.random.default_rng(tid)
+        for i in range(8):
+            qs = random_queries(c, int(trng.integers(1, 12)),
+                                seed=tid * 100 + i)
+            try:
+                res = co.answer(f"tenant-{tid}", qs, timeout=60)
+            except Overloaded:
+                continue                       # typed shed is fine
+            except Exception as exc:           # pragma: no cover
+                errors.append(exc)
+                return
+            for kind in serving.kinds:
+                est = np.asarray(res[kind].estimate)
+                if est.shape != (qs.lo.shape[0],) or not np.isfinite(
+                        est).all():            # pragma: no cover
+                    errors.append(AssertionError((kind, est)))
+                    return
+
+    with TickDriver(co):
+        wt = threading.Thread(target=writer, daemon=True)
+        wt.start()
+        threads = [threading.Thread(target=tenant, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        stop.set()
+        wt.join(timeout=30)
+    assert not errors, errors[:3]
+    s = co.stats()
+    assert s["served"] + s["shed"] == s["submitted"]
+    assert s["served"] >= 1 and s["queue_depth"] == 0
+    assert sum(t["queries"] for t in s["tenants"].values()) \
+        == s["coalesced_rows"]
+    # bounded executable set: at most one plan-cache entry per ladder
+    # class (+ rounded-up oversize multiples) for the single config
+    assert eng.stats()["entries"] <= 4
