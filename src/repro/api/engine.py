@@ -84,6 +84,42 @@ def _validate_request(serving: ServingConfig, ci: CIConfig | None) -> None:
             "calibrated intervals support avg_mode='ratio' only")
 
 
+def _validate_join_request(serving: ServingConfig, ci: CIConfig | None):
+    from ..joins import JOIN_KINDS
+    serving.validate()
+    for kind in serving.kinds:
+        if kind not in JOIN_KINDS:
+            raise ValueError(
+                f"join serving supports kinds {JOIN_KINDS}, got {kind!r} "
+                "(min/max have no unbiased universe-sample estimator)")
+    if ci is not None:
+        ci.validate()
+        if ci.method != "clt":
+            raise ValueError(
+                "join serving supports ci method 'clt' only "
+                f"(got {ci.method!r}); the bootstrap resamples reservoir "
+                "rows, not key universes")
+
+
+def _join_dispatch_entry(serving: ServingConfig, ci: CIConfig | None):
+    """(jit entry, static kwargs, args builder) for one join serving
+    config — the join analogue of :func:`_dispatch_entry`. One compiled
+    entry covers both the plain (``ci=None``, lam-scaled CLT width) and
+    calibrated-interval paths; ``plan_masks`` is accepted and ignored so
+    the builder signature matches the prepared-query plumbing."""
+    from ..joins.executor import _join_answer_jit
+    backend_name = get_backend(serving.backend).name
+    lam = serving.lam
+    statics = dict(
+        kinds=serving.kinds,
+        level=None if ci is None else float(ci.level),
+        small_n_threshold=12 if ci is None else int(ci.small_n_threshold),
+        delta_budget="stratum" if ci is None else ci.delta_budget,
+        backend_name=backend_name)
+    return (_join_answer_jit, statics,
+            lambda syn, queries, plan_masks: (syn, queries, lam))
+
+
 def _dispatch_entry(serving: ServingConfig, ci: CIConfig | None):
     """(jit entry, static kwargs, args builder) for one serving config.
 
@@ -151,11 +187,23 @@ class PreparedQuery:
         self.has_plan = bool(has_plan)
         self._epoch = engine.epoch
         self._generation = engine._generation
-        self._syn = engine.resolve()
-        self._fn, self._statics, self._build = _dispatch_entry(serving, ci)
+        self._syn = self._resolve_source()
+        self._fn, self._statics, self._build = self._make_entry()
         self._aot = None
         self._aot_failed = False
         self._calls = 0
+
+    # Subclass hooks: which source view is pinned, which compiled entry
+    # serves it, and where differently-shaped batches fall back to.
+    def _make_entry(self):
+        return _dispatch_entry(self.serving, self.ci)
+
+    def _resolve_source(self):
+        return self._engine.resolve()
+
+    def _fallback_answer(self, queries) -> dict[str, QueryResult]:
+        return self._engine.answer(queries, kinds=self.serving.kinds,
+                                   ci=self.ci, serving=self.serving)
 
     def _refresh(self) -> None:
         """Re-pin the serving synopsis after a source epoch bump or a
@@ -167,7 +215,7 @@ class PreparedQuery:
         old_syn = self._syn
         self._epoch = eng.epoch
         self._generation = eng._generation
-        self._syn = eng.resolve()
+        self._syn = self._resolve_source()
         eng._stats["invalidations"] += 1
         # The executable only bakes shapes; drop it iff they changed
         # (e.g. a re-optimization rebuilt the synopsis at a different k).
@@ -204,8 +252,7 @@ class PreparedQuery:
                 return self._engine._lookup(
                     tuple(queries.lo.shape), self.serving, self.ci,
                     has_plan=True)(queries, plan_masks)
-            return self._engine.answer(queries, kinds=self.serving.kinds,
-                                       ci=self.ci, serving=self.serving)
+            return self._fallback_answer(queries)
         self._refresh()
         _executor.count_artifact_pass(self.serving.kinds)
         if (self.ci is not None and self.ci.method == "bootstrap"
@@ -225,6 +272,25 @@ class PreparedQuery:
                     # answers; the handle loses only its fast path.
                     pass
         return self._fn(*args, **self._statics)
+
+
+class PreparedJoinQuery(PreparedQuery):
+    """A pinned fk-join serving entry (DESIGN.md §13): same lifecycle as
+    :class:`PreparedQuery` (plan cache slot, epoch-driven re-pin, AOT on
+    the second concrete call), but pinning the resolved
+    :class:`~repro.joins.JoinSynopsis` and the compiled join entry. The
+    pinned batch shape is the full concatenated ``(Q, d_fact + d_dim)``
+    join-rectangle shape."""
+
+    def _make_entry(self):
+        return _join_dispatch_entry(self.serving, self.ci)
+
+    def _resolve_source(self):
+        return self._engine.resolve_join()
+
+    def _fallback_answer(self, queries) -> dict[str, QueryResult]:
+        return self._engine.answer_join(queries, kinds=self.serving.kinds,
+                                        ci=self.ci, serving=self.serving)
 
 
 class PassEngine:
@@ -325,17 +391,18 @@ class PassEngine:
     # counts one invalidation) the next time that plan is actually used —
     # O(1) per ingest instead of O(cache) per bump.
 
-    def _lookup(self, shape, serving, ci,
-                has_plan: bool = False) -> PreparedQuery:
+    def _lookup(self, shape, serving, ci, has_plan: bool = False,
+                join: bool = False) -> PreparedQuery:
         key = (tuple(shape), serving.cache_key(),
-               ci.cache_key() if ci is not None else None, has_plan)
+               ci.cache_key() if ci is not None else None, has_plan, join)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
             self._stats["hits"] += 1
             return hit
         self._stats["misses"] += 1
-        prepared = PreparedQuery(self, serving, ci, shape, has_plan=has_plan)
+        cls = PreparedJoinQuery if join else PreparedQuery
+        prepared = cls(self, serving, ci, shape, has_plan=has_plan)
         self._cache[key] = prepared
         if len(self._cache) > self._plan_cache_size:
             self._cache.popitem(last=False)
@@ -397,5 +464,119 @@ class PassEngine:
                 queries, _executor.plan_to_masks(plan))
         return self._lookup(shape, sv, cfg)(queries)
 
+    # -- fk-join serving (DESIGN.md §13) ------------------------------------
+    def resolve_join(self):
+        """Current join synopsis; raises TypeError when the engine source
+        has no join augmentation (``build_join_synopsis`` /
+        ``JoinStreamingIngestor``)."""
+        from ..joins import resolve_join_synopsis
+        return resolve_join_synopsis(self._source)
 
-__all__ = ["PassEngine", "PreparedQuery"]
+    def _effective_join(self, kinds, ci, serving):
+        sv = serving if serving is not None else self.serving
+        if kinds is not None:
+            sv = dataclasses.replace(sv, kinds=kinds)
+        else:
+            from ..joins import JOIN_KINDS
+            # Inherited kinds keep only the join-answerable ones, so an
+            # engine configured for 5-kind single-table serving still
+            # answers joins without per-call kinds= plumbing.
+            sv = dataclasses.replace(
+                sv, kinds=tuple(k for k in sv.kinds if k in JOIN_KINDS)
+                or ("sum",))
+        cfg = self.ci if ci is _UNSET else as_ci_config(ci)
+        _validate_join_request(sv, cfg)
+        return sv, cfg
+
+    def _as_join_batch(self, queries, dim_queries=None) -> QueryBatch:
+        """Normalize to the concatenated ``[fact ‖ dim attrs]`` rectangle:
+        accepts (fact, dim) batch pairs, a full-width batch, or a
+        fact-width batch (dim side unconstrained)."""
+        import jax.numpy as jnp
+        from ..joins import join_queries
+        from ..kernels.ref import NEG_BIG, POS_BIG
+        jsyn = self.resolve_join()
+        d_f, d_d = jsyn.d_fact, jsyn.d_dim
+        if dim_queries is not None:
+            return join_queries(queries, dim_queries)
+        if isinstance(queries, tuple):
+            return join_queries(*queries)
+        width = queries.lo.shape[1]
+        if width == d_f + d_d:
+            return queries
+        if width == d_f:
+            q = queries.lo.shape[0]
+            return QueryBatch(
+                jnp.concatenate(
+                    [jnp.asarray(queries.lo, jnp.float32),
+                     jnp.full((q, d_d), NEG_BIG, jnp.float32)], axis=1),
+                jnp.concatenate(
+                    [jnp.asarray(queries.hi, jnp.float32),
+                     jnp.full((q, d_d), POS_BIG, jnp.float32)], axis=1))
+        raise ValueError(
+            f"join query width {width} matches neither the fact side "
+            f"({d_f}) nor the concatenated layout ({d_f + d_d})")
+
+    def _check_join_binding(self, dim_table, on) -> None:
+        jsyn = self.resolve_join()
+        if on is not None and on != jsyn.key_name:
+            raise ValueError(
+                f"engine's join synopsis is keyed on {jsyn.key_name!r}, "
+                f"got on={on!r}; universe membership is drawn per key at "
+                "build time, so the join key cannot change at query time")
+        if dim_table is not None and dim_table is not jsyn.dim:
+            d = jsyn.dim
+            if (dim_table.num_keys != d.num_keys
+                    or dim_table.num_partitions != d.num_partitions
+                    or dim_table.d_attr != d.d_attr):
+                raise ValueError(
+                    "dim_table differs from the one this join synopsis "
+                    "was built against; rebuild with build_join_synopsis "
+                    "to join a different dimension relation")
+
+    def prepare_join(self, queries_or_shape, *, kinds=None, ci=_UNSET,
+                     serving: ServingConfig | None = None
+                     ) -> PreparedJoinQuery:
+        """Pin a join serving entry (the join analogue of ``prepare``).
+
+        Accepts a :class:`QueryBatch` in any ``answer_join`` layout, a
+        (fact, dim) batch pair, or a full concatenated ``(Q, d_fact +
+        d_dim)`` shape tuple.
+        """
+        if hasattr(queries_or_shape, "lo") or isinstance(
+                queries_or_shape, tuple) and hasattr(
+                    queries_or_shape[0] if queries_or_shape else None, "lo"):
+            shape = tuple(self._as_join_batch(queries_or_shape).lo.shape)
+        else:
+            shape = tuple(queries_or_shape)
+        if len(shape) != 2:
+            raise ValueError(f"expected a (Q, d) batch shape, got {shape}")
+        sv, cfg = self._effective_join(kinds, ci, serving)
+        return self._lookup(shape, sv, cfg, join=True)
+
+    def answer_join(self, fact_queries, dim_queries=None, *, dim_table=None,
+                    on: str | None = None, kinds=None, ci=_UNSET,
+                    serving: ServingConfig | None = None
+                    ) -> dict[str, QueryResult]:
+        """Answer fk-join aggregate queries against the engine's join
+        synopsis; returns ``{kind: QueryResult}`` like ``answer``.
+
+        ``fact_queries`` is a :class:`QueryBatch` over fact coordinates
+        (the dim side is then unconstrained), a full concatenated
+        ``[fact ‖ dim attrs]`` batch, or a (fact, dim) pair —
+        equivalently pass ``dim_queries=`` for the dimension-side
+        rectangles. ``dim_table=``/``on=`` optionally assert which
+        dimension relation/key the query intends (the synopsis is bound
+        to one at build time). Cells covered on both sides are answered
+        exactly from pre-joined aggregates; overlapping cells by
+        Horvitz-Thompson over the correlated key-universe samples, with
+        CLT/Bernstein intervals composed through ``uncertainty``.
+        """
+        self._check_join_binding(dim_table, on)
+        queries = self._as_join_batch(fact_queries, dim_queries)
+        sv, cfg = self._effective_join(kinds, ci, serving)
+        return self._lookup(tuple(queries.lo.shape), sv, cfg, join=True)(
+            queries)
+
+
+__all__ = ["PassEngine", "PreparedQuery", "PreparedJoinQuery"]

@@ -93,6 +93,32 @@ def ground_truth(c, a, queries: QueryBatch, kind: str = "sum",
     raise ValueError(kind)
 
 
+def ground_truth_join(c, a, keys, dim_keys, dim_attrs, queries: QueryBatch,
+                      kind: str = "sum", chunk: int = 262144) -> np.ndarray:
+    """Exact fk-join aggregates by materializing the join on the host.
+
+    Fact rows (c, a, keys) inner-join dimension rows (dim_keys,
+    dim_attrs) on the key; each joined row's coordinate vector is
+    ``[fact coords ‖ dim attrs]``, matching the concatenated rectangle
+    layout of ``repro.joins``. Scoring oracle for the join test suite and
+    benches — O(n) host f64, never used in serving.
+    """
+    c = np.asarray(c, dtype=np.float64)
+    c2 = c[:, None] if c.ndim == 1 else c
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    keys = np.asarray(keys).reshape(-1).astype(np.int64)
+    dim_keys = np.asarray(dim_keys).reshape(-1).astype(np.int64)
+    dim_attrs = np.asarray(dim_attrs, dtype=np.float64)
+    if dim_attrs.ndim == 1:
+        dim_attrs = dim_attrs[:, None]
+    order = np.argsort(dim_keys, kind="stable")
+    dk, da = dim_keys[order], dim_attrs[order]
+    idx = np.clip(np.searchsorted(dk, keys), 0, dk.size - 1)
+    found = dk[idx] == keys
+    joined_c = np.concatenate([c2[found], da[idx[found]]], axis=1)
+    return ground_truth(joined_c, a[found], queries, kind, chunk=chunk)
+
+
 # --------------------------------------------------------------------------
 # Workload generators
 # --------------------------------------------------------------------------
@@ -160,5 +186,5 @@ def ci_ratio(res: QueryResult, truth: np.ndarray) -> np.ndarray:
     return np.asarray(res.ci_half, dtype=np.float64) / np.maximum(np.abs(t), 1e-12)
 
 
-__all__ = ["answer", "ground_truth", "random_queries", "challenging_queries",
-           "relative_error", "ci_ratio"]
+__all__ = ["answer", "ground_truth", "ground_truth_join", "random_queries",
+           "challenging_queries", "relative_error", "ci_ratio"]

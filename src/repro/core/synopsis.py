@@ -37,25 +37,22 @@ class BuildReport:
     max_variance: float
 
 
-def build_synopsis(c, a, *, k: int = 64, sample_budget: int | None = None,
-                   sample_rate: float | None = 0.005, kind: str = "sum",
-                   method: str = "adp", opt_samples: int = 4096,
-                   delta_frac: float = 0.01, seed: int = 0,
-                   allocation: str = "equal",
-                   ) -> tuple[Synopsis, BuildReport]:
-    """Construct a PASS synopsis over rows (c, a).
+def partition_assign(c2, a, *, k: int, method: str = "adp",
+                     kind: str = "sum", opt_samples: int = 4096,
+                     delta_frac: float = 0.01, seed: int = 0
+                     ) -> tuple[np.ndarray, int, float]:
+    """Row -> leaf assignment: the partitioning stage of the build.
 
-    method: 'adp' (paper **), 'eq' (equal depth), 'kd' (multi-D KD-PASS).
-    allocation: 'equal' (paper §5.1.3: K/B per stratum) or 'proportional'.
+    Shared by :func:`build_synopsis` and the join-synopsis builder
+    (``repro.joins.build_join_synopsis``), which needs the assignment
+    itself to pre-join per-(stratum x dim-partition) cell aggregates.
+    Returns (assign (n,) int32, realized k, max partition variance).
     """
-    t0 = time.perf_counter()
-    c = np.asarray(c, dtype=np.float64)
-    c2 = c[:, None] if c.ndim == 1 else c
+    c2 = np.asarray(c2, dtype=np.float64)
+    if c2.ndim == 1:
+        c2 = c2[:, None]
     a = np.asarray(a, dtype=np.float64).reshape(-1)
     n, d = c2.shape
-    if sample_budget is None:
-        sample_budget = int(np.ceil((sample_rate or 0.005) * n))
-
     vmax = 0.0
     if d == 1 and method in ("adp", "eq"):
         if method == "adp":
@@ -75,6 +72,31 @@ def build_synopsis(c, a, *, k: int = 64, sample_budget: int | None = None,
             c2, a, k=k, m=opt_samples, kind=kind, delta_frac=delta_frac,
             seed=seed)
         k = int(assign.max()) + 1 if assign.size else k
+    return np.asarray(assign, dtype=np.int32), k, float(vmax)
+
+
+def build_synopsis(c, a, *, k: int = 64, sample_budget: int | None = None,
+                   sample_rate: float | None = 0.005, kind: str = "sum",
+                   method: str = "adp", opt_samples: int = 4096,
+                   delta_frac: float = 0.01, seed: int = 0,
+                   allocation: str = "equal",
+                   ) -> tuple[Synopsis, BuildReport]:
+    """Construct a PASS synopsis over rows (c, a).
+
+    method: 'adp' (paper **), 'eq' (equal depth), 'kd' (multi-D KD-PASS).
+    allocation: 'equal' (paper §5.1.3: K/B per stratum) or 'proportional'.
+    """
+    t0 = time.perf_counter()
+    c = np.asarray(c, dtype=np.float64)
+    c2 = c[:, None] if c.ndim == 1 else c
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    n, d = c2.shape
+    if sample_budget is None:
+        sample_budget = int(np.ceil((sample_rate or 0.005) * n))
+
+    assign, k, vmax = partition_assign(
+        c2, a, k=k, method=method, kind=kind, opt_samples=opt_samples,
+        delta_frac=delta_frac, seed=seed)
     t1 = time.perf_counter()
 
     syn, info = synopsis_from_assignment(
@@ -172,5 +194,5 @@ def delta_decode(syn: Synopsis) -> Synopsis:
     return dataclasses.replace(syn, sample_a=vals)
 
 
-__all__ = ["build_synopsis", "synopsis_from_assignment", "BuildReport",
-           "delta_encode", "delta_decode"]
+__all__ = ["build_synopsis", "synopsis_from_assignment", "partition_assign",
+           "BuildReport", "delta_encode", "delta_decode"]

@@ -200,5 +200,55 @@ def clear_relation_cache():
     _REL_CACHE.clear()
 
 
+# --------------------------------------------------------------------------
+# Join-aware planning: (fact stratum x dim partition) cell classification
+# --------------------------------------------------------------------------
+
+
+def classify_join_cells(jsyn, queries: QueryBatch,
+                        backend_name: str | None = None):
+    """Classify every (fact-stratum, dim-partition) cell against each join
+    query (DESIGN.md §13). Traceable — runs inside the jitted join entry.
+
+    A join query is one rectangle over ``[fact coords ‖ dim attrs]``; its
+    fact half classifies the k leaf strata, its dim half the P dimension
+    partitions, both through the backend's ``query_eval``. Cell rules:
+
+    * exact   — both sides COVER: every row of the cell satisfies the
+      predicate, so the pre-joined ``cell_agg`` answers it exactly;
+    * sampled — both sides overlap but not exact-covered: estimated by
+      Horvitz-Thompson over the universe sample;
+    * empty   — either side disjoint, or no rows in the cell.
+
+    Returns ``(cover, sampled, rel_f, rel_d)`` with cover/sampled of shape
+    (Q, k*P) bool (cell id = leaf * P + part) and the per-side relation
+    codes (Q, k) / (Q, P).
+    """
+    import jax.numpy as jnp
+    from ..core.types import REL_PARTIAL, REL_COVER
+    from ..kernels.registry import get_backend
+
+    be = get_backend(backend_name)
+    base, dim = jsyn.base, jsyn.dim
+    d_f = jsyn.d_fact
+    q_lo = jnp.asarray(queries.lo, jnp.float32)
+    q_hi = jnp.asarray(queries.hi, jnp.float32)
+    rel_f, _ = be.query_eval(base.leaf_lo, base.leaf_hi, base.leaf_agg,
+                             q_lo[:, :d_f], q_hi[:, :d_f])
+    rel_d, _ = be.query_eval(dim.part_lo, dim.part_hi, dim.part_agg,
+                             q_lo[:, d_f:], q_hi[:, d_f:])
+
+    q = q_lo.shape[0]
+    kp = jsyn.num_leaves * jsyn.num_partitions
+    nonempty = (jsyn.cell_agg[:, :, AGG_COUNT] > 0).reshape(1, kp)
+    cover_raw = ((rel_f == REL_COVER)[:, :, None]
+                 & (rel_d == REL_COVER)[:, None, :]).reshape(q, kp)
+    overlap = ((rel_f >= REL_PARTIAL)[:, :, None]
+               & (rel_d >= REL_PARTIAL)[:, None, :]).reshape(q, kp)
+    cover = cover_raw & nonempty
+    sampled = overlap & ~cover_raw & nonempty
+    return cover, sampled, rel_f, rel_d
+
+
 __all__ = ["QueryPlan", "plan_queries", "relation_masks",
-           "clear_relation_cache"]
+           "clear_relation_cache", "classify_join_cells"]

@@ -1,0 +1,117 @@
+"""Join answer assembly: derive SUM/COUNT/AVG estimates, deterministic
+hard bounds and CLT variances from the shared join artifacts
+(DESIGN.md §13).
+
+Estimator semantics (universe-sampling Horvitz-Thompson):
+
+* exact part — covered (fact-stratum x dim-partition) cells are answered
+  from the pre-joined ``cell_agg`` with zero variance;
+* sampled part — each key *group* g stored in the universe contributes
+  ``t_g = T_g / p`` (all rows of a sampled key are kept, so the stored
+  predicate-weighted total IS ``T_g`` and HT scaling is exact); per-cell
+  estimate ``sum_g t_g`` is unbiased with
+  ``Var_hat = (1 - p) * sum_g t_g^2`` (unbiased for the true Bernoulli-
+  inclusion variance ``(1-p)/p * sum_g T_g^2``), and the SUM/COUNT
+  estimator covariance ``(1 - p) * sum_g t^S_g t^C_g`` feeds the AVG
+  delta-method interval, mirroring ``engine.assemble.avg_ratio_terms``;
+* hard bounds — per-cell deterministic ranges from the exact cell
+  aggregates (sign-generalized §2.3, at cell granularity), so interval
+  clipping and the zero-width exact-cover guarantee carry over.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.types import (QueryResult, AGG_SUM, AGG_COUNT, AGG_MIN,
+                          AGG_MAX)
+
+_BIG = jnp.float32(3.4e38)
+
+
+def join_cell_bounds(jsyn, kind: str):
+    """(p_lb, p_ub) — each (k*P,) f32 deterministic bounds on one cell's
+    contribution to a query it overlaps (any subset of its rows may pass
+    the predicate). Empty cells bound to [0, 0].
+    """
+    kp = jsyn.num_leaves * jsyn.num_partitions
+    cell = jsyn.cell_agg.reshape(kp, -1)
+    cnt = cell[:, AGG_COUNT]
+    if kind == "count":
+        return jnp.zeros_like(cnt), cnt
+    if kind != "sum":
+        raise ValueError(f"no join cell bounds for kind: {kind}")
+    s = cell[:, AGG_SUM]
+    # where-mask, not multiply: empty cells carry +/-inf extremes
+    mn = jnp.where(cnt > 0, cell[:, AGG_MIN], 0.0)
+    mx = jnp.where(cnt > 0, cell[:, AGG_MAX], 0.0)
+    p_ub = jnp.minimum(cnt * jnp.maximum(mx, 0.0),
+                       s - cnt * jnp.minimum(mn, 0.0))
+    p_lb = jnp.maximum(cnt * jnp.minimum(mn, 0.0),
+                       s - cnt * jnp.maximum(mx, 0.0))
+    return p_lb, p_ub
+
+
+def join_sum_count(jart):
+    """Shared (S, C) estimates: exact covered part + HT sampled part.
+    C is clamped to >= 1 for ratio use; the raw count estimate keeps its
+    own epilogue below."""
+    sampf = jart.sampled.astype(jnp.float32)
+    s = jart.exact3[:, AGG_SUM] + jnp.sum(sampf * jart.s_cell, axis=1)
+    c = jart.exact3[:, AGG_COUNT] + jnp.sum(sampf * jart.c_cell, axis=1)
+    return s, jnp.maximum(c, 1.0)
+
+
+def assemble_join(jsyn, jart, kind: str, lam) -> QueryResult:
+    """One kind's QueryResult from shared join artifacts. ``lam`` scales
+    the plain (uncalibrated) CLT half-width; the calibrated path replaces
+    it via ``uncertainty.compose_join_interval``."""
+    sampf = jart.sampled.astype(jnp.float32)
+    touched = jart.touched
+
+    if kind in ("sum", "count"):
+        if kind == "sum":
+            exact = jart.exact3[:, AGG_SUM]
+            est = exact + jnp.sum(sampf * jart.s_cell, axis=1)
+            var = jnp.sum(sampf * jart.v_s, axis=1)
+        else:
+            exact = jart.exact3[:, AGG_COUNT]
+            est = exact + jnp.sum(sampf * jart.c_cell, axis=1)
+            var = jnp.sum(sampf * jart.v_c, axis=1)
+        ci = lam * jnp.sqrt(var)
+        p_lb, p_ub = join_cell_bounds(jsyn, kind)
+        lower = exact + jnp.sum(sampf * p_lb[None], axis=1)
+        upper = exact + jnp.sum(sampf * p_ub[None], axis=1)
+        return QueryResult(est, ci, lower, upper, touched)
+
+    if kind == "avg":
+        s, c = join_sum_count(jart)
+        est = s / c
+        vs = jnp.sum(sampf * jart.v_s, axis=1)
+        vc = jnp.sum(sampf * jart.v_c, axis=1)
+        csc = jnp.sum(sampf * jart.cov_sc, axis=1)
+        var_ratio = jnp.maximum(vs - 2 * est * csc + est * est * vc, 0.0) \
+            / (c * c)
+        ci = lam * jnp.sqrt(var_ratio)
+        # Hard bounds: covered-cell exact average vs sampled-cell extremes,
+        # the assembler's has_cover/pmax/pmin logic at cell granularity.
+        kp = jsyn.num_leaves * jsyn.num_partitions
+        cell = jsyn.cell_agg.reshape(kp, -1)
+        exact_c = jart.exact3[:, AGG_COUNT]
+        has_cover = exact_c > 0
+        avg_cover = jart.exact3[:, AGG_SUM] / jnp.maximum(exact_c, 1.0)
+        p_any = jnp.any(jart.sampled, axis=1)
+        pmax = jnp.max(jnp.where(jart.sampled, cell[:, AGG_MAX][None],
+                                 -_BIG), axis=1)
+        pmin = jnp.min(jnp.where(jart.sampled, cell[:, AGG_MIN][None],
+                                 _BIG), axis=1)
+        upper = jnp.where(has_cover & p_any, jnp.maximum(avg_cover, pmax),
+                          jnp.where(has_cover, avg_cover, pmax))
+        lower = jnp.where(has_cover & p_any, jnp.minimum(avg_cover, pmin),
+                          jnp.where(has_cover, avg_cover, pmin))
+        return QueryResult(est, ci, lower, upper, touched)
+
+    raise ValueError(f"unsupported join kind: {kind} "
+                     "(join serving supports sum/count/avg)")
+
+
+__all__ = ["assemble_join", "join_cell_bounds", "join_sum_count"]

@@ -1,0 +1,134 @@
+"""Dimension-table synopsis: partitioned pk-sorted lookup side of a
+fk-join (DESIGN.md §13).
+
+A :class:`DimTable` holds the dimension relation in join-serving form:
+
+* the primary-key column sorted ascending (device ``searchsorted`` gives
+  O(log Dn) fk -> row lookup inside jitted ingest/build paths),
+* the dimension attributes in the same order (these become extra
+  predicate coordinates of a join query — a join predicate is a single
+  higher-dimensional rectangle over ``[fact coords ‖ dim attrs]``),
+* an equal-depth partitioning of the keys by the first attribute, with
+  exact per-partition data bounding boxes and aggregates — the dim-side
+  analogue of the fact synopsis' leaf strata. A (fact-stratum x
+  dim-partition) cell is answered exactly iff BOTH sides classify as
+  COVER against their half of the query rectangle.
+
+Boxes are exact bounding boxes in *all* attribute dimensions (the
+cover/partial/none classification stays exact for multi-attribute
+predicates; only pruning selectivity is driven by the first attribute).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import dp as _dp
+from ..core import partition_tree as _pt
+from ..core.types import NUM_AGGS
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["key_sorted", "attr_sorted", "part_sorted",
+                      "part_lo", "part_hi", "part_agg"],
+         meta_fields=["num_partitions", "d_attr", "num_keys"])
+@dataclasses.dataclass
+class DimTable:
+    """Join-ready dimension table (pk-sorted, partitioned).
+
+    ``key_sorted`` (Dn,) int32 ascending unique primary keys;
+    ``attr_sorted`` (Dn, d_attr) f32 attributes in key order;
+    ``part_sorted`` (Dn,) int32 partition id per key;
+    ``part_lo``/``part_hi`` (P, d_attr) exact partition bounding boxes;
+    ``part_agg`` (P, NUM_AGGS) per-partition aggregates of the first
+    attribute (COUNT is the per-partition key count; consumed by the
+    cell classifier's ``query_eval`` call, same layout as ``leaf_agg``).
+    """
+    key_sorted: jax.Array
+    attr_sorted: jax.Array
+    part_sorted: jax.Array
+    part_lo: jax.Array
+    part_hi: jax.Array
+    part_agg: jax.Array
+    num_partitions: int
+    d_attr: int
+    num_keys: int
+
+
+def build_dim_table(keys, attrs=None, *, num_partitions: int = 16
+                    ) -> DimTable:
+    """Host-side DimTable build from a dimension relation.
+
+    ``keys``: (Dn,) integer primary keys, must be unique (fk semantics).
+    ``attrs``: (Dn,) or (Dn, d_attr) attribute columns; ``None`` uses the
+    key itself as the single attribute (pure key-range dim predicates).
+    Partitioning is equal-depth on the first attribute.
+    """
+    keys = np.asarray(keys)
+    if keys.ndim != 1:
+        raise ValueError(f"dim keys must be 1-D, got shape {keys.shape}")
+    if not np.issubdtype(keys.dtype, np.integer):
+        raise ValueError(f"dim keys must be integers, got {keys.dtype}")
+    dn = keys.shape[0]
+    if dn < 1:
+        raise ValueError("dim table must be non-empty")
+    if np.unique(keys).size != dn:
+        raise ValueError("dim keys must be unique (primary key of the "
+                         "fk-join dimension side)")
+    if attrs is None:
+        attrs = keys.astype(np.float64)
+    attrs = np.asarray(attrs, np.float64)
+    if attrs.ndim == 1:
+        attrs = attrs[:, None]
+    if attrs.shape[0] != dn:
+        raise ValueError(
+            f"attrs rows {attrs.shape[0]} != keys rows {dn}")
+
+    order = np.argsort(keys, kind="stable")
+    keys_s = keys[order].astype(np.int64)
+    attrs_s = attrs[order]
+
+    p = int(min(num_partitions, dn))
+    # Equal-depth cut on the first attribute (rank space), like the 'eq'
+    # fact partitioning: contiguous in attr0 so boxes barely overlap.
+    a0 = attrs_s[:, 0]
+    rorder = np.argsort(a0, kind="stable")
+    ranks = np.empty(dn, dtype=np.int64)
+    ranks[rorder] = np.arange(dn)
+    cuts = _dp.equal_depth_boundaries(dn, p)
+    part = np.searchsorted(cuts[1:-1], ranks, side="right").astype(np.int32)
+
+    agg, lo, hi = _pt.leaf_stats(attrs_s, a0, part, p)
+    return DimTable(
+        key_sorted=jnp.asarray(keys_s, jnp.int32),
+        attr_sorted=jnp.asarray(attrs_s, jnp.float32),
+        part_sorted=jnp.asarray(part, jnp.int32),
+        part_lo=jnp.asarray(lo, jnp.float32),
+        part_hi=jnp.asarray(hi, jnp.float32),
+        part_agg=jnp.asarray(agg[:, :NUM_AGGS], jnp.float32),
+        num_partitions=p, d_attr=int(attrs_s.shape[1]), num_keys=dn)
+
+
+def dim_lookup(dim: DimTable, keys):
+    """fk -> (partition id, joined attrs, found) — traceable (searchsorted
+    over the pk-sorted column), shared by the builder, the streaming
+    ingest step, and the oracle cross-checks.
+
+    Keys absent from the dimension side never join: they come back with
+    ``part == -1``, zeroed attrs, and ``found == False``.
+    """
+    kv = jnp.asarray(keys, jnp.int32).reshape(-1)
+    dn = dim.num_keys
+    idx = jnp.clip(jnp.searchsorted(dim.key_sorted, kv), 0, dn - 1
+                   ).astype(jnp.int32)
+    found = dim.key_sorted[idx] == kv
+    part = jnp.where(found, dim.part_sorted[idx], -1).astype(jnp.int32)
+    attrs = jnp.where(found[:, None], dim.attr_sorted[idx], 0.0)
+    return part, attrs, found
+
+
+__all__ = ["DimTable", "build_dim_table", "dim_lookup"]

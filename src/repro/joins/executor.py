@@ -1,0 +1,197 @@
+"""Join executor: one batched artifact pass answers a whole batch of
+fk-join queries for every requested kind (DESIGN.md §13).
+
+The pass mirrors the single-table executor's shape discipline — fixed
+array shapes, no host round-trips, one fused artifact program per batch:
+
+1. classify every (fact-stratum x dim-partition) cell per query through
+   the backend's relation kernel
+   (``engine.planner.classify_join_cells``, ``pallas|jnp|ref``);
+2. derive per-(leaf, key) *group* ids for the universe sample inside the
+   trace (sort-by-key per leaf + cumsum of boundaries — fixed shapes, no
+   ``unique``), because HT totals and variances aggregate over key
+   groups, not rows;
+3. evaluate the join rectangle over ``[fact ‖ dim attrs]`` on every
+   universe row and fold HT-weighted (``1/p``) contributions into
+   per-group totals with one masked scatter-add per moment — the group
+   count scales with the universe row count, so a segment-matmul moment
+   kernel would go quadratic here while the scatter stays O(Q x rows);
+4. compose group totals into per-cell estimates/variances/ranges with a
+   second scatter-add over the (small) cell space — groups spill to a
+   dropped column when their key has no dim partition.
+
+``_join_answer_jit`` is the compiled serving entry consumed by
+``api.PassEngine.answer_join`` through the plan cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import QueryBatch, AGG_COUNT
+from ..engine.planner import classify_join_cells
+from .assemble import assemble_join
+from .synopsis import JoinSynopsis, resolve_join_synopsis, JOIN_KINDS
+
+_INT32_MAX = jnp.int32(2**31 - 1)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["cover", "sampled", "exact3", "s_cell", "c_cell",
+                      "v_s", "v_c", "cov_sc", "n_grp", "r_s", "r_c",
+                      "touched"],
+         meta_fields=[])
+@dataclasses.dataclass
+class JoinArtifacts:
+    """Shared per-(query, cell) join statistics, cell id = leaf * P + part.
+
+    ``exact3`` (Q, 3): [SUM, SUMSQ, COUNT] combined over covered cells.
+    Per sampled cell (all (Q, k*P) f32): HT totals ``s_cell``/``c_cell``,
+    unbiased variance estimates ``v_s``/``v_c`` and SUM-COUNT covariance
+    ``cov_sc``, contributing-key-group count ``n_grp``, and Bernstein
+    range proxies ``r_s``/``r_c`` (max |group total| observed).
+    """
+    cover: jax.Array
+    sampled: jax.Array
+    exact3: jax.Array
+    s_cell: jax.Array
+    c_cell: jax.Array
+    v_s: jax.Array
+    v_c: jax.Array
+    cov_sc: jax.Array
+    n_grp: jax.Array
+    r_s: jax.Array
+    r_c: jax.Array
+    touched: jax.Array
+
+
+def universe_group_ids(jsyn: JoinSynopsis):
+    """Per-slot (leaf, key)-group ids, traceable with fixed shapes.
+
+    Returns (flat_gid (k*su,) int32 with -1 on invalid slots,
+    g_cell (k*su,) int32 mapping group id -> cell id with spill k*P for
+    groups whose key has no dim partition or that hold no rows).
+
+    Group ids are dense per leaf (sort keys within the leaf, flag group
+    starts, cumsum), then offset by ``leaf * su`` so group g of leaf l
+    lands at a globally unique segment id — no ``unique`` call, so the
+    whole derivation jits with static shapes.
+    """
+    k, su = jsyn.u_key.shape
+    p = jsyn.num_partitions
+    g = k * su
+    keys_eff = jnp.where(jsyn.u_valid, jsyn.u_key, _INT32_MAX)
+    order = jnp.argsort(keys_eff, axis=1)
+    ks = jnp.take_along_axis(keys_eff, order, axis=1)
+    newg = jnp.concatenate(
+        [jnp.ones((k, 1), bool), ks[:, 1:] != ks[:, :-1]], axis=1)
+    gid_sorted = jnp.cumsum(newg.astype(jnp.int32), axis=1) - 1
+    gid = jnp.zeros((k, su), jnp.int32).at[
+        jnp.arange(k)[:, None], order].set(gid_sorted)
+    base = (jnp.arange(k, dtype=jnp.int32) * su)[:, None]
+    flat_gid = jnp.where(jsyn.u_valid, base + gid, -1).reshape(-1)
+
+    # Group -> dim partition: all rows of a group share the key, hence the
+    # partition — conflicting scatter writes carry identical values.
+    # Invalid slots write to the extra slot g, sliced off.
+    safe = jnp.where(flat_gid >= 0, flat_gid, g)
+    g_part = jnp.full(g + 1, -1, jnp.int32).at[safe].set(
+        jsyn.u_part.reshape(-1))[:g]
+    g_leaf = jnp.arange(g, dtype=jnp.int32) // su
+    g_cell = jnp.where(g_part >= 0, g_leaf * p + g_part, k * p)
+    return flat_gid, g_cell
+
+
+def compute_join_artifacts(jsyn: JoinSynopsis, queries: QueryBatch,
+                           backend_name: str | None = None) -> JoinArtifacts:
+    k, su = jsyn.u_key.shape
+    p_dim = jsyn.num_partitions
+    kp, g = k * p_dim, k * su
+    q_lo = jnp.asarray(queries.lo, jnp.float32)
+    q_hi = jnp.asarray(queries.hi, jnp.float32)
+    nq = q_lo.shape[0]
+
+    cover, sampled, _, _ = classify_join_cells(jsyn, queries, backend_name)
+
+    cell_flat = jsyn.cell_agg.reshape(kp, -1)
+    # Covered part combines SUM/SUMSQ/COUNT only — the MIN/MAX columns of
+    # empty cells carry +/-inf, which a 0-weight matmul would NaN-poison.
+    exact3 = cover.astype(jnp.float32) @ cell_flat[:, :3]
+
+    flat_gid, g_cell = universe_group_ids(jsyn)
+    coords = jnp.concatenate(
+        [jsyn.u_c, jsyn.u_dattr], axis=-1).reshape(g, -1)
+    a_flat = jsyn.u_a.reshape(-1)
+    inv_p = jnp.float32(1.0 / jsyn.p_u)
+
+    # Per-row HT contributions -> per-group totals by ONE masked
+    # scatter-add per moment: the number of key groups scales with the
+    # number of universe rows, so the stratified moment kernel (one
+    # segment column per group) would be O(Q * rows * groups) here;
+    # the scatter is O(Q * rows). Invalid slots spill to the dropped
+    # column g, exactly like leaf_id = -1 padding.
+    pred = (jnp.all(q_lo[:, None, :] <= coords[None], axis=-1)
+            & jnp.all(coords[None] <= q_hi[:, None, :], axis=-1)
+            ).astype(jnp.float32)                 # (Q, G rows)
+    row_c = pred * inv_p
+    row_s = row_c * a_flat[None]
+    gid_safe = jnp.where(flat_gid >= 0, flat_gid, g)
+    gslot = jnp.zeros((nq, g + 1), jnp.float32)
+    t_c = gslot.at[:, gid_safe].add(row_c)[:, :g]  # sum_rows pred / p
+    t_s = gslot.at[:, gid_safe].add(row_s)[:, :g]  # sum_rows pred * a / p
+
+    # Group totals -> per-cell statistics, again by scatter-add over the
+    # (much smaller) cell space; groups without a dim partition spill.
+    one_m_p = jnp.float32(1.0 - jsyn.p_u)
+    spill = jnp.zeros((nq, kp + 1), jnp.float32)
+
+    def to_cell(vals):
+        return spill.at[:, g_cell].add(vals)[:, :kp]
+
+    s_cell = to_cell(t_s)
+    c_cell = to_cell(t_c)
+    v_s = one_m_p * to_cell(t_s * t_s)
+    v_c = one_m_p * to_cell(t_c * t_c)
+    cov_sc = one_m_p * to_cell(t_s * t_c)
+    n_grp = to_cell((t_c > 0).astype(jnp.float32))
+    r_s = spill.at[:, g_cell].max(jnp.abs(t_s))[:, :kp]
+    r_c = spill.at[:, g_cell].max(t_c)[:, :kp]
+
+    cell_cnt = cell_flat[:, AGG_COUNT]
+    touched = (sampled.astype(jnp.float32) @ cell_cnt) \
+        / jnp.maximum(jsyn.base.total_rows, 1.0)
+    return JoinArtifacts(cover=cover, sampled=sampled, exact3=exact3,
+                         s_cell=s_cell, c_cell=c_cell, v_s=v_s, v_c=v_c,
+                         cov_sc=cov_sc, n_grp=n_grp, r_s=r_s, r_c=r_c,
+                         touched=touched)
+
+
+@partial(jax.jit, static_argnames=("kinds", "level", "small_n_threshold",
+                                   "delta_budget", "backend_name"))
+def _join_answer_jit(jsyn, queries, lam, kinds, level, small_n_threshold,
+                     delta_budget, backend_name):
+    """One compiled program per (kinds, ci flags): a single join artifact
+    stage feeding every requested kind's epilogue. ``level=None`` is the
+    plain path (lam-scaled CLT half-width, no calibrated endpoints)."""
+    from ..uncertainty.intervals import (_z_of, _with_interval,
+                                         compose_join_interval)
+    jart = compute_join_artifacts(jsyn, queries, backend_name)
+    scale = lam if level is None else _z_of(level)
+    out = {}
+    for kind in kinds:
+        res = assemble_join(jsyn, jart, kind, scale)
+        if level is not None:
+            half, _ = compose_join_interval(
+                jsyn, jart, kind, level,
+                small_n_threshold=small_n_threshold,
+                delta_budget=delta_budget)
+            res = _with_interval(res, half, clip_bounds=True)
+        out[kind] = res
+    return out
+
+
+__all__ = ["JoinArtifacts", "compute_join_artifacts", "universe_group_ids",
+           "resolve_join_synopsis", "JOIN_KINDS"]

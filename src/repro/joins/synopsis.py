@@ -1,0 +1,246 @@
+"""`JoinSynopsis`: a PASS synopsis augmented for approximate fk-joins
+(DESIGN.md §13).
+
+The base fact synopsis keeps its partition tree, exact leaf aggregates
+and stratified reservoir untouched; the join augmentation adds, per leaf
+stratum:
+
+* a **universe sample** on the declared fk key (``universe.universe_mask``
+  with the shared ``key_root`` — the dimension side evaluates the same
+  function, so the two sides select correlated key universes), stored
+  row-wise with the *pre-joined* dimension attributes so query time never
+  touches the dimension relation;
+* **pre-joined cell aggregates** ``cell_agg[(leaf, dim-partition)]`` —
+  exact [SUM, SUMSQ, COUNT, MIN, MAX] of the fact measure over the rows
+  of each (fact-stratum x dim-partition) cell. Cells whose fact leaf AND
+  dim partition both classify COVER against a join query are answered
+  exactly from these; overlapping non-covered cells fall to the
+  Horvitz-Thompson estimate over the universe sample.
+
+Everything is a device-resident pytree child alongside the existing
+reservoir, so streaming ingest, ``Synopsis.total_rows`` and the engine's
+epoch invalidation keep working unchanged (``as_synopsis()`` exposes the
+base for the single-table serving paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.synopsis import partition_assign, synopsis_from_assignment
+from ..core.types import (Synopsis, QueryBatch, NUM_AGGS,
+                          AGG_SUM, AGG_SUMSQ, AGG_COUNT, AGG_MIN, AGG_MAX)
+from .dim import DimTable
+from .universe import universe_mask
+
+JOIN_KINDS = ("sum", "count", "avg")
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["base", "dim", "cell_agg", "u_c", "u_a", "u_key",
+                      "u_dattr", "u_part", "u_valid", "u_count",
+                      "u_overflow", "key_root"],
+         meta_fields=["p_u", "key_name"])
+@dataclasses.dataclass
+class JoinSynopsis:
+    """Fact synopsis + fk universe samples + pre-joined cell aggregates.
+
+    ``cell_agg`` (k, P, NUM_AGGS): exact fact-measure aggregates per
+    (leaf stratum, dim partition) cell. Universe sample per stratum
+    (capacity ``su`` slots, ragged-masked by ``u_valid``): coords
+    ``u_c`` (k, su, d_fact), measure ``u_a`` (k, su), fk ``u_key``
+    (k, su) int32, pre-joined dim attrs ``u_dattr`` (k, su, d_dim), dim
+    partition ``u_part`` (k, su) int32 (-1 = key absent from the dim
+    side). ``u_count`` (k,) filled slots; ``u_overflow`` (k,) universe
+    rows dropped for capacity — overflowed strata lose the HT unbiasedness
+    guarantee, so their sampled cells are answered by the deterministic
+    fallback. ``key_root`` is the shared threefry root of the key
+    universe; ``p_u`` the key inclusion probability.
+    """
+    base: Synopsis
+    dim: DimTable
+    cell_agg: jax.Array
+    u_c: jax.Array
+    u_a: jax.Array
+    u_key: jax.Array
+    u_dattr: jax.Array
+    u_part: jax.Array
+    u_valid: jax.Array
+    u_count: jax.Array
+    u_overflow: jax.Array
+    key_root: jax.Array
+    p_u: float
+    key_name: str
+
+    # -- structure ----------------------------------------------------------
+    @property
+    def num_leaves(self) -> int:
+        return self.base.num_leaves
+
+    @property
+    def num_partitions(self) -> int:
+        return self.dim.num_partitions
+
+    @property
+    def d_fact(self) -> int:
+        return self.base.d
+
+    @property
+    def d_dim(self) -> int:
+        return self.dim.d_attr
+
+    @property
+    def u_capacity(self) -> int:
+        return self.u_a.shape[1]
+
+    # -- serving hooks ------------------------------------------------------
+    def as_synopsis(self) -> Synopsis:
+        """Single-table serving view: the unchanged base synopsis (a
+        PassEngine over a JoinSynopsis answers plain predicate queries
+        exactly as before)."""
+        return self.base
+
+    def as_join_synopsis(self) -> "JoinSynopsis":
+        return self
+
+
+def join_queries(fact: QueryBatch, dim: QueryBatch) -> QueryBatch:
+    """Concatenate fact-side and dim-side rectangles into the single
+    higher-dimensional join-query rectangle over ``[fact ‖ dim attrs]``.
+
+    This flat representation is what makes join batches ride the existing
+    serving machinery unchanged (plan cache keying, coalescer mux/pad)."""
+    if fact.lo.shape[0] != dim.lo.shape[0]:
+        raise ValueError(
+            f"fact/dim query counts differ: {fact.lo.shape[0]} vs "
+            f"{dim.lo.shape[0]}")
+    return QueryBatch(jnp.concatenate([jnp.asarray(fact.lo, jnp.float32),
+                                       jnp.asarray(dim.lo, jnp.float32)], 1),
+                      jnp.concatenate([jnp.asarray(fact.hi, jnp.float32),
+                                       jnp.asarray(dim.hi, jnp.float32)], 1))
+
+
+def resolve_join_synopsis(source) -> JoinSynopsis:
+    """Accept a :class:`JoinSynopsis` or any source exposing
+    ``as_join_synopsis()`` (e.g. ``streaming.JoinStreamingIngestor``)."""
+    if hasattr(source, "as_join_synopsis"):
+        return source.as_join_synopsis()
+    raise TypeError(
+        "join serving needs a JoinSynopsis source (build_join_synopsis) "
+        "or a source exposing as_join_synopsis() such as "
+        f"JoinStreamingIngestor; got {type(source).__name__}")
+
+
+def build_join_synopsis(c, a, keys, dim: DimTable, *, k: int = 64,
+                        p_u: float = 0.1, u_capacity: int | None = None,
+                        key_name: str = "fk", seed: int = 0,
+                        sample_budget: int | None = None,
+                        sample_rate: float | None = 0.005,
+                        kind: str = "sum", method: str = "adp",
+                        opt_samples: int = 4096, delta_frac: float = 0.01,
+                        allocation: str = "equal"
+                        ) -> tuple[JoinSynopsis, dict]:
+    """Build a join-augmented PASS synopsis over fact rows (c, a, keys).
+
+    Partitioning/sampling knobs match :func:`~repro.core.build_synopsis`
+    (the base synopsis is built from the same assignment). ``p_u`` is the
+    key-universe inclusion probability; ``u_capacity`` caps universe rows
+    per stratum (default: whatever the build needs, so no overflow).
+    Returns (synopsis, report dict).
+    """
+    if not 0.0 < p_u <= 1.0:
+        raise ValueError(f"p_u must be in (0, 1], got {p_u}")
+    c2 = np.asarray(c, dtype=np.float64)
+    if c2.ndim == 1:
+        c2 = c2[:, None]
+    a = np.asarray(a, dtype=np.float64).reshape(-1)
+    keys = np.asarray(keys).reshape(-1).astype(np.int64)
+    n, d = c2.shape
+    if keys.shape[0] != n:
+        raise ValueError(f"keys rows {keys.shape[0]} != fact rows {n}")
+    if sample_budget is None:
+        sample_budget = int(np.ceil((sample_rate or 0.005) * n))
+
+    assign, k, _vmax = partition_assign(
+        c2, a, k=k, method=method, kind=kind, opt_samples=opt_samples,
+        delta_frac=delta_frac, seed=seed)
+    base, _info = synopsis_from_assignment(
+        c2, a, assign, k, sample_budget=sample_budget,
+        allocation=allocation, seed=seed + 1)
+
+    # fk -> dim partition / attrs, host mirror of dim_lookup
+    dkeys = np.asarray(dim.key_sorted, np.int64)
+    dparts = np.asarray(dim.part_sorted, np.int32)
+    dattrs = np.asarray(dim.attr_sorted, np.float64)
+    P, d_d = dim.num_partitions, dim.d_attr
+    idx = np.clip(np.searchsorted(dkeys, keys), 0, dkeys.size - 1)
+    found = dkeys[idx] == keys
+    part = np.where(found, dparts[idx], -1).astype(np.int64)
+
+    # Pre-joined exact cell aggregates on host f64 (build path).
+    cell = assign.astype(np.int64) * P + part
+    agg = np.zeros((k * P, NUM_AGGS), dtype=np.float64)
+    agg[:, AGG_MIN] = np.inf
+    agg[:, AGG_MAX] = -np.inf
+    cj, aj = cell[found], a[found]
+    np.add.at(agg[:, AGG_SUM], cj, aj)
+    np.add.at(agg[:, AGG_SUMSQ], cj, aj * aj)
+    np.add.at(agg[:, AGG_COUNT], cj, 1.0)
+    np.minimum.at(agg[:, AGG_MIN], cj, aj)
+    np.maximum.at(agg[:, AGG_MAX], cj, aj)
+
+    # Universe membership — ONE device decision function for both sides.
+    key_root = jax.random.PRNGKey(seed)
+    member = np.asarray(universe_mask(key_root, keys, p_u)) & found
+    counts = np.bincount(assign[member], minlength=k).astype(np.int64)
+    su = int(u_capacity) if u_capacity is not None \
+        else max(int(counts.max()) if counts.size else 1, 1)
+    su = max(su, 1)
+
+    midx = np.flatnonzero(member)
+    leaves = assign[midx]
+    order = np.argsort(leaves, kind="stable")
+    midx, leaves = midx[order], leaves[order]
+    occ = np.arange(midx.size) - np.searchsorted(leaves, leaves)
+    keep = occ < su
+    overflow = np.bincount(leaves[~keep], minlength=k).astype(np.int32)
+    mi, lv, oc = midx[keep], leaves[keep], occ[keep]
+
+    u_c = np.zeros((k, su, d), np.float32)
+    u_a = np.zeros((k, su), np.float32)
+    u_key = np.zeros((k, su), np.int32)
+    u_dattr = np.zeros((k, su, d_d), np.float32)
+    u_part = np.full((k, su), -1, np.int32)
+    u_valid = np.zeros((k, su), bool)
+    u_c[lv, oc] = c2[mi]
+    u_a[lv, oc] = a[mi]
+    u_key[lv, oc] = keys[mi]
+    u_dattr[lv, oc] = dattrs[idx[mi]]
+    u_part[lv, oc] = part[mi]
+    u_valid[lv, oc] = True
+
+    jsyn = JoinSynopsis(
+        base=base, dim=dim,
+        cell_agg=jnp.asarray(agg.reshape(k, P, NUM_AGGS), jnp.float32),
+        u_c=jnp.asarray(u_c), u_a=jnp.asarray(u_a),
+        u_key=jnp.asarray(u_key), u_dattr=jnp.asarray(u_dattr),
+        u_part=jnp.asarray(u_part), u_valid=jnp.asarray(u_valid),
+        u_count=jnp.asarray(np.minimum(counts, su), jnp.int32),
+        u_overflow=jnp.asarray(overflow),
+        key_root=key_root, p_u=float(p_u), key_name=str(key_name))
+    report = {
+        "k": k, "num_partitions": P, "p_u": float(p_u), "u_capacity": su,
+        "universe_rows": int(keep.sum()),
+        "universe_overflow": int((~keep).sum()),
+        "unmatched_fact_rows": int((~found).sum()),
+        "nonempty_cells": int((agg[:, AGG_COUNT] > 0).sum()),
+    }
+    return jsyn, report
+
+
+__all__ = ["JoinSynopsis", "build_join_synopsis", "join_queries",
+           "resolve_join_synopsis", "JOIN_KINDS"]

@@ -1,0 +1,53 @@
+"""Universe sampling on the join key: hash-threshold membership.
+
+"Joins on Samples: A Theoretical Guide for Practitioners" (PAPERS.md):
+uniform row sampling composes badly with joins (sample-then-join is
+biased and high-variance because matching rows on the two sides are
+sampled independently), but *universe sampling* — include a row iff a
+deterministic hash of its join-key value falls below the sampling rate
+``p`` — keeps ALL rows of a selected key on BOTH sides, so fk-join
+SUM/COUNT/AVG over the sampled universe are unbiased Horvitz-Thompson
+estimators with inclusion probability exactly ``p`` per key *group*.
+
+The "hash" here is the same threefry key machinery the bootstrap uses
+for its resample weights (``uncertainty.bootstrap._draw_weights``): fold
+the integer key value into a root PRNG key and draw one uniform. The
+decision therefore depends only on ``(root_key, key_value)`` — the same
+key always gets the same decision, across strata, across streamed
+batches, and across the fact/dimension sides (the correlation that makes
+the estimator work), and it is bit-stable across hosts and jax versions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def key_uniforms(root_key: jax.Array, keys) -> jax.Array:
+    """Deterministic per-key-value uniforms in [0, 1).
+
+    ``keys`` is any integer array; the result has the same shape. Equal
+    key values always map to equal uniforms (a pure function of
+    ``(root_key, value)`` — fold_in + one threefry draw per element).
+    """
+    kv = jnp.asarray(keys, jnp.int32)
+    flat = kv.reshape(-1)
+
+    def one(v):
+        return jax.random.uniform(jax.random.fold_in(root_key, v), (),
+                                  jnp.float32)
+
+    return jax.vmap(one)(flat).reshape(kv.shape)
+
+
+def universe_mask(root_key: jax.Array, keys, p) -> jax.Array:
+    """Membership of each key value in the rate-``p`` key universe.
+
+    Both join sides must call this with the SAME ``root_key`` and ``p``
+    to select correlated universes. Monotone in ``p``: the universe at a
+    smaller rate is a subset of the universe at a larger one.
+    """
+    return key_uniforms(root_key, keys) < jnp.float32(p)
+
+
+__all__ = ["key_uniforms", "universe_mask"]

@@ -95,7 +95,10 @@ class Overloaded(RuntimeError):
 
 @dataclasses.dataclass
 class _Pending:
-    """One queued tenant request (host-side bookkeeping only)."""
+    """One queued tenant request (host-side bookkeeping only). ``dups``
+    collects same-tick requests with bit-identical (predicate, config)
+    payloads — they ride this request's dispatch and demux from its row
+    range instead of buying lanes of their own."""
     tenant: object
     queries: QueryBatch
     serving: ServingConfig
@@ -103,6 +106,8 @@ class _Pending:
     future: Future
     t_submit: float
     rows: int
+    join: bool = False
+    dups: list = dataclasses.field(default_factory=list)
 
 
 class _TenantAccount:
@@ -158,7 +163,7 @@ class RequestCoalescer:
         self._tenants: dict[object, _TenantAccount] = {}
         self._stats = {"submitted": 0, "served": 0, "shed": 0,
                        "dispatches": 0, "ticks": 0, "coalesced_rows": 0,
-                       "padded_rows": 0, "epoch_drains": 0}
+                       "padded_rows": 0, "epoch_drains": 0, "dedup_hits": 0}
         self._epoch = engine.epoch
         self._generation = engine._generation
         # The synchronous demux completes every dispatch before tick()
@@ -180,22 +185,30 @@ class RequestCoalescer:
         return acct
 
     def submit(self, tenant, queries: QueryBatch, *, kinds=None, ci=_UNSET,
-               serving: ServingConfig | None = None) -> Future:
+               serving: ServingConfig | None = None,
+               join: bool = False) -> Future:
         """Queue one tenant request; returns a Future resolving to the
         same ``{kind: QueryResult}`` dict ``engine.answer`` would return
         (bit-identically — see tests). ``kinds=``/``ci=``/``serving=``
         override the engine configs per request, exactly like
         ``engine.answer``; requests only share a device dispatch with
-        requests of the same effective config. Raises :class:`Overloaded`
-        when admission control sheds the request.
+        requests of the same effective config. ``join=True`` routes the
+        request through ``engine.answer_join`` semantics (``queries`` in
+        any layout ``answer_join`` accepts; join requests bucket apart
+        from single-table ones). Raises :class:`Overloaded` when
+        admission control sheds the request.
         """
-        sv, cfg = self.engine._effective(kinds, ci, serving)
+        if join:
+            sv, cfg = self.engine._effective_join(kinds, ci, serving)
+            queries = self.engine._as_join_batch(queries)
+        else:
+            sv, cfg = self.engine._effective(kinds, ci, serving)
         if queries.lo.ndim != 2 or queries.lo.shape[0] < 1:
             raise ValueError(
                 f"expected a non-empty (q, d) batch, got {queries.lo.shape}")
         pend = _Pending(tenant=tenant, queries=queries, serving=sv, ci=cfg,
                         future=Future(), t_submit=time.perf_counter(),
-                        rows=int(queries.lo.shape[0]))
+                        rows=int(queries.lo.shape[0]), join=join)
         with self._lock:
             acct = self._account(tenant)
             if len(self._queue) >= self.config.max_queue_depth:
@@ -282,17 +295,22 @@ class RequestCoalescer:
         d = int(group[0].queries.lo.shape[1])
         rows = sum(p.rows for p in group)
         pad = padded_b - rows
+        everyone = [q for p in group for q in (p, *p.dups)]
         try:
-            prepared = self.engine.prepare((padded_b, d), serving=serving,
-                                           ci=ci)
+            if group[0].join:
+                prepared = self.engine.prepare_join(
+                    (padded_b, d), serving=serving, ci=ci)
+            else:
+                prepared = self.engine.prepare((padded_b, d),
+                                               serving=serving, ci=ci)
             results = prepared(self._mux(group, padded_b, d))
             # One synchronizing pull of the whole result pytree; the
             # per-request demux below is zero-copy numpy views.
             host = _pull_host(results)
         except Exception as exc:                  # deliver, don't swallow
-            for p in group:
+            for p in everyone:
                 p.future.set_exception(exc)
-            self._finish(group, served=False)
+            self._finish(everyone, served=False)
             return
         with self._lock:
             self._dispatched_since_drain = True
@@ -302,8 +320,12 @@ class RequestCoalescer:
         off = 0
         for p in group:
             p.future.set_result(_slice_results(host, off, p.rows))
+            # Deduped duplicates demux the same row range — each gets its
+            # own fresh view dict, so tenants never share result objects.
+            for q in p.dups:
+                q.future.set_result(_slice_results(host, off, q.rows))
             off += p.rows
-        self._finish(group, served=True)
+        self._finish(everyone, served=True)
 
     def _finish(self, group: list[_Pending], served: bool) -> None:
         now = time.perf_counter()
@@ -329,20 +351,38 @@ class RequestCoalescer:
             self._stats["ticks"] += 1
             return 0
         self._drain_on_epoch_bump()
-        # Bucket by (padded shape class, serving config, ci config); a
-        # request bigger than the top class gets a rounded-up class of its
-        # own (still a bounded executable set — multiples of the top).
+        # Bucket by (padded shape class, serving config, ci config, join
+        # flag); a request bigger than the top class gets a rounded-up
+        # class of its own (still a bounded executable set — multiples of
+        # the top).
         buckets: OrderedDict[tuple, list[_Pending]] = OrderedDict()
         for p in batch:
             padded_b = self.config.padded_size(p.rows)
             key = (padded_b, int(p.queries.lo.shape[1]), p.serving.cache_key(),
-                   p.ci.cache_key() if p.ci is not None else None)
+                   p.ci.cache_key() if p.ci is not None else None, p.join)
             buckets.setdefault(key, []).append(p)
         n_dispatch = 0
-        for (padded_b, _d, _sk, _ck), group in buckets.items():
+        for (padded_b, _d, _sk, _ck, _jn), group in buckets.items():
+            # Cross-tenant dedup: identical predicate batches within one
+            # bucket dispatch once; later arrivals ride the first request's
+            # result rows (each still gets its own demuxed view).
+            primaries: list[_Pending] = []
+            first: dict[tuple, _Pending] = {}
+            for p in group:
+                sig = (p.rows,
+                       np.asarray(p.queries.lo, np.float32).tobytes(),
+                       np.asarray(p.queries.hi, np.float32).tobytes())
+                owner = first.get(sig)
+                if owner is None:
+                    first[sig] = p
+                    primaries.append(p)
+                else:
+                    owner.dups.append(p)
+                    with self._lock:
+                        self._stats["dedup_hits"] += 1
             cur: list[_Pending] = []
             cur_rows = 0
-            for p in group:         # greedy fill, never split a request
+            for p in primaries:     # greedy fill, never split a request
                 if cur and cur_rows + p.rows > padded_b:
                     self._dispatch(cur, padded_b, cur[0].serving, cur[0].ci)
                     n_dispatch += 1

@@ -14,13 +14,18 @@ vectorized batched inserts and delta-merge serving (DESIGN.md §6):
 * :mod:`policy`  — drift signals (``staleness``, out-of-box fraction) and
   the on-device re-optimization loop: ``dp_monotone_jnp`` over the live
   reservoir pool -> fresh cuts -> rebuild + sample re-stratification.
+* :mod:`join_ingest` — ``JoinStreamingIngestor``: the base transition plus
+  streamed (stratum x dim-partition) cell aggregates and keyed universe-
+  sample appends for fk-join serving (DESIGN.md §13).
 """
 from .ingest import StreamingIngestor, StreamState, ingest_batch_reference
 from .delta import merge_synopsis, subtree_leaf_matrix, reservoir_moments
 from .policy import DriftPolicy, reoptimize_cuts, reoptimize
+from .join_ingest import JoinStreamingIngestor, JoinStreamState
 
 __all__ = [
     "StreamingIngestor", "StreamState", "ingest_batch_reference",
     "merge_synopsis", "subtree_leaf_matrix", "reservoir_moments",
     "DriftPolicy", "reoptimize_cuts", "reoptimize",
+    "JoinStreamingIngestor", "JoinStreamState",
 ]

@@ -1,0 +1,210 @@
+"""Streaming ingest for join-augmented synopses (DESIGN.md §13).
+
+One jitted step per batch extends the base streaming transition
+(:func:`repro.streaming.ingest._apply_routed` — aggregates, boxes,
+reservoir) with the join-state transition:
+
+* **cell aggregates** — each routed row's (leaf, dim-partition) cell gets
+  its measure folded in through one extra ``segment_reduce`` over cell
+  ids (rows whose key misses the dimension side carry seg id -1 and are
+  dropped, exactly like padding rows in the base path);
+* **universe append** — universe membership is re-evaluated with the
+  synopsis' own ``key_root``, so a key streamed later joins (or stays out
+  of) the SAME universe the build selected — membership is a pure
+  function of (root, key), the invariant the estimator's correlated-
+  universe argument rests on. Member rows scatter-append into the fixed-
+  capacity per-stratum buffers (within-batch ranks make the target slots
+  unique); rows past capacity only bump ``u_overflow``, which the
+  interval composition reads as "this stratum's universe is truncated —
+  deterministic fallback".
+
+``JoinStreamingIngestor.as_join_synopsis()`` is the serving view: the
+delta-merged base plus build-cells ⊕ streamed-cells and the live
+universe buffers (epoch-cached, same invalidation contract as
+``as_synopsis()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.registry import get_backend
+from .ingest import (StreamingIngestor, _route_1d, _apply_routed,
+                     _batch_occupancy)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["cell_delta", "u_c", "u_a", "u_key", "u_dattr",
+                      "u_part", "u_valid", "u_count", "u_overflow"],
+         meta_fields=[])
+@dataclasses.dataclass
+class JoinStreamState:
+    """Mutable join augmentation state: streamed-rows-only cell aggregates
+    (mergeable; combined with the build-time cells at serve time) and the
+    live universe buffers (appended in place — universe samples are not
+    reservoirs, every member row is kept up to capacity)."""
+    cell_delta: jax.Array    # (k, P, 5) f32 streamed-cell aggregates
+    u_c: jax.Array           # (k, su, d_fact) f32
+    u_a: jax.Array           # (k, su) f32
+    u_key: jax.Array         # (k, su) int32
+    u_dattr: jax.Array       # (k, su, d_dim) f32
+    u_part: jax.Array        # (k, su) int32
+    u_valid: jax.Array       # (k, su) bool
+    u_count: jax.Array       # (k,) int32 filled slots
+    u_overflow: jax.Array    # (k,) int32 member rows dropped for capacity
+
+
+def _empty_cell_delta(k: int, p: int) -> jnp.ndarray:
+    from ..kernels.ref import NEG_BIG, POS_BIG
+    agg = jnp.zeros((k, p, 5), jnp.float32)
+    return agg.at[:, :, 3].set(POS_BIG).at[:, :, 4].set(NEG_BIG)
+
+
+def _combine_cell_agg(base_cells, delta_cells):
+    """Mergeable-summary combine of two (k, P, 5) cell aggregates."""
+    return jnp.concatenate(
+        [base_cells[..., 0:3] + delta_cells[..., 0:3],
+         jnp.minimum(base_cells[..., 3:4], delta_cells[..., 3:4]),
+         jnp.maximum(base_cells[..., 4:5], delta_cells[..., 4:5])], axis=-1)
+
+
+def _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root, p_u,
+                      backend_name):
+    from ..joins.dim import dim_lookup
+    from ..joins.universe import universe_mask
+    be = get_backend(backend_name)
+    b, d = c.shape
+    if d == 1:
+        leaf, dsel = _route_1d(state.leaf_lo, state.leaf_hi, c)
+    else:
+        leaf, dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c)
+    new_state = _apply_routed(state, c, a, u, leaf, dsel, backend_name)
+
+    k, su = jstate.u_a.shape
+    p = dim.num_partitions
+    kp = k * p
+    part, dattr, found = dim_lookup(dim, keys)
+
+    # Streamed cell aggregates: unmatched keys carry seg id -1 (dropped).
+    cell = jnp.where(found, leaf * p + part, -1)
+    cell_b = be.segment_reduce(a.astype(jnp.float32), cell, kp, bn=None)
+    new_cells = _combine_cell_agg(jstate.cell_delta,
+                                  cell_b.reshape(k, p, 5))
+
+    # Universe append: same membership function as the build, so a key's
+    # inclusion decision is identical across batches and strata.
+    member = universe_mask(key_root, keys, p_u) & found
+    occ = _batch_occupancy(jnp.where(member, leaf, k))
+    slot = jstate.u_count[leaf] + occ
+    ok = member & (slot < su)
+    # Accepted rows land on distinct (leaf, slot) pairs; everything else
+    # collides on the one dummy slot, which is sliced back off.
+    flat = jnp.where(ok, leaf * su + slot, k * su)
+
+    def put(buf, vals):
+        flat_buf = buf.reshape(k * su, *buf.shape[2:])
+        ext = jnp.concatenate(
+            [flat_buf, jnp.zeros((1, *buf.shape[2:]), buf.dtype)], axis=0)
+        return ext.at[flat].set(vals)[:k * su].reshape(buf.shape)
+
+    mcnt = jnp.zeros(k + 1, jnp.int32).at[
+        jnp.where(member, leaf, k)].add(1)[:k]
+    new_jstate = JoinStreamState(
+        cell_delta=new_cells,
+        u_c=put(jstate.u_c, c.astype(jnp.float32)),
+        u_a=put(jstate.u_a, a.astype(jnp.float32)),
+        u_key=put(jstate.u_key, keys.astype(jnp.int32)),
+        u_dattr=put(jstate.u_dattr, dattr.astype(jnp.float32)),
+        u_part=put(jstate.u_part, part),
+        u_valid=put(jstate.u_valid, jnp.ones(b, bool)),
+        u_count=jnp.minimum(jstate.u_count + mcnt, su),
+        u_overflow=jstate.u_overflow
+        + jnp.maximum(jstate.u_count + mcnt - su, 0))
+    return new_state, new_jstate
+
+
+@partial(jax.jit, static_argnames=("backend_name",))
+def _join_ingest_step(state, jstate, c, a, u, keys, dim, key_root, p_u,
+                      backend_name):
+    """Explicit-uniforms entry (tests / oracle replay)."""
+    return _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root,
+                             p_u, backend_name)
+
+
+@partial(jax.jit, static_argnames=("backend_name",))
+def _join_ingest_step_keyed(state, jstate, c, a, rkey, keys, dim, key_root,
+                            p_u, backend_name):
+    u = jax.random.uniform(rkey, (a.shape[0],), jnp.float32)
+    return _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root,
+                             p_u, backend_name)
+
+
+class JoinStreamingIngestor(StreamingIngestor):
+    """Streaming front end over a :class:`~repro.joins.JoinSynopsis`.
+
+    ``ingest()`` additionally requires the batch's fk ``keys``;
+    ``as_synopsis()`` keeps serving the single-table view (the engine's
+    plain ``answer`` path), ``as_join_synopsis()`` the join view — both
+    cached per epoch.
+    """
+
+    def __init__(self, jsyn, *, seed: int = 0, key: jax.Array | None = None,
+                 backend: str | None = None):
+        super().__init__(jsyn.base, seed=seed, key=key, backend=backend)
+        self._join_base = jsyn
+        self.jstate = JoinStreamState(
+            cell_delta=_empty_cell_delta(jsyn.num_leaves,
+                                         jsyn.num_partitions),
+            u_c=jsyn.u_c, u_a=jsyn.u_a, u_key=jsyn.u_key,
+            u_dattr=jsyn.u_dattr, u_part=jsyn.u_part, u_valid=jsyn.u_valid,
+            u_count=jsyn.u_count, u_overflow=jsyn.u_overflow)
+        self._jmerged = None
+
+    def ingest(self, c_rows, a_vals, keys=None,
+               u=None) -> "JoinStreamingIngestor":
+        """Ingest (B, d) coords + (B,) values + (B,) fk keys in one jitted
+        step (base transition + join transition share the routing pass)."""
+        if keys is None:
+            raise ValueError(
+                "JoinStreamingIngestor.ingest needs the batch's fk keys "
+                "(universe membership and cell routing are keyed)")
+        c = jnp.asarray(c_rows, jnp.float32)
+        if c.ndim == 1:
+            c = jnp.reshape(c, (-1, 1))
+        a = jnp.reshape(jnp.asarray(a_vals, jnp.float32), (-1,))
+        kv = jnp.reshape(jnp.asarray(keys, jnp.int32), (-1,))
+        jb = self._join_base
+        if u is None:
+            self._key, sub = jax.random.split(self._key)
+            self.state, self.jstate = _join_ingest_step_keyed(
+                self.state, self.jstate, c, a, sub, kv, jb.dim,
+                jb.key_root, jnp.float32(jb.p_u), self._backend)
+        else:
+            self.state, self.jstate = _join_ingest_step(
+                self.state, self.jstate, c, a, jnp.asarray(u, jnp.float32),
+                kv, jb.dim, jb.key_root, jnp.float32(jb.p_u), self._backend)
+        self.n_stream += int(a.shape[0])
+        self._epoch += 1
+        self._merged = None
+        self._jmerged = None
+        return self
+
+    def as_join_synopsis(self):
+        if self._jmerged is None:
+            jb = self._join_base
+            self._jmerged = dataclasses.replace(
+                jb, base=self.as_synopsis(),
+                cell_agg=_combine_cell_agg(jb.cell_agg,
+                                           self.jstate.cell_delta),
+                u_c=self.jstate.u_c, u_a=self.jstate.u_a,
+                u_key=self.jstate.u_key, u_dattr=self.jstate.u_dattr,
+                u_part=self.jstate.u_part, u_valid=self.jstate.u_valid,
+                u_count=self.jstate.u_count,
+                u_overflow=self.jstate.u_overflow)
+        return self._jmerged
+
+
+__all__ = ["JoinStreamState", "JoinStreamingIngestor"]

@@ -195,6 +195,84 @@ def compose_interval(syn: Synopsis, art, kind: str, level: float,
     raise ValueError(f"no interval composition for kind: {kind}")
 
 
+def _join_fb_half(jsyn, jart, kind: str, log_term, over_cell):
+    """(Q, k*P) fallback half-width of each sampled cell's contribution:
+    empirical-Bernstein on the key-group HT sum, degrading to the
+    deterministic cell-range bound when the cell has no universe groups or
+    its stratum's universe buffer overflowed (truncation breaks the HT
+    unbiasedness the Bernstein bound relies on)."""
+    from ..joins.assemble import join_cell_bounds
+    p_lb, p_ub = join_cell_bounds(jsyn, kind)
+    e = jart.s_cell if kind == "sum" else jart.c_cell
+    v = jart.v_s if kind == "sum" else jart.v_c
+    r = jart.r_s if kind == "sum" else jart.r_c
+    # The HT estimate may fall OUTSIDE the deterministic cell range; the
+    # bound needed is the distance from the estimate to the farthest end.
+    det = jnp.maximum(p_ub[None] - e, e - p_lb[None])
+    bern = jnp.sqrt(2.0 * v * log_term) + (2.0 / 3.0) * r * log_term
+    return jnp.where((jart.n_grp > 0) & ~over_cell,
+                     jnp.minimum(bern, det), det)
+
+
+def compose_join_interval(jsyn, jart, kind: str, level: float,
+                          small_n_threshold: int = 12,
+                          delta_budget: str = "stratum"):
+    """Half-width of the ``level`` interval for one join kind from shared
+    join artifacts (DESIGN.md §13). Returns (half, n_fallback), both (Q,).
+
+    The composition mirrors :func:`compose_interval` at cell granularity:
+    covered cells contribute exactly zero (fully exact-covered join
+    queries get zero-width intervals); sampled cells with enough
+    contributing key groups use the CLT variance of the HT estimate;
+    cells below ``small_n_threshold`` groups — or in strata whose
+    universe buffer overflowed — fall back to min(empirical Bernstein,
+    deterministic cell range). ``delta_budget`` splits the fallback
+    failure probability as in the single-table composition.
+    """
+    if delta_budget not in ("stratum", "union"):
+        raise ValueError(f"unknown delta_budget: {delta_budget!r}")
+    z = _z_of(level)
+    delta = 1.0 - level
+    p_dim = jsyn.num_partitions
+    over_cell = jnp.repeat(jsyn.u_overflow > 0, p_dim)[None]     # (1, KP)
+    fb = jart.sampled & ((jart.n_grp < float(small_n_threshold))
+                         | over_cell)
+    cltf = (jart.sampled & ~fb).astype(jnp.float32)
+    n_fallback = jnp.sum(fb.astype(jnp.float32), axis=1)
+    if delta_budget == "union":
+        log_term = jnp.log(
+            3.0 * jnp.maximum(n_fallback, 1.0) / delta)[:, None]
+    else:
+        log_term = jnp.float32(jnp.log(3.0 / delta))
+
+    if kind in ("sum", "count"):
+        v = jart.v_s if kind == "sum" else jart.v_c
+        half_clt = z * jnp.sqrt(jnp.sum(cltf * v, axis=1))
+        h = _join_fb_half(jsyn, jart, kind, log_term, over_cell)
+        return (half_clt + jnp.sum(jnp.where(fb, h, 0.0), axis=1),
+                n_fallback)
+
+    if kind == "avg":
+        from ..joins.assemble import join_sum_count
+        s, c = join_sum_count(jart)
+        est = s / c
+        vs = jnp.sum(cltf * jart.v_s, axis=1)
+        vc = jnp.sum(cltf * jart.v_c, axis=1)
+        csc = jnp.sum(cltf * jart.cov_sc, axis=1)
+        var_ratio = jnp.maximum(vs - 2 * est * csc + est * est * vc, 0.0) \
+            / (c * c)
+        h_s = jnp.sum(jnp.where(fb, _join_fb_half(jsyn, jart, "sum",
+                                                  log_term, over_cell),
+                                0.0), axis=1)
+        h_c = jnp.sum(jnp.where(fb, _join_fb_half(jsyn, jart, "count",
+                                                  log_term, over_cell),
+                                0.0), axis=1)
+        half_fb = (h_s + jnp.abs(est) * h_c) / jnp.maximum(c - h_c, 1.0)
+        return z * jnp.sqrt(var_ratio) + half_fb, n_fallback
+
+    raise ValueError(f"no join interval composition for kind: {kind}")
+
+
 def _with_interval(res: QueryResult, half, clip_bounds: bool) -> QueryResult:
     lo = res.estimate - half
     hi = res.estimate + half
@@ -267,4 +345,5 @@ def answer_with_ci(syn, queries: QueryBatch, kinds, *, level: float,
     return eng.answer(queries, plan=plan)
 
 
-__all__ = ["normal_quantile", "compose_interval", "answer_with_ci"]
+__all__ = ["normal_quantile", "compose_interval", "compose_join_interval",
+           "answer_with_ci"]

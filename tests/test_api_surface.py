@@ -36,8 +36,10 @@ def current_surface() -> dict:
         "repro.api.__all__": sorted(api.__all__),
         "PassEngine.__init__": _sig(api.PassEngine.__init__),
         "PassEngine.answer": _sig(api.PassEngine.answer),
+        "PassEngine.answer_join": _sig(api.PassEngine.answer_join),
         "PassEngine.from_sharded": _sig(api.PassEngine.from_sharded),
         "PassEngine.prepare": _sig(api.PassEngine.prepare),
+        "PassEngine.prepare_join": _sig(api.PassEngine.prepare_join),
         "PassEngine.stats": _sig(api.PassEngine.stats),
         "PassEngine.replace_source": _sig(api.PassEngine.replace_source),
         "PreparedQuery.__call__": _sig(api.PreparedQuery.__call__),

