@@ -23,6 +23,7 @@ from . import bench_coalescer
 from . import bench_distributed
 from . import bench_fused
 from . import bench_joins
+from . import bench_partitions
 from . import bench_streaming_ingest
 from . import fig_ci_calibration
 from . import perf_pass_serving
@@ -44,6 +45,8 @@ def run() -> tuple[dict, list]:
     metrics.update(bench_coalescer.run(**bench_coalescer.tiny_config()))
     # fk-join serving vs materialized-join scan at matched error
     metrics.update(bench_joins.run(**bench_joins.tiny_config()))
+    # partition-selection tier vs flat full-lake build (clustered lake)
+    metrics.update(bench_partitions.run(**bench_partitions.tiny_config()))
     # multi-device serving path: psum merge of the mergeable summaries
     metrics.update(bench_distributed.run(**bench_distributed.tiny_config()))
     # sharded-ingest weak scaling: fresh subprocess per forced device count

@@ -31,6 +31,7 @@ REQUIRED_GATED = (
     "bootstrap_fused_speedup_x",
     "coalesced_serving_speedup_x",
     "join_serving_speedup_x",
+    "partition_pruning_speedup_x",
     "route_multid_tiled_speedup_x",
     "serving_prepared_speedup_x",
     "sharded_ingest_scaleup_x",

@@ -18,7 +18,8 @@ config dataclasses here are the single source of truth for serving
 defaults. The public surface below is snapshot-tested
 (tests/test_api_surface.py) so it only changes deliberately.
 """
-from .config import ServingConfig, CIConfig, CoalescerConfig, as_ci_config
+from .config import (ServingConfig, CIConfig, CoalescerConfig,
+                     CatalogConfig, as_ci_config)
 from .engine import PassEngine, PreparedQuery
 from .deprecation import warn_once, reset_deprecation_warnings
 
@@ -28,6 +29,7 @@ __all__ = [
     "ServingConfig",
     "CIConfig",
     "CoalescerConfig",
+    "CatalogConfig",
     "as_ci_config",
     "warn_once",
     "reset_deprecation_warnings",

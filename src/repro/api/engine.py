@@ -120,6 +120,46 @@ def _join_dispatch_entry(serving: ServingConfig, ci: CIConfig | None):
             lambda syn, queries, plan_masks: (syn, queries, lam))
 
 
+def _validate_catalog_request(serving: ServingConfig, ci: CIConfig | None):
+    from ..partitions import CATALOG_KINDS
+    serving.validate()
+    for kind in serving.kinds:
+        if kind not in CATALOG_KINDS:
+            raise ValueError(
+                f"catalog serving supports kinds {CATALOG_KINDS}, got "
+                f"{kind!r} (min/max cannot be composed across an "
+                "importance-sampled partition stage)")
+    if ci is not None:
+        ci.validate()
+        if ci.method != "clt":
+            raise ValueError(
+                "catalog serving supports ci method 'clt' only "
+                f"(got {ci.method!r}); the bootstrap resamples rows, not "
+                "the partition-selection stage")
+
+
+def _catalog_dispatch_entry(serving: ServingConfig, ci: CIConfig | None,
+                            k_part: int):
+    """(jit entry, static kwargs, args builder) for one catalog serving
+    config. The pinned "synopsis" is the :class:`CatalogSource` itself;
+    the builder delegates to ``source.stage(queries)``, which selects,
+    materializes, and stacks the partitions for this batch and hands back
+    the full dynamic argument tuple."""
+    from ..partitions.executor import _catalog_answer_jit
+    backend_name = get_backend(serving.backend).name
+    lam = serving.lam
+    statics = dict(
+        kinds=serving.kinds,
+        k_part=int(k_part),
+        level=None if ci is None else float(ci.level),
+        small_n_threshold=12 if ci is None else int(ci.small_n_threshold),
+        use_fpc=serving.use_fpc,
+        delta_budget="stratum" if ci is None else ci.delta_budget,
+        backend_name=backend_name)
+    return (_catalog_answer_jit, statics,
+            lambda src, queries, plan_masks: src.stage(queries, lam))
+
+
 def _dispatch_entry(serving: ServingConfig, ci: CIConfig | None):
     """(jit entry, static kwargs, args builder) for one serving config.
 
@@ -293,6 +333,23 @@ class PreparedJoinQuery(PreparedQuery):
                                         ci=self.ci, serving=self.serving)
 
 
+class PreparedCatalogQuery(PreparedQuery):
+    """A pinned partition-tier serving entry (DESIGN.md §14): same plan
+    cache slot / epoch-driven re-pin lifecycle as :class:`PreparedQuery`,
+    but pinning the :class:`~repro.partitions.CatalogSource` itself — the
+    per-call ``stage()`` re-draws the partition selection, so the dynamic
+    argument shapes vary with how many partitions get picked (padded to a
+    power of two; the AOT fast path engages whenever consecutive calls
+    land on the same padded width and falls back to jit otherwise)."""
+
+    def _make_entry(self):
+        return _catalog_dispatch_entry(self.serving, self.ci,
+                                       self._engine._source.config.k)
+
+    def _resolve_source(self):
+        return self._engine._source
+
+
 class PassEngine:
     """Stateful PASS serving facade: configure once, serve many.
 
@@ -350,10 +407,45 @@ class PassEngine:
         return cls(ing, serving=serving, ci=ci,
                    plan_cache_size=plan_cache_size)
 
+    @classmethod
+    def from_catalog(cls, parts, *, catalog=None,
+                     serving: ServingConfig | None = None,
+                     ci: CIConfig | float | None = None,
+                     plan_cache_size: int = 32,
+                     **build_kw) -> "PassEngine":
+        """Serve partitioned data through the sketch-guided partition
+        tier (DESIGN.md §14).
+
+        ``parts`` is a :class:`~repro.partitions.PartitionStore` or a
+        sequence of per-partition ``(c, a)`` row blocks. ``catalog`` is a
+        :class:`~repro.api.CatalogConfig`; with a ``max_partitions``
+        budget the engine materializes PASS synopses only for the
+        partitions the picker selects per batch (disjoint/covered ones
+        are pruned exactly) and composes answers by Horvitz-Thompson
+        with two-stage intervals. Without a budget the tier serves the
+        flat synopsis over all rows (``build_kw`` forwards to
+        ``build_synopsis``), bit-identical to never partitioning.
+        """
+        from ..partitions import CatalogSource, PartitionStore
+        from .config import CatalogConfig
+        store = (parts if isinstance(parts, PartitionStore)
+                 else PartitionStore(parts))
+        cfg = (catalog if catalog is not None else CatalogConfig()).validate()
+        return cls(CatalogSource(store, cfg, build_kw), serving=serving,
+                   ci=ci, plan_cache_size=plan_cache_size)
+
     # -- source ------------------------------------------------------------
     @property
     def source(self):
         return self._source
+
+    def _catalog_selective(self) -> bool:
+        """True when the source is a budgeted CatalogSource: serving must
+        route through the partition-selection entry (a dense catalog
+        source flows through the ordinary flat path instead)."""
+        src = self._source
+        return (getattr(src, "is_catalog_source", False)
+                and not src.serves_flat)
 
     @property
     def epoch(self) -> int:
@@ -377,6 +469,21 @@ class PassEngine:
         return self
 
     # -- config plumbing ---------------------------------------------------
+    def _effective_catalog(self, kinds, ci, serving):
+        from ..partitions import CATALOG_KINDS
+        sv = serving if serving is not None else self.serving
+        if kinds is not None:
+            sv = dataclasses.replace(sv, kinds=kinds)
+        else:
+            # Inherited kinds keep only the catalog-answerable ones (same
+            # contract as join serving's kind inheritance).
+            sv = dataclasses.replace(
+                sv, kinds=tuple(k for k in sv.kinds if k in CATALOG_KINDS)
+                or ("sum",))
+        cfg = self.ci if ci is _UNSET else as_ci_config(ci)
+        _validate_catalog_request(sv, cfg)
+        return sv, cfg
+
     def _effective(self, kinds, ci, serving):
         sv = serving if serving is not None else self.serving
         if kinds is not None:
@@ -392,16 +499,18 @@ class PassEngine:
     # O(1) per ingest instead of O(cache) per bump.
 
     def _lookup(self, shape, serving, ci, has_plan: bool = False,
-                join: bool = False) -> PreparedQuery:
+                join: bool = False, catalog: bool = False) -> PreparedQuery:
         key = (tuple(shape), serving.cache_key(),
-               ci.cache_key() if ci is not None else None, has_plan, join)
+               ci.cache_key() if ci is not None else None, has_plan, join,
+               catalog)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
             self._stats["hits"] += 1
             return hit
         self._stats["misses"] += 1
-        cls = PreparedJoinQuery if join else PreparedQuery
+        cls = (PreparedCatalogQuery if catalog
+               else PreparedJoinQuery if join else PreparedQuery)
         prepared = cls(self, serving, ci, shape, has_plan=has_plan)
         self._cache[key] = prepared
         if len(self._cache) > self._plan_cache_size:
@@ -423,6 +532,8 @@ class PassEngine:
         out = dict(self._stats, entries=len(self._cache), epoch=self.epoch)
         if self._coalescer is not None:
             out["coalescer"] = self._coalescer.stats()
+        if getattr(self._source, "is_catalog_source", False):
+            out["catalog"] = self._source.stats()
         return out
 
     # -- serving -----------------------------------------------------------
@@ -439,6 +550,9 @@ class PassEngine:
                  else tuple(queries_or_shape))
         if len(shape) != 2:
             raise ValueError(f"expected a (Q, d) batch shape, got {shape}")
+        if self._catalog_selective():
+            sv, cfg = self._effective_catalog(kinds, ci, serving)
+            return self._lookup(shape, sv, cfg, catalog=True)
         sv, cfg = self._effective(kinds, ci, serving)
         return self._lookup(shape, sv, cfg)
 
@@ -457,8 +571,16 @@ class PassEngine:
         instead of bypassing the cache — ``stats()`` hits/misses stay
         truthful either way.
         """
-        sv, cfg = self._effective(kinds, ci, serving)
         shape = tuple(queries.lo.shape)
+        if self._catalog_selective():
+            if plan is not None:
+                raise ValueError(
+                    "plan= is not supported with a budgeted catalog "
+                    "source; planner masks are per-stratum of ONE synopsis "
+                    "while the partition tier re-stacks strata per batch")
+            sv, cfg = self._effective_catalog(kinds, ci, serving)
+            return self._lookup(shape, sv, cfg, catalog=True)(queries)
+        sv, cfg = self._effective(kinds, ci, serving)
         if plan is not None:
             return self._lookup(shape, sv, cfg, has_plan=True)(
                 queries, _executor.plan_to_masks(plan))
@@ -579,4 +701,5 @@ class PassEngine:
             queries)
 
 
-__all__ = ["PassEngine", "PreparedQuery", "PreparedJoinQuery"]
+__all__ = ["PassEngine", "PreparedQuery", "PreparedJoinQuery",
+           "PreparedCatalogQuery"]

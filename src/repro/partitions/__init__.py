@@ -1,0 +1,36 @@
+"""Partition-selection tier: sketch-guided stratum materialization for
+data far larger than any one synopsis (DESIGN.md §14).
+
+The tier sits ABOVE ``build_synopsis``. A cheap mergeable
+:class:`PartitionCatalog` of per-partition summary sketches (row count,
+per-column boxes and moments, a small histogram, measure aggregates) is
+maintained in one vectorized pass per partition — the only thing that
+ever has to see every row. At query time :func:`pick_partitions` prunes
+guaranteed-disjoint partitions exactly, answers guaranteed-covered ones
+exactly from the catalog, and samples the overlapping remainder by
+weighted importance with recorded inclusion probabilities; PASS synopses
+are materialized **only** for picked partitions and composed by
+Horvitz-Thompson reweighting with two-stage intervals
+(:func:`repro.uncertainty.compose_two_stage`).
+
+Front door: ``PassEngine.from_catalog(parts, catalog=CatalogConfig(...))``.
+"""
+from .catalog import (PartitionCatalog, empty_catalog, partition_stats,
+                      combine_catalogs, global_bin_edges, build_catalog)
+from .store import PartitionStore, partition_rows
+from .picker import (Selection, classify_partitions, importance_weights,
+                     waterfill_pi, pick_partitions)
+from .executor import (CATALOG_KINDS, stack_synopses,
+                       pad_partition_synopsis, empty_partition_synopsis)
+from .source import CatalogSource
+
+__all__ = [
+    "PartitionCatalog", "empty_catalog", "partition_stats",
+    "combine_catalogs", "global_bin_edges", "build_catalog",
+    "PartitionStore", "partition_rows",
+    "Selection", "classify_partitions", "importance_weights",
+    "waterfill_pi", "pick_partitions",
+    "CATALOG_KINDS", "stack_synopses", "pad_partition_synopsis",
+    "empty_partition_synopsis",
+    "CatalogSource",
+]

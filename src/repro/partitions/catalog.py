@@ -1,0 +1,251 @@
+"""Per-partition summary-statistics catalog (DESIGN.md §14; PS3-style
+sketches above the PASS tree).
+
+A :class:`PartitionCatalog` holds, for each of P storage partitions, the
+cheap statistics a picker needs to decide *whether the partition can
+matter to a predicate at all* and *how much it is likely to contribute*:
+
+* row count and per-column min/max boxes — exact pruning: a partition
+  whose box is disjoint from (resp. contained in) a query rectangle is
+  guaranteed-irrelevant (resp. answered exactly from the measure
+  aggregates below, no synopsis needed);
+* per-column SUM/SUMSQ moments and an equal-width histogram sketch over
+  fixed global bin edges — selectivity estimation for the importance
+  weights of overlapping partitions;
+* measure [SUM, SUMSQ, COUNT, MIN, MAX] in the standard aggregate
+  layout — exact covered answers, deterministic §2.3 hard bounds at
+  partition granularity, and the E[a²] scale term of the weights.
+
+Everything is computed in ONE vectorized pass over a partition's rows
+(:func:`partition_stats`) and every field is a mergeable summary
+(additive, or min/max — :func:`combine_catalogs`), so the sharded ingest
+path can maintain a catalog with the same psum/pmin/pmax combine it uses
+for the synopsis state (``repro.sharded.catalog``). The histogram's bin
+edges are fixed per catalog (meta, not data) precisely so that merging
+stays pointwise addition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.types import (NUM_AGGS, AGG_SUM, AGG_SUMSQ, AGG_COUNT,
+                          AGG_MIN, AGG_MAX)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["n", "col_lo", "col_hi", "col_sum", "col_sumsq",
+                      "hist", "m_agg", "bin_lo", "bin_hi"],
+         meta_fields=["num_partitions", "d", "bins"])
+@dataclasses.dataclass
+class PartitionCatalog:
+    """Stacked per-partition sketches (all arrays leading-dim P).
+
+    Empty partitions carry the inverted box (+inf lo, -inf hi) and
+    +inf/-inf measure extremes, matching the empty-leaf convention of the
+    synopsis builder, so they classify as guaranteed-disjoint against any
+    query. ``bin_lo``/``bin_hi`` are the (d,) global histogram edges;
+    two catalogs merge iff their edges (and meta) match.
+    """
+    n: jax.Array          # (P,) f32 row counts
+    col_lo: jax.Array     # (P, d) f32 per-column minima
+    col_hi: jax.Array     # (P, d) f32 per-column maxima
+    col_sum: jax.Array    # (P, d) f32
+    col_sumsq: jax.Array  # (P, d) f32
+    hist: jax.Array       # (P, d, bins) f32 equal-width bin counts
+    m_agg: jax.Array      # (P, NUM_AGGS) f32 measure aggregates
+    bin_lo: jax.Array     # (d,) f32 global histogram lower edges
+    bin_hi: jax.Array     # (d,) f32 global histogram upper edges
+    num_partitions: int
+    d: int
+    bins: int
+
+    @property
+    def total_rows(self) -> float:
+        return float(jnp.sum(self.n))
+
+
+def empty_catalog(num_partitions: int, d: int, bins: int,
+                  bin_lo, bin_hi) -> PartitionCatalog:
+    """All-empty catalog: the identity element of :func:`combine_catalogs`."""
+    p = int(num_partitions)
+    m_agg = jnp.zeros((p, NUM_AGGS), jnp.float32)
+    m_agg = m_agg.at[:, AGG_MIN].set(jnp.inf).at[:, AGG_MAX].set(-jnp.inf)
+    return PartitionCatalog(
+        n=jnp.zeros((p,), jnp.float32),
+        col_lo=jnp.full((p, d), jnp.inf, jnp.float32),
+        col_hi=jnp.full((p, d), -jnp.inf, jnp.float32),
+        col_sum=jnp.zeros((p, d), jnp.float32),
+        col_sumsq=jnp.zeros((p, d), jnp.float32),
+        hist=jnp.zeros((p, d, bins), jnp.float32),
+        m_agg=m_agg,
+        bin_lo=jnp.asarray(bin_lo, jnp.float32).reshape(d),
+        bin_hi=jnp.asarray(bin_hi, jnp.float32).reshape(d),
+        num_partitions=p, d=int(d), bins=int(bins))
+
+
+@partial(jax.jit, static_argnames=("num_partitions", "bins"))
+def partition_stats(c, a, pid, num_partitions: int, *, bins: int,
+                    bin_lo, bin_hi, mask=None) -> PartitionCatalog:
+    """One vectorized (and traceable) pass: rows -> per-partition sketches.
+
+    ``c`` (B, d) predicate columns, ``a`` (B,) measure, ``pid`` (B,)
+    int partition ids in [0, P). ``mask`` (B,) bool drops padding rows
+    (the sharded path deals rows out in fixed-size blocks). Runs under
+    jit/shard_map — all scatters go through one dummy row at index P
+    so masked rows never touch a real partition.
+    """
+    p = int(num_partitions)
+    c = jnp.asarray(c, jnp.float32)
+    if c.ndim == 1:
+        c = c[:, None]
+    a = jnp.asarray(a, jnp.float32).reshape(-1)
+    pid = jnp.asarray(pid, jnp.int32).reshape(-1)
+    d = c.shape[1]
+    if mask is None:
+        mask = jnp.ones(a.shape, bool)
+    idx = jnp.where(mask, pid, p)                          # dummy slot p
+    w = mask.astype(jnp.float32)
+    inf = jnp.float32(jnp.inf)
+
+    def _scat_add(shape, target_idx, vals):
+        return jnp.zeros(shape, jnp.float32).at[target_idx].add(vals)[:p]
+
+    n = _scat_add((p + 1,), idx, w)
+    col_sum = _scat_add((p + 1, d), idx, c * w[:, None])
+    col_sumsq = _scat_add((p + 1, d), idx, (c * c) * w[:, None])
+    c_masked_lo = jnp.where(mask[:, None], c, inf)
+    c_masked_hi = jnp.where(mask[:, None], c, -inf)
+    col_lo = jnp.full((p + 1, d), inf, jnp.float32
+                      ).at[idx].min(c_masked_lo)[:p]
+    col_hi = jnp.full((p + 1, d), -inf, jnp.float32
+                      ).at[idx].max(c_masked_hi)[:p]
+
+    blo = jnp.asarray(bin_lo, jnp.float32).reshape(d)
+    bhi = jnp.asarray(bin_hi, jnp.float32).reshape(d)
+    width = jnp.maximum(bhi - blo, 1e-30)
+    b = jnp.clip(((c - blo) / width * bins).astype(jnp.int32), 0, bins - 1)
+    flat = idx[:, None] * (d * bins) + jnp.arange(d)[None] * bins + b
+    hist = jnp.zeros(((p + 1) * d * bins,), jnp.float32).at[
+        flat.reshape(-1)].add(jnp.broadcast_to(w[:, None], (w.shape[0], d)
+                                               ).reshape(-1))
+    hist = hist[:p * d * bins].reshape(p, d, bins)
+
+    m_sum = _scat_add((p + 1,), idx, a * w)
+    m_sumsq = _scat_add((p + 1,), idx, a * a * w)
+    m_min = jnp.full((p + 1,), inf, jnp.float32
+                     ).at[idx].min(jnp.where(mask, a, inf))[:p]
+    m_max = jnp.full((p + 1,), -inf, jnp.float32
+                     ).at[idx].max(jnp.where(mask, a, -inf))[:p]
+    m_agg = jnp.stack([m_sum, m_sumsq, n, m_min, m_max], axis=1)
+
+    return PartitionCatalog(
+        n=n, col_lo=col_lo, col_hi=col_hi, col_sum=col_sum,
+        col_sumsq=col_sumsq, hist=hist, m_agg=m_agg,
+        bin_lo=blo, bin_hi=bhi,
+        num_partitions=p, d=d, bins=int(bins))
+
+
+def combine_catalogs(x: PartitionCatalog, y: PartitionCatalog
+                     ) -> PartitionCatalog:
+    """Mergeable-summary combine: counts/sums/histograms add, boxes and
+    measure extremes min/max. Traceable (used verbatim inside the sharded
+    psum merge)."""
+    if (x.num_partitions, x.d, x.bins) != (y.num_partitions, y.d, y.bins):
+        raise ValueError(
+            f"catalog shapes differ: P/d/bins "
+            f"{(x.num_partitions, x.d, x.bins)} vs "
+            f"{(y.num_partitions, y.d, y.bins)}")
+    m_agg = jnp.concatenate(
+        [x.m_agg[:, 0:3] + y.m_agg[:, 0:3],
+         jnp.minimum(x.m_agg[:, 3:4], y.m_agg[:, 3:4]),
+         jnp.maximum(x.m_agg[:, 4:5], y.m_agg[:, 4:5])], axis=1)
+    return dataclasses.replace(
+        x, n=x.n + y.n,
+        col_lo=jnp.minimum(x.col_lo, y.col_lo),
+        col_hi=jnp.maximum(x.col_hi, y.col_hi),
+        col_sum=x.col_sum + y.col_sum,
+        col_sumsq=x.col_sumsq + y.col_sumsq,
+        hist=x.hist + y.hist, m_agg=m_agg)
+
+
+def global_bin_edges(parts) -> tuple[np.ndarray, np.ndarray]:
+    """Global per-column [min, max] over a list of (c, a) partitions — the
+    fixed histogram edges every sketch of the catalog shares."""
+    los, his = [], []
+    for c, _a in parts:
+        c2 = np.asarray(c, np.float64)
+        if c2.ndim == 1:
+            c2 = c2[:, None]
+        if c2.shape[0]:
+            los.append(c2.min(axis=0))
+            his.append(c2.max(axis=0))
+    if not los:
+        raise ValueError("cannot derive histogram edges from empty data")
+    lo = np.min(np.stack(los), axis=0)
+    hi = np.max(np.stack(his), axis=0)
+    # Degenerate columns still need a nonzero bin width.
+    hi = np.where(hi > lo, hi, lo + 1.0)
+    return lo.astype(np.float32), hi.astype(np.float32)
+
+
+def build_catalog(parts, *, bins: int = 16,
+                  bin_lo=None, bin_hi=None) -> PartitionCatalog:
+    """Catalog over a list of ``(c, a)`` partitions: one vectorized stats
+    pass per partition on host (partition blocks are already contiguous,
+    so plain reductions beat device scatters here). Incremental /
+    device-resident maintenance goes through the traceable
+    :func:`partition_stats` + :func:`combine_catalogs` instead.
+    ``bin_lo``/``bin_hi`` override the derived global edges (pass them
+    when partitions arrive incrementally)."""
+    if bin_lo is None or bin_hi is None:
+        bin_lo, bin_hi = global_bin_edges(parts)
+    p = len(parts)
+    c0 = np.asarray(parts[0][0])
+    d = 1 if c0.ndim == 1 else c0.shape[1]
+    blo = np.asarray(bin_lo, np.float64).reshape(d)
+    bhi = np.asarray(bin_hi, np.float64).reshape(d)
+    width = np.maximum(bhi - blo, 1e-30)
+    n = np.zeros(p, np.float32)
+    col_lo = np.full((p, d), np.inf, np.float32)
+    col_hi = np.full((p, d), -np.inf, np.float32)
+    col_sum = np.zeros((p, d), np.float32)
+    col_sumsq = np.zeros((p, d), np.float32)
+    hist = np.zeros((p, d, bins), np.float32)
+    m_agg = np.zeros((p, NUM_AGGS), np.float32)
+    m_agg[:, AGG_MIN] = np.inf
+    m_agg[:, AGG_MAX] = -np.inf
+    for i, (c, a) in enumerate(parts):
+        c2 = np.asarray(c, np.float64)
+        if c2.ndim == 1:
+            c2 = c2[:, None]
+        a1 = np.asarray(a, np.float64).reshape(-1)
+        if not a1.shape[0]:
+            continue
+        n[i] = a1.shape[0]
+        col_lo[i] = c2.min(axis=0)
+        col_hi[i] = c2.max(axis=0)
+        col_sum[i] = c2.sum(axis=0)
+        col_sumsq[i] = (c2 * c2).sum(axis=0)
+        b = np.clip(((c2 - blo) / width * bins).astype(np.int64),
+                    0, bins - 1)
+        for dd in range(d):
+            hist[i, dd] = np.bincount(b[:, dd], minlength=bins)
+        m_agg[i] = (a1.sum(), (a1 * a1).sum(), a1.shape[0],
+                    a1.min(), a1.max())
+    return PartitionCatalog(
+        n=jnp.asarray(n), col_lo=jnp.asarray(col_lo),
+        col_hi=jnp.asarray(col_hi), col_sum=jnp.asarray(col_sum),
+        col_sumsq=jnp.asarray(col_sumsq), hist=jnp.asarray(hist),
+        m_agg=jnp.asarray(m_agg),
+        bin_lo=jnp.asarray(blo, jnp.float32),
+        bin_hi=jnp.asarray(bhi, jnp.float32),
+        num_partitions=p, d=int(d), bins=int(bins))
+
+
+__all__ = ["PartitionCatalog", "partition_stats", "combine_catalogs",
+           "empty_catalog", "build_catalog", "global_bin_edges"]

@@ -1,0 +1,289 @@
+"""Catalog-tier serving: one artifact pass over stacked partition
+synopses + Horvitz–Thompson composition (DESIGN.md §14).
+
+The selected partitions' PASS synopses are built with uniform shapes
+(fixed k strata x s samples, enforced by :class:`~repro.api.CatalogConfig`)
+so they **stack** along the stratum axis into one pseudo-synopsis of
+``P_sel·k`` strata. The artifact stage (``compute_artifacts``) never
+touches the aggregate tree, only the leaf/sample arrays, so the stacked
+view rides the exact same classification + moment kernels as flat
+serving — ONE kernel dispatch per batch regardless of how many
+partitions were picked. Per-partition terms are then recovered by
+reshaping the (Q, P_sel·k) artifact arrays to (Q, P_sel, k) and reducing
+the stratum axis, and composed as
+
+    estimate(q) = exact_covered(q) + sum_{p in S∩O(q)} t_hat_qp / pi_p
+
+with the two-stage variance of :func:`repro.uncertainty.compose_two_stage`
+stacked on the within-stratum CLT/Bernstein terms, and §2.3 hard bounds
+evaluated at **catalog** granularity (valid under any selection — they
+cover the unpicked mass too). Estimates and interval endpoints are
+clipped into those bounds, which also tames the 1/pi variance of rarely
+picked partitions.
+
+The selected-partition count is padded to a power of two with empty
+partition blocks (zero rows, pi=1, masked out of every query) so the
+number of distinct compiled programs stays O(log P).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import (Synopsis, PartitionTree, QueryResult,
+                          NUM_AGGS, AGG_SUM, AGG_COUNT, AGG_MIN, AGG_MAX)
+from ..engine import executor as _executor
+from ..uncertainty.intervals import (_z_of, _stratum_terms, _fallback_half,
+                                     compose_two_stage)
+
+CATALOG_KINDS = ("sum", "count", "avg")
+
+_BIG = jnp.float32(3.4e38)
+
+
+def _dummy_tree(d: int) -> PartitionTree:
+    """1-node placeholder tree: the stacked pseudo-synopsis is served by
+    the artifact stage only, which never reads the tree."""
+    i32 = jnp.int32
+    return PartitionTree(
+        lo=jnp.full((1, d), jnp.inf, jnp.float32),
+        hi=jnp.full((1, d), -jnp.inf, jnp.float32),
+        agg=jnp.zeros((1, NUM_AGGS), jnp.float32),
+        left=jnp.full((1,), -1, i32), right=jnp.full((1,), -1, i32),
+        leaf_id=jnp.full((1,), -1, i32), level=jnp.zeros((1,), i32))
+
+
+def empty_partition_synopsis(k: int, s: int, d: int) -> Synopsis:
+    """All-empty uniform-shape partition synopsis (the pow2 pad block):
+    inverted leaf boxes classify REL_NONE against every query, invalid
+    samples contribute zero moments — an exact no-op partition."""
+    agg = jnp.zeros((k, NUM_AGGS), jnp.float32)
+    agg = agg.at[:, AGG_MIN].set(jnp.inf).at[:, AGG_MAX].set(-jnp.inf)
+    return Synopsis(
+        leaf_lo=jnp.full((k, d), jnp.inf, jnp.float32),
+        leaf_hi=jnp.full((k, d), -jnp.inf, jnp.float32),
+        leaf_agg=agg,
+        n_rows=jnp.zeros((k,), jnp.float32),
+        sample_c=jnp.zeros((k, s, d), jnp.float32),
+        sample_a=jnp.zeros((k, s), jnp.float32),
+        sample_valid=jnp.zeros((k, s), bool),
+        k_per_leaf=jnp.zeros((k,), jnp.int32),
+        tree=_dummy_tree(d), num_leaves=k, d=d,
+        total_rows=jnp.asarray(0.0, jnp.float32))
+
+
+def pad_partition_synopsis(syn: Synopsis, k: int, d: int) -> Synopsis:
+    """Pad a partition synopsis whose realized stratum count came in under
+    the configured uniform ``k`` (kd partitioning realizes <= requested
+    leaves) with empty strata, so every partition stacks at shape k."""
+    k0 = int(syn.num_leaves)
+    if k0 == k:
+        return syn
+    if k0 > k:
+        raise ValueError(f"partition synopsis has {k0} strata > k={k}")
+    s = syn.sample_a.shape[1]
+    pad = empty_partition_synopsis(k - k0, s, d)
+    cat = lambda get: jnp.concatenate([get(syn), get(pad)], axis=0)
+    return dataclasses.replace(
+        syn,
+        leaf_lo=cat(lambda b: b.leaf_lo),
+        leaf_hi=cat(lambda b: b.leaf_hi),
+        leaf_agg=cat(lambda b: b.leaf_agg),
+        n_rows=cat(lambda b: b.n_rows),
+        sample_c=cat(lambda b: b.sample_c),
+        sample_a=cat(lambda b: b.sample_a),
+        sample_valid=cat(lambda b: b.sample_valid),
+        k_per_leaf=cat(lambda b: b.k_per_leaf),
+        tree=_dummy_tree(d), num_leaves=k)
+
+
+def stack_synopses(syns, pad_to: int, k: int, s: int, d: int) -> Synopsis:
+    """Stack uniform-shape partition synopses along the stratum axis into
+    one pseudo-synopsis of ``pad_to * k`` strata (empty blocks pad the
+    tail)."""
+    if len(syns) > pad_to:
+        raise ValueError(f"{len(syns)} synopses > pad_to={pad_to}")
+    blocks = list(syns) + [empty_partition_synopsis(k, s, d)
+                           for _ in range(pad_to - len(syns))]
+    cat = lambda get: jnp.concatenate([get(b) for b in blocks], axis=0)
+    return Synopsis(
+        leaf_lo=cat(lambda b: b.leaf_lo),
+        leaf_hi=cat(lambda b: b.leaf_hi),
+        leaf_agg=cat(lambda b: b.leaf_agg),
+        n_rows=cat(lambda b: b.n_rows),
+        sample_c=cat(lambda b: b.sample_c),
+        sample_a=cat(lambda b: b.sample_a),
+        sample_valid=cat(lambda b: b.sample_valid),
+        k_per_leaf=cat(lambda b: b.k_per_leaf),
+        tree=_dummy_tree(d), num_leaves=pad_to * k, d=d,
+        total_rows=sum((b.total_rows for b in blocks),
+                       jnp.asarray(0.0, jnp.float32)))
+
+
+def _linear_leaf_terms(syn, art, kind):
+    """(Q, kt) exact + sampled per-stratum contribution terms of one
+    linear kind over the stacked pseudo-synopsis."""
+    leaf_agg = syn.leaf_agg.astype(jnp.float32)
+    Ni = syn.n_rows.astype(jnp.float32)[None]
+    Ki = jnp.maximum(syn.k_per_leaf.astype(jnp.float32)[None], 1.0)
+    if kind == "sum":
+        leaf_val = leaf_agg[:, AGG_SUM][None]
+        est_l = Ni / Ki * art.s_sum
+    else:
+        leaf_val = leaf_agg[:, AGG_COUNT][None]
+        est_l = Ni / Ki * art.k_pred
+    exact_l = jnp.where(art.cover, leaf_val, 0.0)
+    samp_l = jnp.where(art.partial, est_l, 0.0)
+    return exact_l, samp_l
+
+
+def _cov_sc_leaf(syn, art, use_fpc):
+    """(Q, kt) per-stratum SUM/COUNT delta-method covariance (the
+    avg_ratio_terms formula, reproduced here so the catalog path composes
+    the same cross term the flat ratio CI uses)."""
+    Ni = syn.n_rows.astype(jnp.float32)[None]
+    k_leaf = syn.k_per_leaf.astype(jnp.float32)[None]
+    Ki = jnp.maximum(k_leaf, 1.0)
+    n = jnp.maximum(Ni, 1.0)
+    fpc = jnp.clip((n - k_leaf) / jnp.maximum(n - 1.0, 1.0), 0.0, 1.0) \
+        if use_fpc else jnp.ones_like(Ni)
+    p = art.k_pred / Ki
+    return Ni * Ni * (art.s_sum / Ki) * (1.0 - p) / Ki * fpc
+
+
+def _sum_bounds(cat_m_agg, cat_cover, cat_overlap):
+    """Catalog-granularity §2.3 hard bounds for SUM — valid under any
+    partition selection (they bound the unpicked overlap mass too)."""
+    S = cat_m_agg[:, AGG_SUM][None]
+    n = cat_m_agg[:, AGG_COUNT][None]
+    m = cat_m_agg[:, AGG_MIN][None]
+    M = cat_m_agg[:, AGG_MAX][None]
+    p_ub = jnp.minimum(n * jnp.maximum(M, 0.0),
+                       S - n * jnp.minimum(m, 0.0))
+    p_lb = jnp.maximum(n * jnp.minimum(m, 0.0),
+                       S - n * jnp.maximum(M, 0.0))
+    exact = jnp.sum(cat_cover * S, axis=1)
+    return (exact + jnp.sum(cat_overlap * p_lb, axis=1),
+            exact + jnp.sum(cat_overlap * p_ub, axis=1))
+
+
+def _count_bounds(cat_m_agg, cat_cover, cat_overlap):
+    n = cat_m_agg[:, AGG_COUNT][None]
+    exact = jnp.sum(cat_cover * n, axis=1)
+    return exact, exact + jnp.sum(cat_overlap * n, axis=1)
+
+
+@partial(jax.jit, static_argnames=("kinds", "k_part", "level",
+                                   "small_n_threshold", "use_fpc",
+                                   "delta_budget", "backend_name"))
+def _catalog_answer_jit(syn, queries, lam, pi, ov_sel, cat_cover,
+                        cat_overlap, cat_m_agg, total_rows, kinds, k_part,
+                        level, small_n_threshold, use_fpc, delta_budget,
+                        backend_name):
+    """One compiled program per (kinds x P_pad x Q): one artifact pass
+    over the stacked partitions feeding every kind's HT composition.
+
+    ``pi`` (P_pad,), ``ov_sel`` (Q, P_pad) mask the *stacked* partitions;
+    ``cat_cover``/``cat_overlap`` (Q, P_cat) and ``cat_m_agg``
+    (P_cat, NUM_AGGS) carry the catalog-level exact terms and bounds over
+    ALL partitions (selected or not). ``level=None`` serves the plain
+    lam-scaled width (no Bernstein fallback split), mirroring the flat
+    ``_answer_jit`` / ``_ci_answer_jit`` pair in one entry.
+    """
+    art = _executor.compute_artifacts(syn, queries, kinds,
+                                      use_aggregates=True,
+                                      backend_name=backend_name,
+                                      plan_masks=None)
+    q = queries.lo.shape[0]
+    p_pad = syn.num_leaves // k_part
+    per_part = lambda x: x.reshape(q, p_pad, k_part).sum(axis=2)
+
+    z = lam if level is None else _z_of(level)
+    sampled = art.partial
+    if level is None:
+        fb = jnp.zeros_like(sampled)
+        log_term = jnp.float32(0.0)
+    else:
+        fb = sampled & (art.k_pred < float(small_n_threshold))
+        n_fb = jnp.sum(fb.astype(jnp.float32), axis=1)
+        delta = 1.0 - level
+        if delta_budget == "union":
+            log_term = jnp.log(3.0 * jnp.maximum(n_fb, 1.0) / delta)[:, None]
+        else:
+            log_term = jnp.float32(jnp.log(3.0 / delta))
+    cltf = (sampled & ~fb).astype(jnp.float32)
+
+    total = jnp.maximum(total_rows, 1.0)
+    rel_cat = jnp.maximum(cat_cover, cat_overlap)
+    touched = jnp.sum(rel_cat * cat_m_agg[:, AGG_COUNT][None],
+                      axis=1) / total
+
+    def linear(kind):
+        exact_l, samp_l = _linear_leaf_terms(syn, art, kind)
+        t_qp = per_part(exact_l + samp_l)
+        v_clt, var_hat, r_hi, r_lo, ns_half = _stratum_terms(
+            syn, art, kind, use_fpc)
+        v_qp = per_part(cltf * v_clt)
+        h_l = _fallback_half(syn, var_hat, r_hi, r_lo, ns_half, log_term)
+        h_qp = per_part(jnp.where(fb, h_l, 0.0))
+        ht, half, v = compose_two_stage(t_qp, v_qp, h_qp, pi, ov_sel, z)
+        key = AGG_SUM if kind == "sum" else AGG_COUNT
+        exact_cov = jnp.sum(cat_cover * cat_m_agg[:, key][None], axis=1)
+        return exact_cov, ht, half, v, h_qp
+
+    out = {}
+    for kind in kinds:
+        if kind in ("sum", "count"):
+            exact_cov, ht, half, _v, _h = linear(kind)
+            lower, upper = (_sum_bounds if kind == "sum" else _count_bounds)(
+                cat_m_agg, cat_cover, cat_overlap)
+            est = jnp.clip(exact_cov + ht, lower, upper)
+            res = QueryResult(est, half, lower, upper, touched)
+            if level is not None:
+                res = dataclasses.replace(
+                    res, ci_lo=jnp.clip(est - half, lower, upper),
+                    ci_hi=jnp.clip(est + half, lower, upper))
+            out[kind] = res
+        elif kind == "avg":
+            exact_s, ht_s, _hs, v_s, hq_s = linear("sum")
+            exact_c, ht_c, _hc, v_c, hq_c = linear("count")
+            s_tot = exact_s + ht_s
+            c_tot = jnp.maximum(exact_c + ht_c, 1.0)
+            est = s_tot / c_tot
+            # Two-stage SUM/COUNT covariance, same structure as the
+            # variances composed above.
+            t_s = per_part(sum(_linear_leaf_terms(syn, art, "sum")))
+            t_c = per_part(sum(_linear_leaf_terms(syn, art, "count")))
+            csc_qp = per_part(cltf * _cov_sc_leaf(syn, art, use_fpc))
+            pi_ = jnp.maximum(pi, 1e-6)[None]
+            csc = jnp.sum(ov_sel * ((1.0 - pi_) * t_s * t_c + csc_qp)
+                          / (pi_ * pi_), axis=1)
+            var_ratio = jnp.maximum(v_s - 2 * est * csc + est * est * v_c,
+                                    0.0) / (c_tot * c_tot)
+            h_s = jnp.sum(ov_sel * hq_s / pi_, axis=1)
+            h_c = jnp.sum(ov_sel * hq_c / pi_, axis=1)
+            half = z * jnp.sqrt(var_ratio) \
+                + (h_s + jnp.abs(est) * h_c) / jnp.maximum(c_tot - h_c, 1.0)
+            rel = jnp.maximum(cat_cover, cat_overlap)
+            upper = jnp.max(jnp.where(rel > 0, cat_m_agg[:, AGG_MAX][None],
+                                      -_BIG), axis=1)
+            lower = jnp.min(jnp.where(rel > 0, cat_m_agg[:, AGG_MIN][None],
+                                      _BIG), axis=1)
+            res = QueryResult(est, half, lower, upper, touched)
+            if level is not None:
+                res = dataclasses.replace(
+                    res, ci_lo=jnp.clip(est - half, lower, upper),
+                    ci_hi=jnp.clip(est + half, lower, upper))
+            out[kind] = res
+        else:
+            raise ValueError(
+                f"catalog serving supports kinds {CATALOG_KINDS}, "
+                f"got {kind!r}")
+    return out
+
+
+__all__ = ["CATALOG_KINDS", "stack_synopses", "pad_partition_synopsis",
+           "empty_partition_synopsis", "_catalog_answer_jit"]

@@ -1,0 +1,194 @@
+"""`CatalogSource`: the engine-facing partition tier (DESIGN.md §14).
+
+Sits where a Synopsis or streaming ingestor would as a ``PassEngine``
+source, but holds a :class:`~repro.partitions.PartitionStore` plus its
+sketch catalog and decides **per query batch** which partitions deserve a
+PASS synopsis at all:
+
+* **dense mode** (``max_partitions=None`` or >= the partition count):
+  every partition would always be picked with probability 1, so the tier
+  collapses to flat serving — ``as_synopsis()`` lazily builds ONE flat
+  synopsis over the concatenated rows with the engine's ``build_kw``.
+  Because :class:`PartitionStore` preserves row order, this is
+  bit-identical to never having partitioned the data (the p=1 property
+  the tests pin down), and the engine serves it through the ordinary
+  prepared-query path.
+* **selective mode** (a real budget): ``stage(queries)`` runs the picker,
+  materializes PASS synopses only for the picked partitions (LRU-cached
+  under ``max_resident``), stacks them into the pseudo-synopsis, and
+  returns the dynamic argument tuple of the catalog serving entry.
+  Covered and disjoint partitions are pruned exactly — they never cost a
+  synopsis build.
+
+Each ``stage`` call draws a fresh selection (seed advances
+deterministically), so repeated answers over the same batch realize the
+partition-sampling design the two-stage intervals account for.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from collections import OrderedDict
+
+from ..core.synopsis import (build_synopsis, partition_assign,
+                             synopsis_from_assignment)
+from .catalog import build_catalog
+from .executor import (stack_synopses, pad_partition_synopsis,
+                       empty_partition_synopsis)
+from .picker import pick_partitions
+from .store import PartitionStore
+
+
+class CatalogSource:
+    """Partition-tier serving source over a :class:`PartitionStore`.
+
+    ``config`` is a frozen :class:`repro.api.CatalogConfig` (per-partition
+    synopsis shape k x s_per_leaf, selection budget, LRU capacity, sketch
+    resolution); ``build_kw`` forwards to the flat ``build_synopsis`` on
+    the dense path only.
+    """
+
+    is_catalog_source = True
+
+    def __init__(self, store: PartitionStore, config, build_kw=None):
+        self.store = store
+        self.config = config
+        self._build_kw = dict(build_kw or {})
+        self._catalog = None
+        self._flat = None
+        self._resident: OrderedDict[int, object] = OrderedDict()
+        self._built: set[int] = set()
+        self._draws = 0
+        self._epoch = 0
+        self._stats = {"materialized": 0, "hits": 0, "evictions": 0,
+                       "served_batches": 0}
+
+    # -- catalog / mode ----------------------------------------------------
+    @property
+    def catalog(self):
+        """Sketch catalog over every partition, built once on first use
+        (one vectorized pass over the store)."""
+        if self._catalog is None:
+            self._catalog = build_catalog(self.store.parts(),
+                                          bins=self.config.bins)
+        return self._catalog
+
+    @property
+    def serves_flat(self) -> bool:
+        """True when the budget admits every partition: the selection is
+        deterministic (pi=1 everywhere) and flat serving is exact."""
+        m = self.config.max_partitions
+        return m is None or m >= self.store.num_partitions
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def invalidate(self) -> None:
+        """Drop every derived artifact (catalog, flat synopsis, resident
+        partition synopses) and bump the epoch so prepared plans re-pin."""
+        self._catalog = None
+        self._flat = None
+        self._resident.clear()
+        self._epoch += 1
+
+    def as_synopsis(self):
+        """Dense-path serving synopsis: the flat build over all rows."""
+        if not self.serves_flat:
+            raise ValueError(
+                "CatalogSource with a partition budget serves through "
+                "stage(), not a flat synopsis; raise max_partitions to "
+                "cover every partition for dense serving")
+        if self._flat is None:
+            c, a = self.store.all_rows()
+            self._flat, _report = build_synopsis(c, a, **self._build_kw)
+        return self._flat
+
+    # -- materialization ---------------------------------------------------
+    def _materialize(self, p: int):
+        cached = self._resident.get(p)
+        if cached is not None:
+            self._resident.move_to_end(p)
+            self._stats["hits"] += 1
+            return cached
+        cfg = self.config
+        c, a = self.store.rows(p)
+        if c.shape[0] == 0:
+            syn = empty_partition_synopsis(cfg.k, cfg.s_per_leaf,
+                                           self.store.d)
+        else:
+            # Per-partition seeds keep every build independent and
+            # reproducible regardless of pick order.
+            assign, k_real, _vmax = partition_assign(
+                c, a, k=cfg.k, method=cfg.method, seed=cfg.seed + p)
+            syn, _info = synopsis_from_assignment(
+                c, a, assign, k_real, s_per_leaf=cfg.s_per_leaf,
+                seed=cfg.seed + p + 1)
+            syn = pad_partition_synopsis(syn, cfg.k, self.store.d)
+        self._resident[p] = syn
+        self._built.add(p)
+        self._stats["materialized"] += 1
+        return syn
+
+    def _capacity(self) -> int:
+        cfg = self.config
+        if cfg.max_resident is not None:
+            return int(cfg.max_resident)
+        if cfg.max_partitions is not None:
+            return max(2 * int(cfg.max_partitions), 8)
+        return self.store.num_partitions
+
+    def _evict(self, keep: set) -> None:
+        cap = self._capacity()
+        for p in [p for p in self._resident if p not in keep]:
+            if len(self._resident) <= cap:
+                break
+            del self._resident[p]
+            self._stats["evictions"] += 1
+
+    # -- staging -----------------------------------------------------------
+    def stage(self, queries, lam):
+        """Select + materialize + stack for one batch; returns the dynamic
+        argument tuple of ``_catalog_answer_jit``."""
+        cfg = self.config
+        q_lo = np.asarray(queries.lo, np.float64)
+        q_hi = np.asarray(queries.hi, np.float64)
+        cat = self.catalog
+        sel = pick_partitions(cat, q_lo, q_hi, budget=cfg.max_partitions,
+                              pi_floor=cfg.pi_floor,
+                              seed=cfg.seed + self._draws)
+        self._draws += 1
+        self._stats["served_batches"] += 1
+        picked = np.flatnonzero(sel.picked)
+        syns = [self._materialize(int(p)) for p in picked]
+        self._evict(set(int(p) for p in picked))
+        n_sel = len(picked)
+        p_pad = 1 << max(0, int(n_sel - 1).bit_length()) if n_sel else 1
+        stacked = stack_synopses(syns, p_pad, cfg.k, cfg.s_per_leaf,
+                                 self.store.d)
+        q = q_lo.shape[0]
+        pi = np.ones(p_pad, np.float32)
+        ov_sel = np.zeros((q, p_pad), np.float32)
+        if n_sel:
+            pi[:n_sel] = sel.pi[picked]
+            ov_sel[:, :n_sel] = sel.overlap[:, picked]
+        return (stacked, queries, jnp.float32(lam),
+                jnp.asarray(pi), jnp.asarray(ov_sel),
+                jnp.asarray(sel.cover, jnp.float32),
+                jnp.asarray(sel.overlap, jnp.float32),
+                jnp.asarray(cat.m_agg, jnp.float32),
+                jnp.asarray(float(cat.total_rows), jnp.float32))
+
+    # -- instrumentation ---------------------------------------------------
+    def stats(self) -> dict:
+        """Tier instrumentation: synopsis builds/LRU hits/evictions, batch
+        count, resident set size, and every partition id ever materialized
+        (the exact-pruning tests assert covered/disjoint ids never show
+        up here)."""
+        return dict(self._stats, resident=len(self._resident),
+                    num_partitions=self.store.num_partitions,
+                    materialized_ids=sorted(self._built))
+
+
+__all__ = ["CatalogSource"]

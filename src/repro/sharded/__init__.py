@@ -17,6 +17,7 @@ Entry points:
 from .mesh import SHARD_AXIS, data_mesh, num_shards, shard_leading, split_rows
 from .ingest import ShardedIngestor, init_sharded_state
 from .merge import merge_sharded
+from .catalog import catalog_delta_sharded
 from .build import (build_synopsis_sharded, fill_skeleton, skeleton_synopsis,
                     cut_skeleton_1d, cut_skeleton_kd, thresholds_to_boxes)
 from .reopt import (reoptimize_cuts_sharded, reoptimize_sharded,
@@ -25,6 +26,7 @@ from .reopt import (reoptimize_cuts_sharded, reoptimize_sharded,
 __all__ = [
     "SHARD_AXIS", "data_mesh", "num_shards", "shard_leading", "split_rows",
     "ShardedIngestor", "init_sharded_state", "merge_sharded",
+    "catalog_delta_sharded",
     "build_synopsis_sharded", "fill_skeleton", "skeleton_synopsis",
     "cut_skeleton_1d", "cut_skeleton_kd", "thresholds_to_boxes",
     "reoptimize_cuts_sharded", "reoptimize_sharded",

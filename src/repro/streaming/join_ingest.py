@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 from functools import partial
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -123,7 +124,7 @@ def _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root, p_u,
         u_count=jnp.minimum(jstate.u_count + mcnt, su),
         u_overflow=jstate.u_overflow
         + jnp.maximum(jstate.u_count + mcnt - su, 0))
-    return new_state, new_jstate
+    return new_state, new_jstate, member & ~ok
 
 
 @partial(jax.jit, static_argnames=("backend_name",))
@@ -142,6 +143,50 @@ def _join_ingest_step_keyed(state, jstate, c, a, rkey, keys, dim, key_root,
                              p_u, backend_name)
 
 
+@partial(jax.jit, static_argnames=("backend_name",))
+def _universe_regrow_step(state, jstate, c, a, keys, dim, key_root, p_u,
+                          backend_name):
+    """Append previously overflowed member rows into the (grown) universe
+    buffers. Universe-append ONLY: the rows' aggregates and cell deltas
+    were folded in at their original ingest, so neither the base state nor
+    ``cell_delta`` moves here. Accepted rows pay back ``u_overflow``."""
+    from ..joins.dim import dim_lookup
+    from ..joins.universe import universe_mask
+    be = get_backend(backend_name)
+    b, d = c.shape
+    if d == 1:
+        leaf, _dsel = _route_1d(state.leaf_lo, state.leaf_hi, c)
+    else:
+        leaf, _dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c)
+    k, su = jstate.u_a.shape
+    part, dattr, found = dim_lookup(dim, keys)
+    # Same pure membership function as the build/ingest paths: replayed
+    # rows re-derive the identical inclusion decision.
+    member = universe_mask(key_root, keys, p_u) & found
+    occ = _batch_occupancy(jnp.where(member, leaf, k))
+    slot = jstate.u_count[leaf] + occ
+    ok = member & (slot < su)
+    flat = jnp.where(ok, leaf * su + slot, k * su)
+
+    def put(buf, vals):
+        flat_buf = buf.reshape(k * su, *buf.shape[2:])
+        ext = jnp.concatenate(
+            [flat_buf, jnp.zeros((1, *buf.shape[2:]), buf.dtype)], axis=0)
+        return ext.at[flat].set(vals)[:k * su].reshape(buf.shape)
+
+    acc = jnp.zeros(k + 1, jnp.int32).at[jnp.where(ok, leaf, k)].add(1)[:k]
+    return dataclasses.replace(
+        jstate,
+        u_c=put(jstate.u_c, c.astype(jnp.float32)),
+        u_a=put(jstate.u_a, a.astype(jnp.float32)),
+        u_key=put(jstate.u_key, keys.astype(jnp.int32)),
+        u_dattr=put(jstate.u_dattr, dattr.astype(jnp.float32)),
+        u_part=put(jstate.u_part, part),
+        u_valid=put(jstate.u_valid, jnp.ones(b, bool)),
+        u_count=jstate.u_count + acc,
+        u_overflow=jnp.maximum(jstate.u_overflow - acc, 0))
+
+
 class JoinStreamingIngestor(StreamingIngestor):
     """Streaming front end over a :class:`~repro.joins.JoinSynopsis`.
 
@@ -149,6 +194,13 @@ class JoinStreamingIngestor(StreamingIngestor):
     ``as_synopsis()`` keeps serving the single-table view (the engine's
     plain ``answer`` path), ``as_join_synopsis()`` the join view — both
     cached per epoch.
+
+    Universe members that arrive after a stratum's buffer is full are not
+    lost: their rows are parked on host and the NEXT ingest epoch regrows
+    the buffer capacity and replays them (:meth:`regrow`), clearing the
+    ``u_overflow`` debt — the estimator only ever pays the truncation
+    fallback between the overflowing batch and the next one. (Overflow
+    recorded by the *build* has no parked rows and stays a fallback.)
     """
 
     def __init__(self, jsyn, *, seed: int = 0, key: jax.Array | None = None,
@@ -162,6 +214,8 @@ class JoinStreamingIngestor(StreamingIngestor):
             u_dattr=jsyn.u_dattr, u_part=jsyn.u_part, u_valid=jsyn.u_valid,
             u_count=jsyn.u_count, u_overflow=jsyn.u_overflow)
         self._jmerged = None
+        self._pending = []          # host (c, a, keys) of overflowed rows
+        self.n_regrown = 0
 
     def ingest(self, c_rows, a_vals, keys=None,
                u=None) -> "JoinStreamingIngestor":
@@ -176,17 +230,68 @@ class JoinStreamingIngestor(StreamingIngestor):
             c = jnp.reshape(c, (-1, 1))
         a = jnp.reshape(jnp.asarray(a_vals, jnp.float32), (-1,))
         kv = jnp.reshape(jnp.asarray(keys, jnp.int32), (-1,))
+        # Overflow from earlier epochs regrows capacity before this batch
+        # appends, so the buffers never fall further behind the stream.
+        self.regrow()
         jb = self._join_base
         if u is None:
             self._key, sub = jax.random.split(self._key)
-            self.state, self.jstate = _join_ingest_step_keyed(
+            self.state, self.jstate, dropped = _join_ingest_step_keyed(
                 self.state, self.jstate, c, a, sub, kv, jb.dim,
                 jb.key_root, jnp.float32(jb.p_u), self._backend)
         else:
-            self.state, self.jstate = _join_ingest_step(
+            self.state, self.jstate, dropped = _join_ingest_step(
                 self.state, self.jstate, c, a, jnp.asarray(u, jnp.float32),
                 kv, jb.dim, jb.key_root, jnp.float32(jb.p_u), self._backend)
+        dropped = np.asarray(dropped)
+        if dropped.any():
+            self._pending.append((np.asarray(c)[dropped],
+                                  np.asarray(a)[dropped],
+                                  np.asarray(kv)[dropped]))
         self.n_stream += int(a.shape[0])
+        self._epoch += 1
+        self._merged = None
+        self._jmerged = None
+        return self
+
+    def regrow(self) -> "JoinStreamingIngestor":
+        """Re-capacity the universe buffers and replay parked overflow rows.
+
+        Grows every stratum's slot capacity by the parked row count (a
+        safe upper bound on any one stratum's backlog), pads the buffers,
+        and runs the universe-append-only replay step. No-op without
+        pending rows. Called automatically at the top of ``ingest()``;
+        callable directly to clear the overflow debt without new data.
+        """
+        if not self._pending:
+            return self
+        c = np.concatenate([p[0] for p in self._pending], axis=0)
+        a = np.concatenate([p[1] for p in self._pending])
+        kv = np.concatenate([p[2] for p in self._pending])
+        self._pending = []
+        js = self.jstate
+        k, su = js.u_a.shape
+        grow = int(a.shape[0])
+        pad2 = [(0, 0), (0, grow)]
+
+        def gpad(buf, fill):
+            cfg = pad2 + [(0, 0)] * (buf.ndim - 2)
+            return jnp.pad(buf, cfg, constant_values=fill)
+
+        grown = dataclasses.replace(
+            js,
+            u_c=gpad(js.u_c, 0.0), u_a=gpad(js.u_a, 0.0),
+            u_key=gpad(js.u_key, 0), u_dattr=gpad(js.u_dattr, 0.0),
+            u_part=gpad(js.u_part, -1),
+            u_valid=gpad(js.u_valid, False))
+        jb = self._join_base
+        self.jstate = _universe_regrow_step(
+            self.state, grown, jnp.asarray(c, jnp.float32),
+            jnp.asarray(a, jnp.float32), jnp.asarray(kv, jnp.int32),
+            jb.dim, jb.key_root, jnp.float32(jb.p_u), self._backend)
+        self.n_regrown += grow
+        # Buffer shapes changed: serving views and prepared entries must
+        # re-pin (their AOT executables re-lower on the new (k, su')).
         self._epoch += 1
         self._merged = None
         self._jmerged = None

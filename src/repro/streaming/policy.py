@@ -61,13 +61,24 @@ def reoptimize_cuts(ing: StreamingIngestor, k: int | None = None
 
 def reoptimize(ing: StreamingIngestor, c, a, *, k: int | None = None,
                s_per_leaf: int | None = None, seed: int = 0,
-               backend: str | None = None
+               backend: str | None = None, allocation: str = "neyman"
                ) -> tuple[StreamingIngestor, dict]:
     """Full drift-adapted rebuild: device DP cuts -> shared builder
     assembly (exact stats + re-stratified samples). ``c``/``a`` are the
     current full dataset (base + streamed rows, owned by the caller).
     Returns a fresh ingestor anchored on the re-optimized base plus a
     report dict.
+
+    ``allocation`` (used only when ``s_per_leaf`` is None) decides how the
+    old total sample budget is re-split across the NEW strata:
+
+    * ``'neyman'`` (default) — per-new-stratum n_h·sigma_h weighting from
+      the full dataset's exact moments, so strata the drift grew (or made
+      volatile) reclaim reservoir slots from quiet ones — the
+      "reservoir-aware budget rebalancing" follow-up of
+      :func:`reoptimize_cuts`'s caveat;
+    * ``'equal'`` — the historical behaviour: every stratum keeps the old
+      uniform per-leaf capacity.
     """
     thr, vmax = reoptimize_cuts(ing, k)
     k = thr.shape[0] + 1
@@ -76,7 +87,20 @@ def reoptimize(ing: StreamingIngestor, c, a, *, k: int | None = None,
     assign = np.searchsorted(np.asarray(thr), c_np, side="right"
                              ).astype(np.int32)
     if s_per_leaf is None:
-        s_per_leaf = ing.base.sample_c.shape[1]
+        cap = ing.base.sample_c.shape[1]
+        if allocation == "neyman":
+            from ..core.sampling import neyman_allocation
+            counts = np.bincount(assign, minlength=k).astype(np.float64)
+            sums = np.bincount(assign, weights=a_np, minlength=k)
+            sumsqs = np.bincount(assign, weights=a_np * a_np, minlength=k)
+            mean = sums / np.maximum(counts, 1.0)
+            stds = np.sqrt(np.maximum(
+                sumsqs / np.maximum(counts, 1.0) - mean * mean, 0.0))
+            s_per_leaf = neyman_allocation(counts, stds, cap * k)
+        elif allocation == "equal":
+            s_per_leaf = cap
+        else:
+            raise ValueError(f"unknown allocation: {allocation!r}")
     # same assembly tail as build_synopsis (host f64 exact stats)
     syn, _ = synopsis_from_assignment(c_np, a_np, assign, k,
                                       s_per_leaf=s_per_leaf, seed=seed)

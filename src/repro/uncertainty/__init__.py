@@ -18,8 +18,9 @@ returns QueryResults whose ``.interval()`` is (estimate, lo, hi); the
 ``answer_with_ci`` / ``poisson_bootstrap`` free functions are deprecated
 shims over it.
 """
-from .intervals import normal_quantile, compose_interval, answer_with_ci
+from .intervals import (normal_quantile, compose_interval,
+                        compose_two_stage, answer_with_ci)
 from .bootstrap import poisson_bootstrap, BOOT_KINDS
 
-__all__ = ["normal_quantile", "compose_interval", "answer_with_ci",
-           "poisson_bootstrap", "BOOT_KINDS"]
+__all__ = ["normal_quantile", "compose_interval", "compose_two_stage",
+           "answer_with_ci", "poisson_bootstrap", "BOOT_KINDS"]

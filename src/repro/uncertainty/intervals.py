@@ -273,6 +273,38 @@ def compose_join_interval(jsyn, jart, kind: str, level: float,
     raise ValueError(f"no join interval composition for kind: {kind}")
 
 
+def compose_two_stage(t_hat, v_within, h_fb, pi, mask, z):
+    """Two-stage (partition-sampling x within-stratum) composition for the
+    catalog tier (DESIGN.md §14).
+
+    Per-partition inputs, all (Q, P) except ``pi`` (P,): ``t_hat`` the
+    within-partition estimate of the partition's contribution, ``v_within``
+    its summed within-stratum CLT variance, ``h_fb`` its summed
+    small-stratum fallback half-widths, ``pi`` the recorded inclusion
+    probabilities and ``mask`` the (Q, P) f32 mask of partitions serving
+    query q through the sampled (overlapping, selected) stage.
+
+    Returns ``(ht, half, v)``: the Horvitz–Thompson total
+    ``sum mask·t_hat/pi``, the composed half-width ``z·sqrt(V) + sum
+    mask·h_fb/pi``, and the two-stage variance estimate
+
+        V = sum mask · [ (1 - pi)·t_hat² + v_within ] / pi²
+
+    — the standard two-stage decomposition E[(1-pi)/pi² t²] + E[v/pi]
+    estimated from the realized sample; plugging t_hat² for t² biases V
+    upward by v_within(1-pi)/pi² (conservative), exactly as PS3's
+    variance accounting does. Exact-covered partitions never enter the
+    mask, so fully pruned/covered queries compose a zero-width interval.
+    """
+    pi_ = jnp.maximum(pi, 1e-6)[None]
+    ht = jnp.sum(mask * t_hat / pi_, axis=1)
+    v = jnp.sum(mask * ((1.0 - pi_) * t_hat * t_hat + v_within)
+                / (pi_ * pi_), axis=1)
+    half = z * jnp.sqrt(jnp.maximum(v, 0.0)) \
+        + jnp.sum(mask * h_fb / pi_, axis=1)
+    return ht, half, v
+
+
 def _with_interval(res: QueryResult, half, clip_bounds: bool) -> QueryResult:
     lo = res.estimate - half
     hi = res.estimate + half
@@ -346,4 +378,4 @@ def answer_with_ci(syn, queries: QueryBatch, kinds, *, level: float,
 
 
 __all__ = ["normal_quantile", "compose_interval", "compose_join_interval",
-           "answer_with_ci"]
+           "compose_two_stage", "answer_with_ci"]

@@ -37,6 +37,7 @@ def current_surface() -> dict:
         "PassEngine.__init__": _sig(api.PassEngine.__init__),
         "PassEngine.answer": _sig(api.PassEngine.answer),
         "PassEngine.answer_join": _sig(api.PassEngine.answer_join),
+        "PassEngine.from_catalog": _sig(api.PassEngine.from_catalog),
         "PassEngine.from_sharded": _sig(api.PassEngine.from_sharded),
         "PassEngine.prepare": _sig(api.PassEngine.prepare),
         "PassEngine.prepare_join": _sig(api.PassEngine.prepare_join),
@@ -45,6 +46,7 @@ def current_surface() -> dict:
         "PreparedQuery.__call__": _sig(api.PreparedQuery.__call__),
         "ServingConfig": _config_fields(api.ServingConfig),
         "CIConfig": _config_fields(api.CIConfig),
+        "CatalogConfig": _config_fields(api.CatalogConfig),
         "CoalescerConfig": _config_fields(api.CoalescerConfig),
         "repro.serve.__all__": sorted(serve.__all__),
         "RequestCoalescer.__init__": _sig(serve.RequestCoalescer.__init__),

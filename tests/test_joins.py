@@ -332,3 +332,53 @@ def test_prepare_join_cache_reuse():
     # single-table view afterwards must not collide
     out = eng.answer(fq, kinds=("sum",))
     assert "sum" in out
+
+
+def test_universe_regrow_recovers_overflow():
+    """Overflowed universe members are parked and replayed on the next
+    epoch: after regrow the debt is zero and the buffer content (and the
+    served answers) match an ingestor that never overflowed."""
+    c, a, keys, dkeys, dattr = _tables(n=4000, nd=100, seed=3)
+    dim = build_dim_table(dkeys, dattr, num_partitions=4)
+    half = 2000
+    mk = lambda cap: build_join_synopsis(c[:half], a[:half], keys[:half],
+                                         dim, k=4, p_u=0.5, seed=3,
+                                         u_capacity=cap)[0]
+    small = JoinStreamingIngestor(mk(600), seed=9)     # will overflow
+    ample = JoinStreamingIngestor(mk(4096), seed=9)    # never overflows
+    for s in range(half, 4000, 500):
+        e = s + 500
+        small.ingest(c[s:e], a[s:e], keys[s:e])
+        ample.ingest(c[s:e], a[s:e], keys[s:e])
+    assert int(np.asarray(small.jstate.u_overflow).sum()) > 0 or \
+        small.n_regrown > 0                            # it did overflow
+    small.regrow()                                     # clear the tail debt
+    assert small.n_regrown > 0
+    np.testing.assert_array_equal(np.asarray(small.jstate.u_overflow), 0)
+    assert int(np.asarray(ample.jstate.u_overflow).sum()) == 0
+
+    def content(ing):
+        """Per-stratum multiset of universe rows (order-free)."""
+        js = ing.jstate
+        v = np.asarray(js.u_valid)
+        out = []
+        for i in range(v.shape[0]):
+            rows = v[i]
+            out.append(sorted(zip(np.asarray(js.u_key)[i][rows].tolist(),
+                                  np.round(np.asarray(js.u_a)[i][rows],
+                                           5).tolist())))
+        return out
+    assert content(small) == content(ample)
+
+    fq = QueryBatch(lo=jnp.asarray([[-1.0]], jnp.float32),
+                    hi=jnp.asarray([[1.0]], jnp.float32))
+    dq = QueryBatch(lo=jnp.asarray([[-10.0]], jnp.float32),
+                    hi=jnp.asarray([[10.0]], jnp.float32))
+    r_s = PassEngine(small.as_join_synopsis(), ci=0.95).answer_join(
+        fq, dq, kinds=("sum",))["sum"]
+    r_a = PassEngine(ample.as_join_synopsis(), ci=0.95).answer_join(
+        fq, dq, kinds=("sum",))["sum"]
+    np.testing.assert_array_equal(np.asarray(r_s.estimate),
+                                  np.asarray(r_a.estimate))
+    np.testing.assert_array_equal(np.asarray(r_s.ci_half),
+                                  np.asarray(r_a.ci_half))

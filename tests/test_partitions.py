@@ -1,0 +1,434 @@
+"""Partition-selection tier (DESIGN.md §14): catalog sketch exactness and
+mergeability, p=1 dense-path bit-identity vs the flat builder (example +
+hypothesis property), exact pruning of covered/disjoint partitions on
+both kernel backends, two-stage CI coverage under a real selection
+budget, picker unit behaviour, LRU accounting, sharded catalog
+maintenance, and error paths."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from conftest import given, settings, st
+
+from repro.api import PassEngine, CatalogConfig, CIConfig, ServingConfig
+from repro.core.synopsis import build_synopsis
+from repro.core.types import (QueryBatch, AGG_SUM, AGG_SUMSQ, AGG_COUNT,
+                              AGG_MIN, AGG_MAX)
+from repro.partitions import (build_catalog, partition_stats,
+                              combine_catalogs, partition_rows,
+                              pick_partitions, classify_partitions,
+                              waterfill_pi, PartitionStore)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _clustered_parts(num_partitions=16, rows=500, gap=10.0, span=8.0,
+                     seed=0):
+    """Disjoint per-partition coordinate ranges (the well-clustered lake):
+    partition p covers [gap*p, gap*p + span]."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for p in range(num_partitions):
+        c = rng.uniform(gap * p, gap * p + span, size=rows)
+        a = rng.normal(p, 1.0, size=rows)
+        parts.append((c, a))
+    return parts
+
+
+def _flat(parts):
+    return (np.concatenate([c for c, _ in parts]),
+            np.concatenate([a for _, a in parts]))
+
+
+# ---------------------------------------------------------------------------
+# Catalog sketches
+# ---------------------------------------------------------------------------
+
+def test_catalog_stats_exact():
+    """Every catalog field matches a direct numpy computation."""
+    rng = np.random.default_rng(3)
+    n, P = 4000, 6
+    c = rng.uniform(0, 100, size=(n, 2)).astype(np.float32)
+    a = rng.integers(-20, 80, size=n).astype(np.float32)
+    pid = rng.integers(0, P, size=n).astype(np.int32)
+    cat = partition_stats(c, a, pid, P, bins=8,
+                          bin_lo=np.zeros(2), bin_hi=np.full(2, 100.0))
+    for p in range(P):
+        m = pid == p
+        np.testing.assert_allclose(float(cat.n[p]), m.sum())
+        np.testing.assert_allclose(np.asarray(cat.col_lo[p]),
+                                   c[m].min(axis=0))
+        np.testing.assert_allclose(np.asarray(cat.col_hi[p]),
+                                   c[m].max(axis=0))
+        np.testing.assert_allclose(np.asarray(cat.col_sum[p]),
+                                   c[m].sum(axis=0), rtol=1e-5)
+        np.testing.assert_allclose(float(cat.m_agg[p, AGG_SUM]),
+                                   a[m].sum(), rtol=1e-5)
+        np.testing.assert_allclose(float(cat.m_agg[p, AGG_SUMSQ]),
+                                   (a[m] ** 2).sum(), rtol=1e-5)
+        np.testing.assert_allclose(float(cat.m_agg[p, AGG_COUNT]), m.sum())
+        np.testing.assert_allclose(float(cat.m_agg[p, AGG_MIN]), a[m].min())
+        np.testing.assert_allclose(float(cat.m_agg[p, AGG_MAX]), a[m].max())
+        # histogram holds exactly the partition's row count per column
+        np.testing.assert_allclose(np.asarray(cat.hist[p]).sum(axis=1),
+                                   [m.sum()] * 2)
+
+
+def test_catalog_mergeable():
+    """combine_catalogs over row splits == one pass over all rows, and the
+    empty partition keeps the disjoint-classifying inverted box."""
+    rng = np.random.default_rng(4)
+    n, P = 3000, 5
+    c = rng.uniform(0, 50, size=n).astype(np.float32)
+    a = rng.integers(0, 30, size=n).astype(np.float32)
+    pid = rng.integers(0, P - 1, size=n).astype(np.int32)   # P-1 stays empty
+    kw = dict(bins=8, bin_lo=np.zeros(1), bin_hi=np.full(1, 50.0))
+    whole = partition_stats(c, a, pid, P, **kw)
+    h = n // 3
+    merged = combine_catalogs(
+        combine_catalogs(partition_stats(c[:h], a[:h], pid[:h], P, **kw),
+                         partition_stats(c[h:2 * h], a[h:2 * h],
+                                         pid[h:2 * h], P, **kw)),
+        partition_stats(c[2 * h:], a[2 * h:], pid[2 * h:], P, **kw))
+    for f in ("n", "col_lo", "col_hi", "hist"):
+        np.testing.assert_array_equal(np.asarray(getattr(whole, f)),
+                                      np.asarray(getattr(merged, f)))
+    np.testing.assert_allclose(np.asarray(whole.m_agg),
+                               np.asarray(merged.m_agg), rtol=1e-5)
+    assert float(whole.col_lo[P - 1, 0]) == np.inf          # empty partition
+    assert float(whole.col_hi[P - 1, 0]) == -np.inf
+
+
+# ---------------------------------------------------------------------------
+# p=1 (dense) bit-identity with the flat builder
+# ---------------------------------------------------------------------------
+
+_RESULT_FIELDS = ("estimate", "ci_half", "lower", "upper",
+                  "frac_rows_touched", "ci_lo", "ci_hi")
+
+
+def _assert_results_identical(r1, r2):
+    assert r1.keys() == r2.keys()
+    for kind in r1:
+        for f in _RESULT_FIELDS:
+            x, y = getattr(r1[kind], f), getattr(r2[kind], f)
+            assert (x is None) == (y is None), (kind, f)
+            if x is not None:
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y), err_msg=f"{kind}.{f}")
+
+
+def test_dense_path_bit_identity():
+    """With no partition budget every partition is 'selected' with p=1 and
+    the tier serves the flat synopsis over the concatenated rows —
+    bit-identical results to never having partitioned the data."""
+    rng = np.random.default_rng(7)
+    c = rng.normal(size=6000)
+    a = rng.gamma(2.0, 1.0, size=6000)
+    build_kw = dict(k=16, sample_budget=256, method="eq", seed=3)
+    syn, _ = build_synopsis(c, a, **build_kw)
+    sv = ServingConfig(kinds=("sum", "count", "avg"))
+    eng_flat = PassEngine(syn, serving=sv, ci=0.95)
+    eng_cat = PassEngine.from_catalog(partition_rows(c, a, 8), serving=sv,
+                                      ci=0.95, **build_kw)
+    q = QueryBatch(lo=jnp.asarray(rng.normal(size=(5, 1)) - 1, jnp.float32),
+                   hi=jnp.asarray(rng.normal(size=(5, 1)) + 1, jnp.float32))
+    _assert_results_identical(eng_flat.answer(q), eng_cat.answer(q))
+    # and without intervals
+    _assert_results_identical(eng_flat.answer(q, ci=None),
+                              eng_cat.answer(q, ci=None))
+
+
+@given(seed=st.integers(0, 2**31 - 1), num_partitions=st.integers(1, 12),
+       k=st.integers(2, 24))
+@settings(max_examples=10, deadline=None)
+def test_dense_bit_identity_property(seed, num_partitions, k):
+    """Property form: any data, any contiguous partitioning, any k — the
+    p=1 catalog tier reproduces flat serving bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(200, 3000))
+    c = rng.normal(size=n) * rng.uniform(0.5, 10)
+    a = rng.gamma(2.0, 1.0, size=n)
+    build_kw = dict(k=k, sample_budget=max(4 * k, 64), method="eq",
+                    seed=seed % 1000)
+    syn, _ = build_synopsis(c, a, **build_kw)
+    eng_flat = PassEngine(syn, ci=0.95)
+    eng_cat = PassEngine.from_catalog(partition_rows(c, a, num_partitions),
+                                      ci=0.95, **build_kw)
+    lo = rng.normal(size=(3, 1)) - rng.uniform(0.1, 2)
+    q = QueryBatch(lo=jnp.asarray(lo, jnp.float32),
+                   hi=jnp.asarray(lo + rng.uniform(0.2, 4), jnp.float32))
+    _assert_results_identical(eng_flat.answer(q, kinds=("sum", "avg")),
+                              eng_cat.answer(q, kinds=("sum", "avg")))
+
+
+# ---------------------------------------------------------------------------
+# Exact pruning under a selection budget
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_exact_pruning_never_materializes_irrelevant(backend):
+    """Guaranteed-covered and guaranteed-disjoint partitions never get a
+    synopsis built: only the overlapping candidates show up in the
+    source's materialized ids, on either kernel backend."""
+    P = 16 if backend == "jnp" else 8
+    rows = 500 if backend == "jnp" else 200
+    parts = _clustered_parts(P, rows=rows, seed=1)
+    eng = PassEngine.from_catalog(
+        parts, catalog=CatalogConfig(k=4, s_per_leaf=16, max_partitions=4,
+                                     seed=2),
+        serving=ServingConfig(kinds=("sum", "count"), backend=backend),
+        ci=0.95)
+    # partition p spans [10p, 10p+8]: [5, 45] partially cuts 0 and 4,
+    # covers 1..3, is disjoint from everything else.
+    q = QueryBatch(lo=jnp.asarray([[5.0]], jnp.float32),
+                   hi=jnp.asarray([[45.0]], jnp.float32))
+    res = eng.answer(q)
+    ids = eng.stats()["catalog"]["materialized_ids"]
+    assert set(ids) <= {0, 4}, ids
+    assert len(ids) >= 1
+    # estimates stay inside the deterministic catalog bounds
+    for kind in ("sum", "count"):
+        r = res[kind]
+        assert float(r.lower[0]) <= float(r.estimate[0]) <= float(r.upper[0])
+
+    # a fully-covered query is answered exactly from the catalog: zero
+    # interval width, still nothing new materialized
+    qc = QueryBatch(lo=jnp.asarray([[10.0]], jnp.float32),
+                    hi=jnp.asarray([[38.5]], jnp.float32))
+    rc = eng.answer(qc)["sum"]
+    c_all, a_all = _flat(parts)
+    mask = (c_all >= 10.0) & (c_all <= 38.5)
+    np.testing.assert_allclose(float(rc.estimate[0]), a_all[mask].sum(),
+                               rtol=1e-5)
+    assert float(rc.ci_half[0]) == 0.0
+    assert set(eng.stats()["catalog"]["materialized_ids"]) <= {0, 4}
+
+    # a fully-disjoint query composes the empty answer
+    qd = QueryBatch(lo=jnp.asarray([[1000.0]], jnp.float32),
+                    hi=jnp.asarray([[2000.0]], jnp.float32))
+    rd = eng.answer(qd)["sum"]
+    assert float(rd.estimate[0]) == 0.0
+    assert float(rd.ci_half[0]) == 0.0
+    assert set(eng.stats()["catalog"]["materialized_ids"]) <= {0, 4}
+
+
+# ---------------------------------------------------------------------------
+# Two-stage estimation quality under a real budget
+# ---------------------------------------------------------------------------
+
+def _overlapping_parts(P=32, rows=400, seed=5):
+    """Partition supports overlap (the messy lake): range queries cut many
+    partitions partially, so the importance-sampling stage is real."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for p in range(P):
+        lo = rng.uniform(0, 80)
+        c = rng.uniform(lo, lo + 20, size=rows)
+        a = rng.gamma(2.0, 1.0, size=rows) * (1 + p % 5)
+        parts.append((c, a))
+    return parts
+
+
+def test_two_stage_ci_coverage():
+    """Empirical coverage of the two-stage 95% intervals stays within 3
+    points of nominal across repeated partition-selection draws."""
+    parts = _overlapping_parts()
+    c_all, a_all = _flat(parts)
+    q_lo = np.array([[10.0], [35.0], [55.0], [22.0]])
+    q_hi = np.array([[45.0], [70.0], [90.0], [77.0]])
+    q = QueryBatch(lo=jnp.asarray(q_lo, jnp.float32),
+                   hi=jnp.asarray(q_hi, jnp.float32))
+    truth = np.array([a_all[(c_all >= l) & (c_all <= h)].sum()
+                      for (l,), (h,) in zip(q_lo, q_hi)])
+    eng = PassEngine.from_catalog(
+        parts, catalog=CatalogConfig(k=4, s_per_leaf=16, max_partitions=12,
+                                     seed=11),
+        serving=ServingConfig(kinds=("sum",)), ci=CIConfig(level=0.95))
+    cov, rel = [], []
+    for _ in range(40):                     # each answer re-draws the pick
+        r = eng.answer(q)["sum"]
+        lo = np.asarray(r.ci_lo, np.float64)
+        hi = np.asarray(r.ci_hi, np.float64)
+        est = np.asarray(r.estimate, np.float64)
+        cov.append((truth >= lo) & (truth <= hi))
+        rel.append(np.abs(est - truth) / truth)
+    coverage = float(np.mean(cov))
+    assert coverage >= 0.92, coverage
+    assert float(np.median(rel)) < 0.5
+    st_ = eng.stats()["catalog"]
+    assert st_["served_batches"] == 40
+    assert st_["hits"] > 0                  # LRU actually reused synopses
+
+
+# ---------------------------------------------------------------------------
+# Picker units
+# ---------------------------------------------------------------------------
+
+def test_classify_and_waterfill():
+    parts = _clustered_parts(8, rows=100, seed=9)
+    cat = build_catalog(parts, bins=8)
+    cover, overlap = classify_partitions(cat, np.array([[5.0]]),
+                                         np.array([[45.0]]))
+    assert set(np.flatnonzero(cover[0])) == {1, 2, 3}
+    assert set(np.flatnonzero(overlap[0])) == {0, 4}
+
+    w = np.array([10.0, 1.0, 0.0, 5.0, 1e4])
+    pi = waterfill_pi(w, budget=2, pi_floor=0.05)
+    assert pi[2] == 0.0                          # non-candidate
+    assert pi[4] == 1.0                          # saturates
+    assert np.all(pi[[0, 1, 3]] >= 0.05)
+    assert np.all(pi <= 1.0)
+    # expected pick count tracks the budget (floor can only push it up)
+    assert 1.9 <= pi.sum() <= 3.0
+    # budget >= candidates: deterministic
+    np.testing.assert_array_equal(waterfill_pi(w, budget=4) > 0, w > 0)
+
+
+def test_selection_records_pi_for_covered():
+    """Covered-only partitions are deterministic (pi=1) but never picked
+    for materialization."""
+    parts = _clustered_parts(8, rows=100, seed=10)
+    cat = build_catalog(parts, bins=8)
+    sel = pick_partitions(cat, np.array([[5.0]]), np.array([[45.0]]),
+                          budget=1, seed=0)
+    for p in (1, 2, 3):
+        assert sel.pi[p] == 1.0
+        assert not sel.picked[p]
+    assert not np.any(sel.picked & ~sel.overlap.any(axis=0))
+
+
+def test_lru_eviction_accounting():
+    parts = _overlapping_parts(P=16, rows=120, seed=12)
+    eng = PassEngine.from_catalog(
+        parts, catalog=CatalogConfig(k=2, s_per_leaf=8, max_partitions=6,
+                                     max_resident=3, seed=1),
+        serving=ServingConfig(kinds=("sum",)), ci=None)
+    qa = QueryBatch(lo=jnp.asarray([[5.0]], jnp.float32),
+                    hi=jnp.asarray([[35.0]], jnp.float32))
+    qb = QueryBatch(lo=jnp.asarray([[60.0]], jnp.float32),
+                    hi=jnp.asarray([[95.0]], jnp.float32))
+    for _ in range(3):                  # alternating working sets churn
+        eng.answer(qa)                  # the 3-slot LRU
+        eng.answer(qb)
+    st_ = eng.stats()["catalog"]
+    assert st_["resident"] <= max(3, st_["materialized"] -
+                                  st_["evictions"])
+    assert st_["evictions"] > 0
+    assert st_["materialized"] > 3
+
+
+# ---------------------------------------------------------------------------
+# Sharded catalog maintenance
+# ---------------------------------------------------------------------------
+
+_SHARDED_CATALOG_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ.setdefault("REPRO_KERNEL_BACKEND", "jnp")
+    import numpy as np
+    import jax
+    from repro.sharded import catalog_delta_sharded
+    from repro.partitions import partition_stats, combine_catalogs
+
+    rng = np.random.default_rng(1)
+    n, P, bins = 6000, 8, 16
+    c = rng.uniform(0, 100, size=(n, 2)).astype(np.float32)
+    a = rng.integers(0, 50, size=n).astype(np.float32)   # exact in f32
+    pid = rng.integers(0, P, size=n).astype(np.int32)
+    blo, bhi = np.zeros(2, np.float32), np.full(2, 100, np.float32)
+
+    host = partition_stats(c, a, pid, P, bins=bins, bin_lo=blo, bin_hi=bhi)
+    dev = catalog_delta_sharded(c, a, pid, P, bins=bins,
+                                bin_lo=blo, bin_hi=bhi)
+    for f in ("n", "col_lo", "col_hi", "hist", "m_agg"):
+        np.testing.assert_array_equal(np.asarray(getattr(host, f)),
+                                      np.asarray(getattr(dev, f)))
+    half = n // 2
+    d1 = catalog_delta_sharded(c[:half], a[:half], pid[:half], P,
+                               bins=bins, bin_lo=blo, bin_hi=bhi)
+    d2 = catalog_delta_sharded(c[half:], a[half:], pid[half:], P,
+                               bins=bins, bin_lo=blo, bin_hi=bhi)
+    merged = combine_catalogs(d1, d2)
+    np.testing.assert_array_equal(np.asarray(merged.n), np.asarray(host.n))
+    np.testing.assert_array_equal(np.asarray(merged.hist),
+                                  np.asarray(host.hist))
+    print("OK", len(jax.devices()))
+""")
+
+
+@pytest.mark.parametrize("n_devices", [1, 4])
+def test_catalog_delta_sharded_device_invariance(n_devices):
+    """The collectively-merged catalog delta equals the host single-pass
+    catalog bit-for-bit (integer measures), for any device count, and
+    folds across batches with combine_catalogs."""
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}")
+    r = subprocess.run([sys.executable, "-c", _SHARDED_CATALOG_SCRIPT],
+                       env=env, capture_output=True, text=True, cwd=REPO,
+                       timeout=600)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    assert f"OK {n_devices}" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Error paths / API contract
+# ---------------------------------------------------------------------------
+
+def test_catalog_error_paths():
+    parts = _clustered_parts(4, rows=100, seed=13)
+    eng = PassEngine.from_catalog(
+        parts, catalog=CatalogConfig(max_partitions=2),
+        serving=ServingConfig(kinds=("sum",)))
+    q = QueryBatch(lo=jnp.asarray([[5.0]], jnp.float32),
+                   hi=jnp.asarray([[25.0]], jnp.float32))
+    with pytest.raises(ValueError, match="catalog serving supports kinds"):
+        eng.answer(q, kinds=("min",))
+    with pytest.raises(ValueError, match="clt"):
+        eng.answer(q, ci=CIConfig(level=0.9, method="bootstrap"))
+    with pytest.raises(ValueError, match="plan="):
+        eng.answer(q, plan=object())
+    # budgeted source refuses the flat view
+    with pytest.raises(ValueError, match="stage"):
+        eng.source.as_synopsis()
+    # engine-level kinds inherit-filter drops the unanswerable ones
+    eng2 = PassEngine.from_catalog(
+        parts, catalog=CatalogConfig(max_partitions=2),
+        serving=ServingConfig(kinds=("sum", "min", "avg")))
+    out = eng2.answer(q)
+    assert set(out) == {"sum", "avg"}
+    with pytest.raises(ValueError):
+        CatalogConfig(max_partitions=0).validate()
+    with pytest.raises(ValueError):
+        CatalogConfig(pi_floor=0.0).validate()
+    with pytest.raises(ValueError):
+        PartitionStore([])
+
+
+def test_prepared_catalog_plan_cache_reuse():
+    """Repeated same-shape answers hit the plan cache; prepare() returns a
+    working handle; differently-shaped batches fall back correctly."""
+    parts = _clustered_parts(8, rows=200, seed=14)
+    eng = PassEngine.from_catalog(
+        parts, catalog=CatalogConfig(k=4, s_per_leaf=16, max_partitions=3,
+                                     seed=3),
+        serving=ServingConfig(kinds=("sum",)), ci=0.95)
+    q = QueryBatch(lo=jnp.asarray([[5.0], [15.0]], jnp.float32),
+                   hi=jnp.asarray([[45.0], [55.0]], jnp.float32))
+    eng.answer(q)
+    eng.answer(q)
+    assert eng.stats()["hits"] >= 1
+    prepared = eng.prepare(q)
+    r = prepared(q)["sum"]
+    assert np.all(np.isfinite(np.asarray(r.estimate)))
+    q1 = QueryBatch(lo=jnp.asarray([[5.0]], jnp.float32),
+                    hi=jnp.asarray([[45.0]], jnp.float32))
+    r1 = prepared(q1)["sum"]              # shape fallback
+    assert np.all(np.isfinite(np.asarray(r1.estimate)))

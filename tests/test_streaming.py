@@ -391,3 +391,47 @@ def test_streaming_prng_key_determinism():
     # and only the reservoir sampling differs: aggregates stay identical
     np.testing.assert_array_equal(np.asarray(ing1.state.delta_agg),
                                   np.asarray(ing4.state.delta_agg))
+
+
+def test_reoptimize_neyman_rebalances_sample_budget():
+    """The default 'neyman' allocation re-splits the old total reservoir
+    budget toward the strata drift made large/volatile, keeping the total;
+    'equal' preserves the historical uniform split."""
+    rng = np.random.default_rng(21)
+    k, s = 8, 64
+    c0 = rng.normal(size=8000)
+    a0 = rng.normal(size=8000)
+    syn, _ = build_synopsis(c0, a0, k=k, sample_budget=k * s, method="eq",
+                            seed=0)
+    ing = StreamingIngestor(syn, seed=3)
+    # drifted tail: shifted support, heavy-tailed values
+    c1 = rng.normal(loc=4.0, size=6000)
+    a1 = rng.gamma(2.0, 1.0, size=6000) * np.exp(rng.normal(0, 1, size=6000))
+    for i in range(0, 6000, 1500):
+        ing.ingest(c1[i:i + 1500], a1[i:i + 1500])
+    c_all = np.concatenate([c0, c1])
+    a_all = np.concatenate([a0, a1])
+
+    from repro.streaming.policy import reoptimize
+    ing_eq, _ = reoptimize(ing, c_all, a_all, allocation="equal", seed=7)
+    ing_ney, rep = reoptimize(ing, c_all, a_all, seed=7)   # default neyman
+    alloc_eq = np.asarray(ing_eq.base.k_per_leaf)
+    alloc_ney = np.asarray(ing_ney.base.k_per_leaf)
+    assert alloc_eq.sum() == alloc_ney.sum() == k * s      # budget conserved
+    assert not np.array_equal(alloc_eq, alloc_ney)         # actually moved
+    # slots concentrate: the most volatile stratum takes far more than the
+    # uniform share, the quietest far less
+    assert alloc_ney.max() > 2 * s
+    assert alloc_ney.min() < s // 2
+    # the rebuilt synopsis still answers sanely
+    q = QueryBatch(lo=jnp.asarray([[2.0]], jnp.float32),
+                   hi=jnp.asarray([[6.0]], jnp.float32))
+    from repro.api import PassEngine, ServingConfig
+    eng = PassEngine(ing_ney.as_synopsis(),
+                     serving=ServingConfig(kinds=("sum",)))
+    res = eng.answer(q)
+    truth = a_all[(c_all >= 2.0) & (c_all <= 6.0)].sum()
+    assert abs(float(np.asarray(res["sum"].estimate)[0]) - truth) \
+        < 0.2 * abs(truth)
+    with pytest.raises(ValueError, match="allocation"):
+        reoptimize(ing, c_all, a_all, allocation="bogus")
