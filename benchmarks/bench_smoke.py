@@ -20,6 +20,7 @@ import platform
 import sys
 
 from . import bench_coalescer
+from . import bench_degrade
 from . import bench_distributed
 from . import bench_fused
 from . import bench_joins
@@ -43,6 +44,8 @@ def run() -> tuple[dict, list]:
     metrics.update(bench_fused.run(**bench_fused.tiny_config()))
     # multi-tenant coalesced serving (demux bit-identity asserted inside)
     metrics.update(bench_coalescer.run(**bench_coalescer.tiny_config()))
+    # deadline-degraded tier-0 first answer (bit-identity asserted inside)
+    metrics.update(bench_degrade.run(**bench_degrade.tiny_config()))
     # fk-join serving vs materialized-join scan at matched error
     metrics.update(bench_joins.run(**bench_joins.tiny_config()))
     # partition-selection tier vs flat full-lake build (clustered lake)

@@ -30,6 +30,7 @@ BASELINE = pathlib.Path(__file__).with_name("BENCH_baseline.json")
 REQUIRED_GATED = (
     "bootstrap_fused_speedup_x",
     "coalesced_serving_speedup_x",
+    "degraded_first_answer_ms",
     "join_serving_speedup_x",
     "partition_pruning_speedup_x",
     "route_multid_tiled_speedup_x",

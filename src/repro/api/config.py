@@ -43,6 +43,13 @@ class ServingConfig:
                        sampling (the ST/US baselines).
     ``avg_mode``       'ratio' (est-SUM/est-COUNT) or the paper-literal
                        'stratum' weighting.
+    ``sample_slots``   serve from only the first N reservoir slots of every
+                       stratum (None = all). This is the refinement-ladder
+                       knob (DESIGN.md §15): a prefix of a uniform
+                       without-replacement reservoir is itself a uniform
+                       sample, so every estimator stays unbiased at reduced
+                       moment-pass cost. Single-table serving only (join /
+                       catalog entries reject it).
     """
     kinds: tuple[str, ...] = ("sum",)
     backend: str | None = None
@@ -51,6 +58,7 @@ class ServingConfig:
     zero_var_rule: bool = True
     use_aggregates: bool = True
     avg_mode: str = "ratio"
+    sample_slots: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "kinds", _normalize_kinds(self.kinds))
@@ -61,11 +69,15 @@ class ServingConfig:
                 raise ValueError(f"unknown kind: {k}")
         if self.avg_mode not in ("ratio", "stratum"):
             raise ValueError(f"unknown avg_mode: {self.avg_mode!r}")
+        if self.sample_slots is not None and self.sample_slots < 1:
+            raise ValueError(
+                f"sample_slots must be >= 1 or None, got {self.sample_slots}")
         return self
 
     def cache_key(self) -> tuple:
         return (self.kinds, self.backend, float(self.lam), self.use_fpc,
-                self.zero_var_rule, self.use_aggregates, self.avg_mode)
+                self.zero_var_rule, self.use_aggregates, self.avg_mode,
+                self.sample_slots)
 
 
 def _key_token(key):
@@ -111,6 +123,13 @@ class CIConfig:
                           all replicates, DESIGN.md §10); False runs the
                           per-replicate ``lax.scan`` reference. The two are
                           bit-identical for the same key.
+    ``max_ci_width``      progressive-refinement stop criterion (DESIGN.md
+                          §15): when set, ``PassEngine.answer`` routes
+                          through the degradation ladder and stops refining
+                          once every query's interval width (ci_hi - ci_lo)
+                          is <= this value (or the sample budget is
+                          exhausted). None (default) disables progressive
+                          serving.
     """
     level: float = 0.95
     method: str = "clt"
@@ -120,6 +139,7 @@ class CIConfig:
     key: object = dataclasses.field(default=None, compare=False)
     boot_normalize: str = "hajek"
     boot_fused: bool = True
+    max_ci_width: float | None = None
 
     def validate(self) -> "CIConfig":
         if not 0.0 < self.level < 1.0:
@@ -131,9 +151,15 @@ class CIConfig:
             raise ValueError(f"unknown delta_budget: {self.delta_budget!r}")
         if self.boot_normalize not in BOOT_NORMALIZE:
             raise ValueError(f"unknown normalize: {self.boot_normalize!r}")
+        if self.max_ci_width is not None and self.max_ci_width <= 0.0:
+            raise ValueError(
+                f"max_ci_width must be > 0 or None, got {self.max_ci_width}")
         return self
 
     def cache_key(self) -> tuple:
+        # max_ci_width is a ladder stop criterion, not a property of the
+        # compiled program — it is deliberately NOT part of the key, so
+        # every ladder tier shares prepared entries with plain serving.
         return (float(self.level), self.method, int(self.small_n_threshold),
                 self.delta_budget, int(self.n_boot), _key_token(self.key),
                 self.boot_normalize, self.boot_fused)

@@ -87,6 +87,11 @@ def _validate_request(serving: ServingConfig, ci: CIConfig | None) -> None:
 def _validate_join_request(serving: ServingConfig, ci: CIConfig | None):
     from ..joins import JOIN_KINDS
     serving.validate()
+    if serving.sample_slots is not None:
+        raise ValueError(
+            "sample_slots applies to the single-table refinement ladder "
+            "only; join serving estimates from key-universe samples, not "
+            "the stratified reservoir")
     for kind in serving.kinds:
         if kind not in JOIN_KINDS:
             raise ValueError(
@@ -123,6 +128,11 @@ def _join_dispatch_entry(serving: ServingConfig, ci: CIConfig | None):
 def _validate_catalog_request(serving: ServingConfig, ci: CIConfig | None):
     from ..partitions import CATALOG_KINDS
     serving.validate()
+    if serving.sample_slots is not None:
+        raise ValueError(
+            "sample_slots applies to the single-table refinement ladder "
+            "only; the partition tier re-stacks per-partition reservoirs "
+            "per batch")
     for kind in serving.kinds:
         if kind not in CATALOG_KINDS:
             raise ValueError(
@@ -239,7 +249,12 @@ class PreparedQuery:
         return _dispatch_entry(self.serving, self.ci)
 
     def _resolve_source(self):
-        return self._engine.resolve()
+        # sample_slots pins the refinement-ladder view: the first-N
+        # reservoir slots per stratum (a uniform subsample — validity is a
+        # per-stratum prefix), giving this entry a proportionally cheaper
+        # moment pass. None = the full reservoir.
+        return _executor.slice_sample_slots(self._engine.resolve(),
+                                            self.serving.sample_slots)
 
     def _fallback_answer(self, queries) -> dict[str, QueryResult]:
         return self._engine.answer(queries, kinds=self.serving.kinds,
@@ -381,7 +396,9 @@ class PassEngine:
         self._coalescer = None
         self._stats = {"hits": 0, "misses": 0, "evictions": 0,
                        "invalidations": 0, "aot_compiles": 0,
-                       "fused_serves": 0}
+                       "fused_serves": 0, "tier0_serves": 0,
+                       "refine_steps": 0, "degraded_serves": 0}
+        self._refine_ewma_ms = 0.0
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -534,7 +551,27 @@ class PassEngine:
             out["coalescer"] = self._coalescer.stats()
         if getattr(self._source, "is_catalog_source", False):
             out["catalog"] = self._source.stats()
+        out["faults"] = self._fault_snapshot()
         return out
+
+    def _fault_snapshot(self) -> dict:
+        """Containment-policy observability (DESIGN.md §15): quarantined
+        row counts and dispatch/materialization containment counters from
+        the source, injected-event counts when a fault harness is
+        installed, degraded partitions from a catalog source."""
+        faults: dict = {}
+        src = self._source
+        if hasattr(src, "n_quarantined"):
+            faults["quarantined_rows"] = src.n_quarantined
+        if hasattr(src, "fault_stats"):
+            faults.update(src.fault_stats())
+        if hasattr(src, "degraded_partitions"):
+            faults["degraded_partitions"] = sorted(src.degraded_partitions)
+        from ..testing import faults as _faults
+        inj = _faults.active()
+        if inj is not None:
+            faults["injected"] = inj.snapshot()
+        return faults
 
     # -- serving -----------------------------------------------------------
     def prepare(self, queries_or_shape, *, kinds=None, ci=_UNSET,
@@ -557,8 +594,8 @@ class PassEngine:
         return self._lookup(shape, sv, cfg)
 
     def answer(self, queries: QueryBatch, *, kinds=None, ci=_UNSET,
-               serving: ServingConfig | None = None,
-               plan=None) -> dict[str, QueryResult]:
+               serving: ServingConfig | None = None, plan=None,
+               deadline_ms: float | None = None) -> dict[str, QueryResult]:
         """Answer a batch for every configured kind from one shared
         artifact pass; returns ``{kind: QueryResult}``.
 
@@ -570,6 +607,14 @@ class PassEngine:
         from the plan-less entries, whose pytree lacks the mask operands)
         instead of bypassing the cache — ``stats()`` hits/misses stay
         truthful either way.
+
+        ``deadline_ms=`` (or ``CIConfig(max_ci_width=...)``) switches to
+        the graceful degradation ladder (DESIGN.md §15): a tier-0
+        aggregates-only answer is produced immediately from the planner
+        descent + §2.3 hard bounds (zero sample work), then refined
+        through growing reservoir slices until the CI-width target or the
+        deadline is hit. The ladder never blows the deadline: the next
+        tier only starts when its EWMA-predicted latency still fits.
         """
         shape = tuple(queries.lo.shape)
         if self._catalog_selective():
@@ -578,13 +623,68 @@ class PassEngine:
                     "plan= is not supported with a budgeted catalog "
                     "source; planner masks are per-stratum of ONE synopsis "
                     "while the partition tier re-stacks strata per batch")
+            if deadline_ms is not None:
+                raise ValueError(
+                    "deadline_ms needs the aggregate-tree tier-0 path; a "
+                    "budgeted catalog source degrades per partition "
+                    "instead (see stats()['faults'])")
             sv, cfg = self._effective_catalog(kinds, ci, serving)
             return self._lookup(shape, sv, cfg, catalog=True)(queries)
         sv, cfg = self._effective(kinds, ci, serving)
+        if (deadline_ms is not None
+                or (cfg is not None and cfg.max_ci_width is not None
+                    and plan is None)):
+            if plan is not None:
+                raise ValueError(
+                    "deadline_ms cannot be combined with plan=; the "
+                    "ladder plans tier 0 itself")
+            return self.answer_progressive(
+                queries, kinds=kinds, ci=ci, serving=serving,
+                deadline_ms=deadline_ms).run()
         if plan is not None:
             return self._lookup(shape, sv, cfg, has_plan=True)(
                 queries, _executor.plan_to_masks(plan))
         return self._lookup(shape, sv, cfg)(queries)
+
+    def answer_progressive(self, queries: QueryBatch, *, kinds=None,
+                           ci=_UNSET, serving: ServingConfig | None = None,
+                           deadline_ms: float | None = None):
+        """Start the degradation ladder and return its
+        :class:`~repro.serve.RefinementHandle` — ``handle.results`` holds
+        the tier-0 answer immediately; ``refine()`` / ``final()`` /
+        ``run()`` tighten it from progressively larger sample slices."""
+        from ..serve.refine import RefinementHandle
+        if self._catalog_selective():
+            raise ValueError(
+                "progressive refinement needs the aggregate-tree tier-0 "
+                "path; not available on a budgeted catalog source")
+        sv, cfg = self._effective(kinds, ci, serving)
+        if sv.sample_slots is not None:
+            raise ValueError(
+                "sample_slots is managed by the ladder itself; pass a "
+                "serving config without it")
+        return RefinementHandle(self, queries, sv, cfg,
+                                deadline_ms=deadline_ms)
+
+    # -- checkpoint / restore (DESIGN.md §15) --------------------------------
+    def checkpoint(self, path) -> dict:
+        """Snapshot the serving state (synopsis / streaming reservoir /
+        join universe buffers / catalog state) at an epoch boundary; see
+        :func:`repro.serve.checkpoint.save_engine`. Returns the metadata
+        dict that was written."""
+        from ..serve.checkpoint import save_engine
+        return save_engine(self, path)
+
+    @classmethod
+    def restore(cls, path, *, serving: ServingConfig | None = None,
+                ci: CIConfig | float | None = None, mesh=None,
+                plan_cache_size: int = 32) -> "PassEngine":
+        """Rebuild an engine from a :meth:`checkpoint` file, bit-identical
+        on the serving path; see :func:`repro.serve.checkpoint.load_engine`.
+        ``serving=`` / ``ci=`` default to the checkpointed configs."""
+        from ..serve.checkpoint import load_engine
+        return load_engine(cls, path, serving=serving, ci=ci, mesh=mesh,
+                           plan_cache_size=plan_cache_size)
 
     # -- fk-join serving (DESIGN.md §13) ------------------------------------
     def resolve_join(self):

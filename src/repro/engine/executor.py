@@ -152,6 +152,30 @@ def resolve_synopsis(syn) -> Synopsis:
     return syn.as_synopsis() if hasattr(syn, "as_synopsis") else syn
 
 
+def slice_sample_slots(syn: Synopsis, slots: int | None) -> Synopsis:
+    """Restrict a synopsis to the first ``slots`` reservoir slots per
+    stratum (the refinement-ladder view, DESIGN.md §15).
+
+    Reservoir validity is a per-stratum prefix (fills extend the prefix,
+    replacements only land once a stratum is full), so the sliced view is
+    a uniform without-replacement subsample of each stratum and every
+    estimator downstream stays unbiased — with a proportionally cheaper
+    moment pass. ``slots=None`` or >= the capacity is the identity (same
+    object, so prepared-plan pinning and AOT reuse are unaffected).
+    """
+    if slots is None:
+        return syn
+    cap = syn.sample_a.shape[1]
+    if slots >= cap:
+        return syn
+    return dataclasses.replace(
+        syn,
+        sample_c=syn.sample_c[:, :slots],
+        sample_a=syn.sample_a[:, :slots],
+        sample_valid=syn.sample_valid[:, :slots],
+        k_per_leaf=jnp.minimum(syn.k_per_leaf, jnp.int32(slots)))
+
+
 def plan_to_masks(plan):
     """Convert a planner QueryPlan to the (cover, partial, exact) device
     triple consumed by :func:`compute_artifacts`; None passes through."""
@@ -174,5 +198,5 @@ def artifacts(syn: Synopsis, queries: QueryBatch, kinds,
 
 
 __all__ = ["Artifacts", "compute_artifacts", "artifacts", "plan_to_masks",
-           "resolve_synopsis", "count_artifact_pass", "OP_COUNTS",
-           "reset_op_counts"]
+           "resolve_synopsis", "slice_sample_slots", "count_artifact_pass",
+           "OP_COUNTS", "reset_op_counts"]

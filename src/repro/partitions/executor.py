@@ -176,13 +176,30 @@ def _count_bounds(cat_m_agg, cat_cover, cat_overlap):
     return exact, exact + jnp.sum(cat_overlap * n, axis=1)
 
 
+def _degrade_result(res, degm, has_ci):
+    """Widen one kind's result to the catalog-granularity hard-bound
+    envelope for queries flagged in ``degm`` (they overlap a partition
+    whose synopsis could not be materialized — DESIGN.md §15): estimate
+    at the envelope midpoint, interval = the whole envelope."""
+    mid = 0.5 * (res.lower + res.upper)
+    wide = 0.5 * (res.upper - res.lower)
+    out = dataclasses.replace(
+        res, estimate=jnp.where(degm, mid, res.estimate),
+        ci_half=jnp.where(degm, wide, res.ci_half))
+    if has_ci:
+        out = dataclasses.replace(
+            out, ci_lo=jnp.where(degm, res.lower, res.ci_lo),
+            ci_hi=jnp.where(degm, res.upper, res.ci_hi))
+    return out
+
+
 @partial(jax.jit, static_argnames=("kinds", "k_part", "level",
                                    "small_n_threshold", "use_fpc",
                                    "delta_budget", "backend_name"))
 def _catalog_answer_jit(syn, queries, lam, pi, ov_sel, cat_cover,
-                        cat_overlap, cat_m_agg, total_rows, kinds, k_part,
-                        level, small_n_threshold, use_fpc, delta_budget,
-                        backend_name):
+                        cat_overlap, cat_m_agg, total_rows, deg_q, kinds,
+                        k_part, level, small_n_threshold, use_fpc,
+                        delta_budget, backend_name):
     """One compiled program per (kinds x P_pad x Q): one artifact pass
     over the stacked partitions feeding every kind's HT composition.
 
@@ -282,7 +299,9 @@ def _catalog_answer_jit(syn, queries, lam, pi, ov_sel, cat_cover,
             raise ValueError(
                 f"catalog serving supports kinds {CATALOG_KINDS}, "
                 f"got {kind!r}")
-    return out
+    degm = deg_q > 0
+    return {k: _degrade_result(r, degm, level is not None)
+            for k, r in out.items()}
 
 
 __all__ = ["CATALOG_KINDS", "stack_synopses", "pad_partition_synopsis",

@@ -26,6 +26,8 @@ partition-sampling design the two-stage intervals account for.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -38,6 +40,14 @@ from .executor import (stack_synopses, pad_partition_synopsis,
                        empty_partition_synopsis)
 from .picker import pick_partitions
 from .store import PartitionStore
+
+# Materialization containment policy (DESIGN.md §15): a failed partition
+# synopsis build retries with exponential backoff, then the partition is
+# marked degraded — overlapping queries fall back to catalog-granularity
+# hard bounds instead of failing the batch. Module-level so tests can
+# shrink the backoff.
+MATERIALIZE_RETRIES = 3
+MATERIALIZE_BACKOFF_S = 0.001
 
 
 class CatalogSource:
@@ -59,10 +69,12 @@ class CatalogSource:
         self._flat = None
         self._resident: OrderedDict[int, object] = OrderedDict()
         self._built: set[int] = set()
+        self._degraded: set[int] = set()
         self._draws = 0
         self._epoch = 0
         self._stats = {"materialized": 0, "hits": 0, "evictions": 0,
-                       "served_batches": 0}
+                       "served_batches": 0, "materialize_retries": 0,
+                       "materialize_failures": 0}
 
     # -- catalog / mode ----------------------------------------------------
     @property
@@ -85,12 +97,20 @@ class CatalogSource:
     def epoch(self) -> int:
         return self._epoch
 
+    @property
+    def degraded_partitions(self) -> set[int]:
+        """Partitions whose synopsis build failed persistently; queries
+        overlapping them serve catalog-granularity hard bounds."""
+        return set(self._degraded)
+
     def invalidate(self) -> None:
         """Drop every derived artifact (catalog, flat synopsis, resident
-        partition synopses) and bump the epoch so prepared plans re-pin."""
+        partition synopses) and bump the epoch so prepared plans re-pin.
+        Degraded partitions get a fresh chance to materialize."""
         self._catalog = None
         self._flat = None
         self._resident.clear()
+        self._degraded.clear()
         self._epoch += 1
 
     def as_synopsis(self):
@@ -106,26 +126,48 @@ class CatalogSource:
         return self._flat
 
     # -- materialization ---------------------------------------------------
+    def _build_one(self, p: int):
+        cfg = self.config
+        from ..testing import faults as _faults
+        inj = _faults.active()
+        if inj is not None and inj.materialize_fails(p):
+            from ..testing.faults import InjectedFault
+            raise InjectedFault(f"injected materialization failure p={p}")
+        c, a = self.store.rows(p)
+        if c.shape[0] == 0:
+            return empty_partition_synopsis(cfg.k, cfg.s_per_leaf,
+                                            self.store.d)
+        # Per-partition seeds keep every build independent and
+        # reproducible regardless of pick order.
+        assign, k_real, _vmax = partition_assign(
+            c, a, k=cfg.k, method=cfg.method, seed=cfg.seed + p)
+        syn, _info = synopsis_from_assignment(
+            c, a, assign, k_real, s_per_leaf=cfg.s_per_leaf,
+            seed=cfg.seed + p + 1)
+        return pad_partition_synopsis(syn, cfg.k, self.store.d)
+
     def _materialize(self, p: int):
+        """Partition synopsis for ``p``, or ``None`` when the build fails
+        past the retry budget (the partition is then degraded and served
+        from catalog hard bounds until :meth:`invalidate`)."""
         cached = self._resident.get(p)
         if cached is not None:
             self._resident.move_to_end(p)
             self._stats["hits"] += 1
             return cached
-        cfg = self.config
-        c, a = self.store.rows(p)
-        if c.shape[0] == 0:
-            syn = empty_partition_synopsis(cfg.k, cfg.s_per_leaf,
-                                           self.store.d)
-        else:
-            # Per-partition seeds keep every build independent and
-            # reproducible regardless of pick order.
-            assign, k_real, _vmax = partition_assign(
-                c, a, k=cfg.k, method=cfg.method, seed=cfg.seed + p)
-            syn, _info = synopsis_from_assignment(
-                c, a, assign, k_real, s_per_leaf=cfg.s_per_leaf,
-                seed=cfg.seed + p + 1)
-            syn = pad_partition_synopsis(syn, cfg.k, self.store.d)
+        if p in self._degraded:
+            return None
+        for attempt in range(MATERIALIZE_RETRIES + 1):
+            try:
+                syn = self._build_one(p)
+                break
+            except Exception:
+                if attempt >= MATERIALIZE_RETRIES:
+                    self._degraded.add(p)
+                    self._stats["materialize_failures"] += 1
+                    return None
+                self._stats["materialize_retries"] += 1
+                time.sleep(MATERIALIZE_BACKOFF_S * (2 ** attempt))
         self._resident[p] = syn
         self._built.add(p)
         self._stats["materialized"] += 1
@@ -160,9 +202,15 @@ class CatalogSource:
                               seed=cfg.seed + self._draws)
         self._draws += 1
         self._stats["served_batches"] += 1
-        picked = np.flatnonzero(sel.picked)
-        syns = [self._materialize(int(p)) for p in picked]
-        self._evict(set(int(p) for p in picked))
+        syns, ok = [], []
+        for p in np.flatnonzero(sel.picked):
+            syn = self._materialize(int(p))
+            if syn is None:      # degraded: serve from catalog bounds
+                continue
+            ok.append(int(p))
+            syns.append(syn)
+        picked = np.asarray(ok, np.int64)
+        self._evict(set(ok))
         n_sel = len(picked)
         p_pad = 1 << max(0, int(n_sel - 1).bit_length()) if n_sel else 1
         stacked = stack_synopses(syns, p_pad, cfg.k, cfg.s_per_leaf,
@@ -173,12 +221,20 @@ class CatalogSource:
         if n_sel:
             pi[:n_sel] = sel.pi[picked]
             ov_sel[:, :n_sel] = sel.overlap[:, picked]
+        # Queries overlapping a degraded partition widen to the catalog
+        # hard-bound envelope (covered partitions contribute exactly from
+        # the catalog aggregates and never need materialization).
+        deg_q = np.zeros(q, np.float32)
+        if self._degraded:
+            deg = sorted(self._degraded)
+            deg_q = (sel.overlap[:, deg] > 0).any(axis=1).astype(np.float32)
         return (stacked, queries, jnp.float32(lam),
                 jnp.asarray(pi), jnp.asarray(ov_sel),
                 jnp.asarray(sel.cover, jnp.float32),
                 jnp.asarray(sel.overlap, jnp.float32),
                 jnp.asarray(cat.m_agg, jnp.float32),
-                jnp.asarray(float(cat.total_rows), jnp.float32))
+                jnp.asarray(float(cat.total_rows), jnp.float32),
+                jnp.asarray(deg_q))
 
     # -- instrumentation ---------------------------------------------------
     def stats(self) -> dict:
@@ -188,7 +244,8 @@ class CatalogSource:
         up here)."""
         return dict(self._stats, resident=len(self._resident),
                     num_partitions=self.store.num_partitions,
-                    materialized_ids=sorted(self._built))
+                    materialized_ids=sorted(self._built),
+                    degraded=sorted(self._degraded))
 
 
 __all__ = ["CatalogSource"]

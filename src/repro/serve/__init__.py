@@ -17,10 +17,19 @@ device dispatch per bucket per tick, and demux back to per-tenant
 futures — bit-identical to per-tenant ``engine.answer`` calls (tested).
 Admission control sheds overload with the typed :class:`Overloaded`
 error; per-tenant accounting rides along in ``engine.stats()``.
+
+Deadline-aware serving (DESIGN.md §15) lives here too: the refinement
+ladder (:class:`RefinementHandle`, ``engine.answer(deadline_ms=...)``,
+``submit(..., deadline_ms=...)`` degraded routing) and epoch-consistent
+checkpoint/restore (``engine.checkpoint()`` / ``PassEngine.restore()``).
 """
 from .coalescer import RequestCoalescer, Overloaded, PAD_LO, PAD_HI
 from .driver import TickDriver
+from .refine import RefinementHandle, tier0_answer, ladder_tiers
+from .checkpoint import save_engine, load_engine, CHECKPOINT_VERSION
 from ..api.config import CoalescerConfig
 
 __all__ = ["RequestCoalescer", "TickDriver", "Overloaded",
-           "CoalescerConfig", "PAD_LO", "PAD_HI"]
+           "CoalescerConfig", "PAD_LO", "PAD_HI",
+           "RefinementHandle", "tier0_answer", "ladder_tiers",
+           "save_engine", "load_engine", "CHECKPOINT_VERSION"]

@@ -1,0 +1,355 @@
+"""Epoch-consistent checkpoint/restore for ``PassEngine`` (DESIGN.md §15).
+
+One ``.npz`` file holds the complete serving state at an epoch boundary:
+every device array of the source (synopsis, streaming reservoir +
+delta aggregates, sharded per-shard state, join universe buffers, or the
+partition store + catalog bookkeeping) plus a ``__meta__`` JSON record
+(format version, source type, epoch counters, serving/ci configs).
+``load_engine`` rebuilds the source and returns a fresh engine whose
+serving path is bit-identical to the checkpointed one: the arrays are
+restored verbatim, so the same prepared programs compute over the same
+values.
+
+Checkpoints are taken at epoch boundaries only — ``save_engine`` flushes
+an attached request coalescer first so no admitted query straddles the
+snapshot, and every ingestor's ``ingest()`` is atomic (state swaps once
+per batch), so the snapshot never sees a half-applied batch.
+
+PRNG keys (ingestor reservoir keys, the join key-universe root) may be
+new-style typed key arrays; they are serialized via
+``jax.random.key_data`` and revived with ``wrap_key_data`` (raw uint32
+arrays round-trip as-is).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.types import PartitionTree, Synopsis
+
+CHECKPOINT_VERSION = 1
+
+
+# -- PRNG key round-trip ---------------------------------------------------
+def _is_prng_key(x) -> bool:
+    try:
+        return jnp.issubdtype(x.dtype, jax.dtypes.prng_key)
+    except Exception:
+        return False
+
+
+def _put_key(arrays: dict, name: str, key) -> None:
+    if _is_prng_key(key):
+        arrays[name + "@key"] = np.asarray(jax.random.key_data(key))
+    else:
+        arrays[name] = np.asarray(key)
+
+
+def _get_key(arrays, name: str):
+    if name + "@key" in arrays:
+        return jax.random.wrap_key_data(jnp.asarray(arrays[name + "@key"]))
+    return jnp.asarray(arrays[name])
+
+
+# -- generic registered-dataclass walker -----------------------------------
+# The pytree dataclasses here (Synopsis, PartitionTree, StreamState,
+# JoinSynopsis, JoinStreamState, DimTable) are flat records of arrays plus
+# int/str/float meta fields and at most dataclass-valued children; a
+# field-name walk saves/loads them without a per-type schema.
+_NESTED: dict[str, str] = {"tree": "PartitionTree", "base": "Synopsis"}
+
+
+def _put_dc(arrays: dict, prefix: str, obj) -> dict:
+    """Store ``obj``'s array fields under ``prefix/<field>``; return the
+    JSON-safe meta dict (scalars, None markers, nested field metas)."""
+    meta = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        key = f"{prefix}/{f.name}"
+        if dataclasses.is_dataclass(v) and not isinstance(v, type):
+            meta[f.name] = _put_dc(arrays, key, v)
+        elif v is None:
+            meta[f.name] = None
+        elif isinstance(v, (bool, int, float, str)):
+            meta[f.name] = v
+        elif _is_prng_key(v):
+            _put_key(arrays, key, v)
+        else:
+            arrays[key] = np.asarray(v)
+    return meta
+
+
+def _get_dc(cls, arrays, prefix: str, meta: dict, nested: dict | None = None):
+    """Inverse of :func:`_put_dc`; ``nested`` maps field name -> class for
+    dataclass-valued children."""
+    nested = nested or {}
+    kw = {}
+    for f in dataclasses.fields(cls):
+        key = f"{prefix}/{f.name}"
+        if f.name in nested and isinstance(meta.get(f.name), dict):
+            kw[f.name] = _get_dc(nested[f.name], arrays, key,
+                                 meta[f.name], nested)
+        elif key in arrays:
+            kw[f.name] = jnp.asarray(arrays[key])
+        elif key + "@key" in arrays:
+            kw[f.name] = _get_key(arrays, key)
+        elif f.name in meta:
+            kw[f.name] = meta[f.name]
+        elif f.default is not dataclasses.MISSING:
+            kw[f.name] = f.default
+        else:
+            raise KeyError(
+                f"checkpoint missing field {key!r} for {cls.__name__}")
+    return cls(**kw)
+
+
+def _load_synopsis(arrays, prefix: str, meta: dict) -> Synopsis:
+    return _get_dc(Synopsis, arrays, prefix, meta,
+                   nested={"tree": PartitionTree})
+
+
+# -- config round-trip -----------------------------------------------------
+def _config_meta(cfg) -> dict | None:
+    if cfg is None:
+        return None
+    d = {}
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        if f.name == "key" and not (v is None or isinstance(v, int)):
+            # A materialized PRNG key array is not JSON; the restored
+            # engine re-derives intervals from the seedless default.
+            v = None
+        if isinstance(v, tuple):
+            v = list(v)
+        d[f.name] = v
+    return d
+
+
+def _config_from_meta(cls, d: dict | None):
+    if d is None:
+        return None
+    return cls(**{k: (tuple(v) if isinstance(v, list) else v)
+                  for k, v in d.items()})
+
+
+def _put_qbox(arrays: dict, meta: dict, qlo, qhi) -> None:
+    if qlo is not None:
+        arrays["qbox/lo"] = np.asarray(qlo)
+        arrays["qbox/hi"] = np.asarray(qhi)
+        meta["has_qbox"] = True
+
+
+def _get_qbox(arrays, meta: dict):
+    if meta.get("has_qbox"):
+        return (np.asarray(arrays["qbox/lo"]), np.asarray(arrays["qbox/hi"]))
+    return None
+
+
+# -- save ------------------------------------------------------------------
+def save_engine(engine, path) -> dict:
+    """Snapshot ``engine``'s serving state into one ``.npz`` at ``path``.
+
+    Flushes the attached coalescer (if any) so the snapshot lands on an
+    epoch boundary with zero queued requests, then dispatches on source
+    type. Returns the metadata dict that was embedded in the file.
+    """
+    from ..streaming.ingest import StreamingIngestor
+    from ..streaming.join_ingest import JoinStreamingIngestor
+    from ..sharded.ingest import ShardedIngestor
+
+    if engine._coalescer is not None:
+        engine._coalescer.flush()
+
+    src = engine._source
+    arrays: dict[str, np.ndarray] = {}
+    meta: dict = {
+        "version": CHECKPOINT_VERSION,
+        "epoch": int(getattr(src, "epoch", 0)),
+        "serving": _config_meta(engine.serving),
+        "ci": _config_meta(engine.ci),
+    }
+
+    if isinstance(src, JoinStreamingIngestor):
+        meta["source"] = "join_streaming"
+        meta["backend"] = src._backend
+        meta["jsyn"] = _put_dc(arrays, "jsyn", src._join_base)
+        meta["state"] = _put_dc(arrays, "state", src.state)
+        meta["jstate"] = _put_dc(arrays, "jstate", src.jstate)
+        _put_key(arrays, "ing/key", src._key)
+        meta["n_stream"] = int(src.n_stream)
+        meta["n_regrown"] = int(src.n_regrown)
+        _put_qbox(arrays, meta, src._qlo, src._qhi)
+        if src._pending:
+            arrays["pending/c"] = np.concatenate(
+                [np.asarray(p[0]) for p in src._pending], axis=0)
+            arrays["pending/a"] = np.concatenate(
+                [np.asarray(p[1]) for p in src._pending])
+            arrays["pending/k"] = np.concatenate(
+                [np.asarray(p[2]) for p in src._pending])
+            meta["has_pending"] = True
+    elif isinstance(src, ShardedIngestor):
+        meta["source"] = "sharded"
+        meta["backend"] = src._backend
+        meta["n_shards"] = int(src.n_shards)
+        meta["base"] = _put_dc(arrays, "base", src.base)
+        meta["state"] = _put_dc(arrays, "state", src.state)
+        _put_key(arrays, "ing/key", src._key)
+        meta["n_stream"] = int(src.n_stream)
+        meta["fault_stats"] = dict(src._fault_stats)
+        if src._route is not None:
+            arrays["route/lo"] = np.asarray(src._route[0])
+            arrays["route/hi"] = np.asarray(src._route[1])
+            meta["has_route"] = True
+        # The sharded quarantine box is always materialized; +/-inf means
+        # "finiteness checks only" and round-trips as the identity box.
+        _put_qbox(arrays, meta, src._qlo, src._qhi)
+    elif isinstance(src, StreamingIngestor):
+        meta["source"] = "streaming"
+        meta["backend"] = src._backend
+        meta["base"] = _put_dc(arrays, "base", src.base)
+        meta["state"] = _put_dc(arrays, "state", src.state)
+        _put_key(arrays, "ing/key", src._key)
+        meta["n_stream"] = int(src.n_stream)
+        _put_qbox(arrays, meta, src._qlo, src._qhi)
+    elif getattr(src, "is_catalog_source", False):
+        meta["source"] = "catalog"
+        meta["config"] = _config_meta(src.config)
+        meta["num_partitions"] = int(src.store.num_partitions)
+        meta["draws"] = int(src._draws)
+        meta["degraded"] = sorted(getattr(src, "_degraded", ()))
+        try:
+            meta["build_kw"] = json.loads(json.dumps(src._build_kw))
+        except (TypeError, ValueError):
+            meta["build_kw"] = {}
+        for p, (c, a) in enumerate(src.store.parts()):
+            arrays[f"part/{p}/c"] = np.asarray(c)
+            arrays[f"part/{p}/a"] = np.asarray(a)
+    elif isinstance(src, Synopsis):
+        meta["source"] = "synopsis"
+        meta["syn"] = _put_dc(arrays, "syn", src)
+    else:
+        raise TypeError(
+            f"cannot checkpoint source of type {type(src).__name__}")
+
+    arrays["__meta__"] = np.asarray(json.dumps(meta))
+    np.savez(path, **arrays)
+    return meta
+
+
+# -- load ------------------------------------------------------------------
+def _restore_source(arrays, meta: dict, mesh):
+    from ..streaming.ingest import StreamState, StreamingIngestor
+    from ..streaming.join_ingest import (JoinStreamState,
+                                         JoinStreamingIngestor)
+    from ..sharded.ingest import ShardedIngestor
+    from ..sharded.mesh import shard_leading
+
+    kind = meta["source"]
+    if kind == "synopsis":
+        return _load_synopsis(arrays, "syn", meta["syn"])
+
+    if kind == "streaming":
+        base = _load_synopsis(arrays, "base", meta["base"])
+        ing = StreamingIngestor(base, key=_get_key(arrays, "ing/key"),
+                                backend=meta["backend"],
+                                quarantine_box=_get_qbox(arrays, meta))
+        ing.state = _get_dc(StreamState, arrays, "state", meta["state"])
+        ing.n_stream = int(meta["n_stream"])
+        ing._epoch = int(meta["epoch"])
+        return ing
+
+    if kind == "sharded":
+        base = _load_synopsis(arrays, "base", meta["base"])
+        route = None
+        if meta.get("has_route"):
+            route = (np.asarray(arrays["route/lo"]),
+                     np.asarray(arrays["route/hi"]))
+        ing = ShardedIngestor(base, mesh=mesh,
+                              key=_get_key(arrays, "ing/key"),
+                              backend=meta["backend"], route_boxes=route,
+                              quarantine_box=_get_qbox(arrays, meta))
+        if ing.n_shards != int(meta["n_shards"]):
+            raise ValueError(
+                f"checkpoint was taken with {meta['n_shards']} shards but "
+                f"the restore mesh has {ing.n_shards}; restore on a mesh "
+                "of the same size (per-shard state is not resharded)")
+        ing.state = shard_leading(
+            ing.mesh, _get_dc(StreamState, arrays, "state", meta["state"]))
+        ing.n_stream = int(meta["n_stream"])
+        ing._epoch = int(meta["epoch"])
+        ing._fault_stats.update(meta.get("fault_stats", {}))
+        return ing
+
+    if kind == "join_streaming":
+        from ..joins.synopsis import JoinSynopsis
+        from ..joins.dim import DimTable
+        jsyn = _get_dc(JoinSynopsis, arrays, "jsyn", meta["jsyn"],
+                       nested={"base": Synopsis, "tree": PartitionTree,
+                               "dim": DimTable})
+        ing = JoinStreamingIngestor(jsyn, key=_get_key(arrays, "ing/key"),
+                                    backend=meta["backend"],
+                                    quarantine_box=_get_qbox(arrays, meta))
+        ing.state = _get_dc(StreamState, arrays, "state", meta["state"])
+        ing.jstate = _get_dc(JoinStreamState, arrays, "jstate",
+                             meta["jstate"])
+        ing.n_stream = int(meta["n_stream"])
+        ing.n_regrown = int(meta["n_regrown"])
+        ing._epoch = int(meta["epoch"])
+        if meta.get("has_pending"):
+            ing._pending = [(np.asarray(arrays["pending/c"]),
+                             np.asarray(arrays["pending/a"]),
+                             np.asarray(arrays["pending/k"]))]
+        return ing
+
+    if kind == "catalog":
+        from ..api.config import CatalogConfig
+        from ..partitions.source import CatalogSource
+        from ..partitions.store import PartitionStore
+        parts = [(np.asarray(arrays[f"part/{p}/c"]),
+                  np.asarray(arrays[f"part/{p}/a"]))
+                 for p in range(int(meta["num_partitions"]))]
+        src = CatalogSource(PartitionStore(parts),
+                            _config_from_meta(CatalogConfig, meta["config"]),
+                            build_kw=meta.get("build_kw") or None)
+        src._draws = int(meta["draws"])
+        src._epoch = int(meta["epoch"])
+        if meta.get("degraded"):
+            src._degraded = set(int(p) for p in meta["degraded"])
+        return src
+
+    raise ValueError(f"unknown checkpoint source type {kind!r}")
+
+
+def load_engine(cls, path, *, serving=None, ci=None, mesh=None,
+                plan_cache_size: int = 32):
+    """Rebuild a ``cls`` (PassEngine) from a :func:`save_engine` file.
+
+    ``serving=`` / ``ci=`` override the checkpointed configs; ``mesh``
+    is required context for sharded checkpoints restored onto an explicit
+    mesh (defaults to the ambient data mesh, which must have the same
+    shard count the checkpoint was taken with).
+    """
+    from ..api.config import CIConfig, ServingConfig
+
+    with np.load(path, allow_pickle=False) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    meta = json.loads(str(arrays.pop("__meta__")[()]))
+    if int(meta.get("version", -1)) != CHECKPOINT_VERSION:
+        raise ValueError(
+            f"checkpoint version {meta.get('version')!r} is not supported "
+            f"(expected {CHECKPOINT_VERSION})")
+
+    source = _restore_source(arrays, meta, mesh)
+    if serving is None:
+        serving = _config_from_meta(ServingConfig, meta["serving"])
+    if ci is None:
+        ci = _config_from_meta(CIConfig, meta["ci"])
+    return cls(source, serving=serving, ci=ci,
+               plan_cache_size=plan_cache_size)
+
+
+__all__ = ["CHECKPOINT_VERSION", "save_engine", "load_engine"]

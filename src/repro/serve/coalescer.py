@@ -107,6 +107,7 @@ class _Pending:
     t_submit: float
     rows: int
     join: bool = False
+    t_deadline: float | None = None   # absolute perf_counter deadline
     dups: list = dataclasses.field(default_factory=list)
 
 
@@ -163,7 +164,12 @@ class RequestCoalescer:
         self._tenants: dict[object, _TenantAccount] = {}
         self._stats = {"submitted": 0, "served": 0, "shed": 0,
                        "dispatches": 0, "ticks": 0, "coalesced_rows": 0,
-                       "padded_rows": 0, "epoch_drains": 0, "dedup_hits": 0}
+                       "padded_rows": 0, "epoch_drains": 0, "dedup_hits": 0,
+                       "degraded_served": 0, "failed": 0,
+                       "driver_errors": 0, "last_driver_error": None}
+        # EWMA of device dispatch latency — the deadline router compares
+        # a request's remaining budget against this prediction.
+        self._dispatch_ewma_ms = 0.0
         self._epoch = engine.epoch
         self._generation = engine._generation
         # The synchronous demux completes every dispatch before tick()
@@ -186,7 +192,8 @@ class RequestCoalescer:
 
     def submit(self, tenant, queries: QueryBatch, *, kinds=None, ci=_UNSET,
                serving: ServingConfig | None = None,
-               join: bool = False) -> Future:
+               join: bool = False,
+               deadline_ms: float | None = None) -> Future:
         """Queue one tenant request; returns a Future resolving to the
         same ``{kind: QueryResult}`` dict ``engine.answer`` would return
         (bit-identically — see tests). ``kinds=``/``ci=``/``serving=``
@@ -197,34 +204,56 @@ class RequestCoalescer:
         any layout ``answer_join`` accepts; join requests bucket apart
         from single-table ones). Raises :class:`Overloaded` when
         admission control sheds the request.
+
+        ``deadline_ms`` opts the request into degraded serving instead of
+        shedding: a submission admission control would reject, or a tick
+        that predicts the device dispatch would blow the remaining budget,
+        serves the tier-0 aggregates-only answer (hard-bound envelope,
+        zero sample work) immediately rather than raising
+        :class:`Overloaded` or missing the deadline. Single-table
+        requests only — tier-0 has no join analogue.
         """
         if join:
+            if deadline_ms is not None:
+                raise ValueError(
+                    "deadline_ms applies to single-table requests only "
+                    "(tier-0 degraded serving has no join analogue)")
             sv, cfg = self.engine._effective_join(kinds, ci, serving)
             queries = self.engine._as_join_batch(queries)
         else:
             sv, cfg = self.engine._effective(kinds, ci, serving)
+        if deadline_ms is not None and deadline_ms < 0:
+            raise ValueError(f"deadline_ms must be >= 0, got {deadline_ms}")
         if queries.lo.ndim != 2 or queries.lo.shape[0] < 1:
             raise ValueError(
                 f"expected a non-empty (q, d) batch, got {queries.lo.shape}")
+        now = time.perf_counter()
         pend = _Pending(tenant=tenant, queries=queries, serving=sv, ci=cfg,
-                        future=Future(), t_submit=time.perf_counter(),
-                        rows=int(queries.lo.shape[0]), join=join)
+                        future=Future(), t_submit=now,
+                        rows=int(queries.lo.shape[0]), join=join,
+                        t_deadline=(None if deadline_ms is None
+                                    else now + deadline_ms / 1e3))
         with self._lock:
             acct = self._account(tenant)
+            shed_reason = None
             if len(self._queue) >= self.config.max_queue_depth:
+                shed_reason = ("queue_depth", self.config.max_queue_depth)
+            elif acct.outstanding >= self.config.max_outstanding:
+                shed_reason = ("tenant_outstanding",
+                               self.config.max_outstanding)
+            if shed_reason is not None and pend.t_deadline is None:
                 acct.shed += 1
                 self._stats["shed"] += 1
-                raise Overloaded(tenant, "queue_depth",
-                                 self.config.max_queue_depth)
-            if acct.outstanding >= self.config.max_outstanding:
-                acct.shed += 1
-                self._stats["shed"] += 1
-                raise Overloaded(tenant, "tenant_outstanding",
-                                 self.config.max_outstanding)
-            acct.outstanding += 1
+                raise Overloaded(tenant, *shed_reason)
             acct.requests += 1
             self._stats["submitted"] += 1
-            self._queue.append(pend)
+            if shed_reason is None:
+                acct.outstanding += 1
+                self._queue.append(pend)
+        if shed_reason is not None:
+            # Deadline-aware overload: the request that would have been
+            # shed gets the degraded tier inline (no queue slot consumed).
+            self._serve_tier0(pend, count_outstanding=False)
         return pend.future
 
     def answer(self, tenant, queries: QueryBatch, *, timeout=None,
@@ -289,9 +318,37 @@ class RequestCoalescer:
             off += p.rows
         return QueryBatch(jnp.asarray(lo), jnp.asarray(hi))
 
+    def _serve_tier0(self, p: _Pending, count_outstanding: bool = True
+                     ) -> None:
+        """Resolve one request with the tier-0 aggregates-only answer
+        (deadline-degraded path: planner hard bounds, zero sample work,
+        no device dispatch)."""
+        from .refine import tier0_answer
+        try:
+            res = tier0_answer(self.engine, p.queries, p.serving.kinds)
+        except Exception as exc:
+            p.future.set_exception(exc)
+            res = None
+        now = time.perf_counter()
+        with self._lock:
+            acct = self._account(p.tenant)
+            if count_outstanding:
+                acct.outstanding -= 1
+            if res is not None:
+                acct.queries += p.rows
+                acct.waits.append(now - p.t_submit)
+                self._stats["served"] += 1
+                self._stats["degraded_served"] += 1
+            else:
+                self._stats["failed"] += 1
+        if res is not None:
+            self.engine._stats["degraded_serves"] += 1
+            p.future.set_result(res)
+
     def _dispatch(self, group: list[_Pending], padded_b: int,
                   serving: ServingConfig, ci: CIConfig | None) -> None:
         """Serve one padded batch (one device dispatch) and demux."""
+        t0 = time.perf_counter()
         d = int(group[0].queries.lo.shape[1])
         rows = sum(p.rows for p in group)
         pad = padded_b - rows
@@ -312,11 +369,15 @@ class RequestCoalescer:
                 p.future.set_exception(exc)
             self._finish(everyone, served=False)
             return
+        dt_ms = (time.perf_counter() - t0) * 1e3
         with self._lock:
             self._dispatched_since_drain = True
             self._stats["dispatches"] += 1
             self._stats["coalesced_rows"] += rows
             self._stats["padded_rows"] += pad
+            self._dispatch_ewma_ms = (
+                dt_ms if self._dispatch_ewma_ms == 0.0
+                else 0.7 * self._dispatch_ewma_ms + 0.3 * dt_ms)
         off = 0
         for p in group:
             p.future.set_result(_slice_results(host, off, p.rows))
@@ -345,8 +406,29 @@ class RequestCoalescer:
         first-submission order and pack requests in arrival order, so a
         given submission sequence always yields the same batches.
         """
+        from ..testing import faults as _faults
+        inj = _faults.active()
+        if inj is not None:
+            delay = inj.tick_delay_s()
+            if delay:
+                time.sleep(delay)   # injected straggler tick
         with self._lock:
             batch, self._queue = self._queue, []
+        if not batch:
+            self._stats["ticks"] += 1
+            return 0
+        # Deadline routing: a request whose remaining budget is unlikely
+        # to survive a device dispatch (EWMA prediction) gets the tier-0
+        # degraded answer now instead of missing its deadline in a bucket.
+        now = time.perf_counter()
+        ready = []
+        for p in batch:
+            if (p.t_deadline is not None
+                    and (p.t_deadline - now) * 1e3 <= self._dispatch_ewma_ms):
+                self._serve_tier0(p)
+            else:
+                ready.append(p)
+        batch = ready
         if not batch:
             self._stats["ticks"] += 1
             return 0
@@ -405,6 +487,30 @@ class RequestCoalescer:
             if empty:
                 return total
             total += self.tick()
+
+    def fail_pending(self, exc: BaseException) -> int:
+        """Fail every queued future with ``exc`` and release their queue
+        accounting; returns the number of requests failed. The driver's
+        last-resort containment — no future is ever left unresolved by a
+        tick that cannot run."""
+        with self._lock:
+            batch, self._queue = self._queue, []
+            for p in batch:
+                acct = self._account(p.tenant)
+                acct.outstanding -= 1
+                self._stats["failed"] += 1
+        for p in batch:
+            p.future.set_exception(exc)
+        return len(batch)
+
+    def _record_driver_error(self, exc: BaseException) -> None:
+        """Surface an exception that escaped a driver tick: count it,
+        pin its repr in ``stats()``, and fail whatever was queued so no
+        submitter blocks forever on a dead tick."""
+        with self._lock:
+            self._stats["driver_errors"] += 1
+            self._stats["last_driver_error"] = repr(exc)
+        self.fail_pending(exc)
 
     # -- telemetry ---------------------------------------------------------
     @property

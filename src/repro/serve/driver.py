@@ -53,8 +53,15 @@ class TickDriver:
         return self
 
     def _run(self) -> None:
+        # An exception escaping tick() must not kill the loop silently
+        # with futures still pending: record it, fail whatever is queued,
+        # and keep ticking (the next tick may succeed — e.g. a transient
+        # injected fault or a single poisoned bucket).
         while not self._stop.wait(self.tick_s):
-            self.coalescer.tick()
+            try:
+                self.coalescer.tick()
+            except Exception as exc:
+                self.coalescer._record_driver_error(exc)
 
     def stop(self, flush: bool = True) -> None:
         if self._thread is None:
@@ -63,7 +70,12 @@ class TickDriver:
         self._thread.join()
         self._thread = None
         if flush:
-            self.coalescer.flush()
+            try:
+                self.coalescer.flush()
+            except Exception as exc:
+                # Shutdown must resolve every future even when the flush
+                # itself cannot serve them.
+                self.coalescer._record_driver_error(exc)
 
     @property
     def running(self) -> bool:

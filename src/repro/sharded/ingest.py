@@ -31,12 +31,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+import time
+
+import numpy as np
+
 from ..core.types import Synopsis, AGG_COUNT
 from ..kernels.registry import get_backend
 from ..streaming.ingest import (StreamState, _ingest_core, _apply_routed,
-                                empty_delta_agg)
+                                empty_delta_agg, quarantine_mask)
+from ..testing import faults as _faults
 from .mesh import (Mesh, P, SHARD_AXIS, shard_map, data_mesh, num_shards,
                    shard_leading, split_rows)
+
+# Containment policy for failed shard dispatches: retry with exponential
+# backoff, then drop the batch and count it (tests patch these down).
+DISPATCH_RETRIES = 4
+DISPATCH_BACKOFF_S = 0.001
 
 
 def init_sharded_state(base: Synopsis, n_shards: int) -> StreamState:
@@ -86,32 +96,40 @@ def init_sharded_state(base: Synopsis, n_shards: int) -> StreamState:
         sample_c=sc, sample_a=sa, sample_valid=sv,
         k_per_leaf=kpl.astype(jnp.int32),
         seen=(kpl + extra_i).astype(jnp.int32),
-        oob=jnp.zeros((D,), jnp.int32))
+        oob=jnp.zeros((D,), jnp.int32),
+        quarantined=jnp.zeros((D,), jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("backend_name", "mesh"))
 def _sharded_ingest_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
                          keys: jax.Array, mask: jnp.ndarray,
+                         qlo: jnp.ndarray, qhi: jnp.ndarray,
                          backend_name: str, mesh: Mesh) -> StreamState:
-    """Streaming-phase step: live per-shard box routing, no collectives."""
-    def shard_fn(st, cb, ab, kb, mb):
+    """Streaming-phase step: live per-shard box routing, no collectives.
+    ``qlo``/``qhi`` are the replicated (d,) quarantine box (+/-inf when
+    only the non-finite checks apply)."""
+    def shard_fn(st, cb, ab, kb, mb, ql, qh):
         st0 = jax.tree_util.tree_map(lambda x: x[0], st)
         u = jax.random.uniform(kb[0], (ab.shape[1],), jnp.float32)
-        new = _ingest_core(st0, cb[0], ab[0], u, backend_name, mask=mb[0])
+        new = _ingest_core(st0, cb[0], ab[0], u, backend_name, mask=mb[0],
+                           qlo=ql, qhi=qh)
         return jax.tree_util.tree_map(lambda x: x[None], new)
 
     spec = P(SHARD_AXIS)
     # check_rep=False: the replication checker has no rule for pallas_call,
     # so the pallas backend's kernels would abort tracing; nothing here is
     # claimed replicated anyway (all out_specs are sharded).
-    return shard_map(shard_fn, mesh=mesh, in_specs=(spec,) * 5,
-                     out_specs=spec, check_rep=False)(state, c, a, keys, mask)
+    return shard_map(shard_fn, mesh=mesh,
+                     in_specs=(spec, spec, spec, spec, spec, P(), P()),
+                     out_specs=spec, check_rep=False)(state, c, a, keys, mask,
+                                                      qlo, qhi)
 
 
 @partial(jax.jit, static_argnames=("backend_name", "mesh"))
 def _sharded_build_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
                         keys: jax.Array, mask: jnp.ndarray,
                         route_lo: jnp.ndarray, route_hi: jnp.ndarray,
+                        qlo: jnp.ndarray, qhi: jnp.ndarray,
                         backend_name: str, mesh: Mesh) -> StreamState:
     """Build-phase step: route against the replicated static cut skeleton.
 
@@ -122,9 +140,13 @@ def _sharded_build_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
     lowest-leaf-id tie-break makes the assignment deterministic — in both
     cases independent of the shard count and of ingestion order.
     """
-    def shard_fn(st, cb, ab, kb, mb, rlo, rhi):
+    def shard_fn(st, cb, ab, kb, mb, rlo, rhi, ql, qh):
         st0 = jax.tree_util.tree_map(lambda x: x[0], st)
         cb0, ab0, mb0 = cb[0], ab[0], mb[0]
+        bad = quarantine_mask(cb0, ab0, ql, qh)
+        n_quar = jnp.sum(bad & mb0).astype(jnp.int32)
+        mb0 = mb0 & ~bad
+        cb0 = jnp.where(bad[:, None], 0.0, cb0)   # keep routing NaN-free
         u = jax.random.uniform(kb[0], (ab0.shape[0],), jnp.float32)
         if cb0.shape[1] == 1:
             thr = rlo[1:, 0]
@@ -133,15 +155,18 @@ def _sharded_build_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
             dsel = jnp.zeros(cb0.shape[0], jnp.float32)
         else:
             leaf, dsel = get_backend(backend_name).route_multid(rlo, rhi, cb0)
-        new = _apply_routed(st0, cb0, ab0, u, leaf, dsel, backend_name, mb0)
+        new = _apply_routed(st0, cb0, ab0, u, leaf, dsel, backend_name, mb0,
+                            n_quar=n_quar)
         return jax.tree_util.tree_map(lambda x: x[None], new)
 
     spec = P(SHARD_AXIS)
     # check_rep=False: same pallas_call caveat as _sharded_ingest_step.
     return shard_map(shard_fn, mesh=mesh,
-                     in_specs=(spec, spec, spec, spec, spec, P(), P()),
+                     in_specs=(spec, spec, spec, spec, spec, P(), P(),
+                               P(), P()),
                      out_specs=spec, check_rep=False)(state, c, a, keys, mask,
-                                                      route_lo, route_hi)
+                                                      route_lo, route_hi,
+                                                      qlo, qhi)
 
 
 class ShardedIngestor:
@@ -161,7 +186,8 @@ class ShardedIngestor:
     def __init__(self, base: Synopsis, *, mesh: Mesh | None = None,
                  seed: int = 0, key: jax.Array | None = None,
                  backend: str | None = None,
-                 route_boxes: tuple | None = None):
+                 route_boxes: tuple | None = None,
+                 quarantine_box: tuple | None = None):
         from ..streaming.delta import subtree_leaf_matrix
         self.mesh = mesh if mesh is not None else data_mesh()
         self.n_shards = num_shards(self.mesh)
@@ -175,10 +201,23 @@ class ShardedIngestor:
         if route_boxes is not None:
             self._route = (jnp.asarray(route_boxes[0], jnp.float32),
                            jnp.asarray(route_boxes[1], jnp.float32))
+        # Quarantine box as replicated (d,) arrays; +/-inf = non-finite
+        # checks only (the shard_map step always takes box operands, so
+        # toggling the box never retraces).
+        if quarantine_box is not None:
+            self._qlo = jnp.reshape(
+                jnp.asarray(quarantine_box[0], jnp.float32), (-1,))
+            self._qhi = jnp.reshape(
+                jnp.asarray(quarantine_box[1], jnp.float32), (-1,))
+        else:
+            self._qlo = jnp.full((base.d,), -jnp.inf, jnp.float32)
+            self._qhi = jnp.full((base.d,), jnp.inf, jnp.float32)
         self.n_stream = 0
         self._base_rows = int(base.total_rows)
         self._epoch = 0
         self._merged: Synopsis | None = None
+        self._fault_stats = {"dispatch_retries": 0, "dropped_batches": 0,
+                             "poisoned_batches": 0}
 
     @property
     def epoch(self) -> int:
@@ -197,26 +236,60 @@ class ShardedIngestor:
         a seeded sharded run is deterministic (for a fixed shard count —
         different meshes draw different reservoirs, which is why the
         cross-device-count invariants are on aggregates, not samples)."""
+        inj = _faults.active()
+        if inj is not None:
+            c_rows, a_vals, poisoned = inj.poison_batch(
+                np.asarray(c_rows, np.float32), np.asarray(a_vals, np.float32))
+            self._fault_stats["poisoned_batches"] += int(poisoned)
         c = jnp.asarray(c_rows, jnp.float32)
         if c.ndim == 1:
             c = jnp.reshape(c, (-1, 1))
         a = jnp.reshape(jnp.asarray(a_vals, jnp.float32), (-1,))
         b = a.shape[0]
         csh, ash, mask = split_rows(c, a, self.n_shards)
+        # The PRNG split happens before dispatch, so a retried dispatch
+        # consumes the exact same per-shard subkeys — a transient shard
+        # failure that recovers is bit-identical to a clean run.
         keys = jax.random.split(self._key, self.n_shards + 1)
         self._key = keys[0]
-        if self._route is None:
-            self.state = _sharded_ingest_step(
-                self.state, csh, ash, keys[1:], mask, self._backend,
-                self.mesh)
-        else:
-            self.state = _sharded_build_step(
-                self.state, csh, ash, keys[1:], mask, self._route[0],
-                self._route[1], self._backend, self.mesh)
+        new_state = self._dispatch(csh, ash, keys[1:], mask, inj)
+        if new_state is None:                  # dropped after max retries
+            self._fault_stats["dropped_batches"] += 1
+            return self
+        self.state = new_state
         self.n_stream += b
         self._epoch += 1
         self._merged = None
         return self
+
+    def _dispatch(self, csh, ash, keys, mask, inj):
+        """One sharded step with the fault hook: retry with exponential
+        backoff on :class:`~repro.testing.faults.InjectedFault`, give up
+        (drop the batch, keep serving) after ``DISPATCH_RETRIES``."""
+        for attempt in range(DISPATCH_RETRIES + 1):
+            try:
+                if inj is not None and inj.shard_dispatch_fails(attempt):
+                    raise _faults.InjectedFault(
+                        f"shard dispatch (attempt {attempt})")
+                if self._route is None:
+                    return _sharded_ingest_step(
+                        self.state, csh, ash, keys, mask, self._qlo,
+                        self._qhi, self._backend, self.mesh)
+                return _sharded_build_step(
+                    self.state, csh, ash, keys, mask, self._route[0],
+                    self._route[1], self._qlo, self._qhi, self._backend,
+                    self.mesh)
+            except _faults.InjectedFault:
+                if attempt >= DISPATCH_RETRIES:
+                    return None
+                self._fault_stats["dispatch_retries"] += 1
+                time.sleep(DISPATCH_BACKOFF_S * (2 ** attempt))
+        return None
+
+    def fault_stats(self) -> dict:
+        """Containment counters (dispatch retries, dropped/poisoned
+        batches) for ``engine.stats()['faults']``."""
+        return dict(self._fault_stats)
 
     # -- drift signals -------------------------------------------------------
     @property
@@ -224,8 +297,13 @@ class ShardedIngestor:
         return int(jnp.sum(self.state.oob))
 
     @property
+    def n_quarantined(self) -> int:
+        """Rows rejected by ingest validation, summed over shards."""
+        return int(jnp.sum(self.state.quarantined))
+
+    @property
     def total_rows(self) -> int:
-        return self._base_rows + self.n_stream
+        return self._base_rows + self.n_stream - self.n_quarantined
 
     def staleness(self) -> float:
         return self.n_stream / max(self.total_rows, 1)

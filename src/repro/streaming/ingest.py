@@ -43,7 +43,7 @@ from ..kernels.registry import get_backend
 @partial(jax.tree_util.register_dataclass,
          data_fields=["leaf_lo", "leaf_hi", "delta_agg",
                       "sample_c", "sample_a", "sample_valid",
-                      "k_per_leaf", "seen", "oob"],
+                      "k_per_leaf", "seen", "oob", "quarantined"],
          meta_fields=[])
 @dataclasses.dataclass
 class StreamState:
@@ -55,7 +55,9 @@ class StreamState:
     sample and are replaced in place); ``seen`` is the Vitter denominator
     (base row count + streamed rows per stratum). ``oob`` accumulates the
     out-of-box drift counter on device so the hot loop never dispatches an
-    eager op or blocks on a host readback.
+    eager op or blocks on a host readback; ``quarantined`` counts rejected
+    rows (non-finite measure/coordinates, or outside the quarantine box)
+    the same way.
     """
     leaf_lo: jax.Array       # (k, d) f32 current boxes (base U streamed)
     leaf_hi: jax.Array       # (k, d) f32
@@ -66,6 +68,7 @@ class StreamState:
     k_per_leaf: jax.Array    # (k,) int32 filled slots
     seen: jax.Array          # (k,) int32 rows ever routed to the stratum
     oob: jax.Array           # () int32 streamed rows outside every box
+    quarantined: jax.Array | None = None  # () int32 rejected rows
 
 
 def empty_delta_agg(k: int) -> jnp.ndarray:
@@ -140,6 +143,20 @@ def _route_1d(leaf_lo, leaf_hi, c):
     return order[sel].astype(jnp.int32), dist
 
 
+def quarantine_mask(c: jnp.ndarray, a: jnp.ndarray,
+                    qlo: jnp.ndarray | None = None,
+                    qhi: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(B,) bool mask of rows that must be quarantined: non-finite measure
+    or coordinates always; coordinates outside the per-dimension
+    ``[qlo, qhi]`` quarantine box when one is given. A NaN/Inf measure
+    poisons every downstream moment (SUM/SUMSQ go NaN and never recover),
+    so these rows are counted and dropped instead of ingested."""
+    bad = ~jnp.isfinite(a) | ~jnp.all(jnp.isfinite(c), axis=1)
+    if qlo is not None:
+        bad = bad | jnp.any((c < qlo[None, :]) | (c > qhi[None, :]), axis=1)
+    return bad
+
+
 def _batch_occupancy(leaf: jnp.ndarray) -> jnp.ndarray:
     """Within-batch rank of each row inside its leaf group (0-based)."""
     b = leaf.shape[0]
@@ -154,32 +171,46 @@ def _batch_occupancy(leaf: jnp.ndarray) -> jnp.ndarray:
 
 def _ingest_core(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
                  u: jnp.ndarray, backend_name: str,
-                 mask: jnp.ndarray | None = None) -> StreamState:
+                 mask: jnp.ndarray | None = None,
+                 qlo: jnp.ndarray | None = None,
+                 qhi: jnp.ndarray | None = None) -> StreamState:
     """One ingested batch -> new state (pure; all counters device-side).
 
     ``mask`` (B,) bool marks real rows; ``False`` rows are padding (the
     sharded ingest pads ragged batches up to a multiple of the shard
     count) and must be complete no-ops: they are routed (fixed shapes) but
     contribute nothing to aggregates, boxes, counters, or the reservoir.
+    Quarantined rows (:func:`quarantine_mask`) reuse the exact same no-op
+    machinery, plus a bump of the device-resident ``quarantined`` counter.
     """
     be = get_backend(backend_name)
     b, d = c.shape
+    if mask is None:
+        mask = jnp.ones(b, dtype=bool)
+    bad = quarantine_mask(c, a, qlo, qhi)
+    n_quar = jnp.sum(bad & mask).astype(jnp.int32)
+    mask = mask & ~bad
+    # NaN coordinates would make the routing comparisons unordered; any
+    # in-range leaf id works for a masked-out row, so route from zeros.
+    c_route = jnp.where(bad[:, None], 0.0, c)
 
     # 1. route (one pass against batch-entry boxes); 1-D dodges the dense
     #    (B, k) distance matrix entirely — see _route_1d; d > 1 dispatches
     #    through the registry (`pallas` streams leaf tiles with an online
     #    (min, argmin) pair, `jnp`/`ref` use the dense oracle)
     if d == 1:
-        leaf, dsel = _route_1d(state.leaf_lo, state.leaf_hi, c)
+        leaf, dsel = _route_1d(state.leaf_lo, state.leaf_hi, c_route)
     else:
-        leaf, dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c)
-    return _apply_routed(state, c, a, u, leaf, dsel, backend_name, mask)
+        leaf, dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c_route)
+    return _apply_routed(state, c, a, u, leaf, dsel, backend_name, mask,
+                         n_quar=n_quar)
 
 
 def _apply_routed(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
                   u: jnp.ndarray, leaf: jnp.ndarray, dsel: jnp.ndarray,
                   backend_name: str,
-                  mask: jnp.ndarray | None = None) -> StreamState:
+                  mask: jnp.ndarray | None = None,
+                  n_quar: jnp.ndarray | None = None) -> StreamState:
     """Aggregate + box-expansion + reservoir update for pre-routed rows.
 
     Split out of :func:`_ingest_core` so alternative routing policies (the
@@ -237,30 +268,39 @@ def _apply_routed(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
     new_sc = jnp.where(take[..., None], c[wclip], state.sample_c)
     new_sv = state.sample_valid | take
 
+    quar0 = (state.quarantined if state.quarantined is not None
+             else jnp.zeros((), jnp.int32))
+    if n_quar is None:
+        n_quar = jnp.zeros((), jnp.int32)
     return StreamState(
         leaf_lo=new_lo, leaf_hi=new_hi, delta_agg=new_delta,
         sample_c=new_sc, sample_a=new_sa, sample_valid=new_sv,
         k_per_leaf=jnp.minimum(state.k_per_leaf + counts, cap),
         seen=state.seen + counts,
-        oob=state.oob + oob.astype(jnp.int32))
+        oob=state.oob + oob.astype(jnp.int32),
+        quarantined=quar0 + n_quar)
 
 
 @partial(jax.jit, static_argnames=("backend_name",))
 def _ingest_step(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
-                 u: jnp.ndarray, backend_name: str) -> StreamState:
+                 u: jnp.ndarray, backend_name: str,
+                 qlo: jnp.ndarray | None = None,
+                 qhi: jnp.ndarray | None = None) -> StreamState:
     """Explicit-uniforms entry (tests / oracle replay)."""
-    return _ingest_core(state, c, a, u, backend_name)
+    return _ingest_core(state, c, a, u, backend_name, qlo=qlo, qhi=qhi)
 
 
 @partial(jax.jit, static_argnames=("backend_name",))
 def _ingest_step_keyed(state: StreamState, c: jnp.ndarray, a: jnp.ndarray,
-                       key: jax.Array, backend_name: str) -> StreamState:
+                       key: jax.Array, backend_name: str,
+                       qlo: jnp.ndarray | None = None,
+                       qhi: jnp.ndarray | None = None) -> StreamState:
     """PRNG-key entry: the reservoir-replacement uniforms are drawn from
     ``key`` *inside* the jitted step (threefry is bit-stable across jax
     versions, so a seeded ingest sequence is reproducible everywhere —
     unlike the host numpy Generator this replaces)."""
     u = jax.random.uniform(key, (a.shape[0],), jnp.float32)
-    return _ingest_core(state, c, a, u, backend_name)
+    return _ingest_core(state, c, a, u, backend_name, qlo=qlo, qhi=qhi)
 
 
 def init_state(base: Synopsis) -> StreamState:
@@ -276,7 +316,8 @@ def init_state(base: Synopsis) -> StreamState:
         k_per_leaf=jnp.asarray(base.k_per_leaf, jnp.int32),
         seen=jnp.asarray(base.leaf_agg, jnp.float32)[:, AGG_COUNT]
         .astype(jnp.int32),
-        oob=jnp.zeros((), jnp.int32))
+        oob=jnp.zeros((), jnp.int32),
+        quarantined=jnp.zeros((), jnp.int32))
 
 
 class StreamingIngestor:
@@ -291,12 +332,21 @@ class StreamingIngestor:
     """
 
     def __init__(self, base: Synopsis, *, seed: int = 0,
-                 key: jax.Array | None = None, backend: str | None = None):
+                 key: jax.Array | None = None, backend: str | None = None,
+                 quarantine_box: tuple | None = None):
         from .delta import subtree_leaf_matrix
         self.base = base
         self.state = init_state(base)
         self._subtree = subtree_leaf_matrix(base.tree, base.num_leaves)
         self._backend = get_backend(backend).name
+        # Quarantine box: NaN/Inf rows are always rejected; an explicit
+        # (lo, hi) additionally rejects coordinates outside it.
+        self._qlo = self._qhi = None
+        if quarantine_box is not None:
+            self._qlo = jnp.reshape(
+                jnp.asarray(quarantine_box[0], jnp.float32), (-1,))
+            self._qhi = jnp.reshape(
+                jnp.asarray(quarantine_box[1], jnp.float32), (-1,))
         # Explicit PRNG key threaded through reservoir replacement: each
         # ingest() splits off a per-batch subkey, so a seeded sequence is
         # deterministic across hosts and jax versions (threefry-stable).
@@ -322,6 +372,11 @@ class StreamingIngestor:
         not supplied — happens inside one jitted step (reuse a fixed batch
         size to hit the jit cache).
         """
+        from ..testing import faults as _faults
+        inj = _faults.active()
+        if inj is not None:
+            c_rows, a_vals, _ = inj.poison_batch(
+                np.asarray(c_rows, np.float32), np.asarray(a_vals, np.float32))
         c = jnp.asarray(c_rows, jnp.float32)
         if c.ndim == 1:
             c = jnp.reshape(c, (-1, 1))
@@ -330,10 +385,12 @@ class StreamingIngestor:
         if u is None:
             self._key, sub = jax.random.split(self._key)
             self.state = _ingest_step_keyed(self.state, c, a, sub,
-                                            self._backend)
+                                            self._backend,
+                                            self._qlo, self._qhi)
         else:
             u = jnp.asarray(u, jnp.float32)
-            self.state = _ingest_step(self.state, c, a, u, self._backend)
+            self.state = _ingest_step(self.state, c, a, u, self._backend,
+                                      self._qlo, self._qhi)
         self.n_stream += b
         self._epoch += 1
         self._merged = None
@@ -345,9 +402,17 @@ class StreamingIngestor:
         return int(self.state.oob)
 
     @property
+    def n_quarantined(self) -> int:
+        """Rows rejected by ingest validation (host readback; cheap, but
+        only touch it off the hot path — serve/telemetry time)."""
+        return int(self.state.quarantined)
+
+    @property
     def total_rows(self) -> int:
-        """Current served row count (base + streamed), as a host int."""
-        return self._base_rows + self.n_stream
+        """Current served row count (base + streamed), as a host int.
+        Quarantined rows never reached the aggregates, so they are not
+        part of the served population."""
+        return self._base_rows + self.n_stream - self.n_quarantined
 
     def staleness(self) -> float:
         """Fraction of rows streamed since the base build (§4.5)."""
@@ -368,14 +433,15 @@ class StreamingIngestor:
         return self._merged
 
 
-def ingest_batch_reference(state: StreamState, c_rows, a_vals, u
-                           ) -> StreamState:
+def ingest_batch_reference(state: StreamState, c_rows, a_vals, u,
+                           qlo=None, qhi=None) -> StreamState:
     """Sequential per-row oracle for one ingested batch (host, f32).
 
     Same semantics as the vectorized ``_ingest_step``: routing against the
     batch-entry boxes, one pre-drawn uniform per row, last-writer-wins on
-    reservoir slots (trivially true sequentially). Returns the new state
-    as a numpy-backed ``StreamState``.
+    reservoir slots (trivially true sequentially), quarantined rows total
+    no-ops that still occupy their batch position (u[i] stays theirs).
+    Returns the new state as a numpy-backed ``StreamState``.
     """
     c = np.asarray(c_rows, np.float32)
     if c.ndim == 1:
@@ -396,7 +462,16 @@ def ingest_batch_reference(state: StreamState, c_rows, a_vals, u
     # batch-entry routing snapshot
     lo0, hi0 = lo.copy(), hi.copy()
     oob = int(np.asarray(state.oob))
+    quar = (int(np.asarray(state.quarantined))
+            if state.quarantined is not None else 0)
     for i in range(a.shape[0]):
+        bad = not (np.isfinite(a[i]) and np.all(np.isfinite(c[i])))
+        if qlo is not None:
+            bad = bad or bool(np.any((c[i] < np.asarray(qlo, np.float32))
+                                     | (c[i] > np.asarray(qhi, np.float32))))
+        if bad:
+            quar += 1
+            continue
         dist = np.sum(np.maximum(np.maximum(lo0 - c[i], c[i] - hi0),
                                  np.float32(0.0)), axis=-1)
         leaf = int(np.argmin(dist))
@@ -423,8 +498,9 @@ def ingest_batch_reference(state: StreamState, c_rows, a_vals, u
             sv[leaf, slot] = True
     return StreamState(leaf_lo=lo, leaf_hi=hi, delta_agg=delta, sample_c=sc,
                        sample_a=sa, sample_valid=sv, k_per_leaf=kpl,
-                       seen=seen, oob=np.int32(oob))
+                       seen=seen, oob=np.int32(oob),
+                       quarantined=np.int32(quar))
 
 
 __all__ = ["StreamState", "StreamingIngestor", "ingest_batch_reference",
-           "init_state", "empty_delta_agg"]
+           "init_state", "empty_delta_agg", "quarantine_mask"]

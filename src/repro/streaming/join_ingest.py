@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from ..kernels.registry import get_backend
 from .ingest import (StreamingIngestor, _route_1d, _apply_routed,
-                     _batch_occupancy)
+                     _batch_occupancy, quarantine_mask)
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -73,21 +73,29 @@ def _combine_cell_agg(base_cells, delta_cells):
 
 
 def _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root, p_u,
-                      backend_name):
+                      backend_name, qlo=None, qhi=None):
     from ..joins.dim import dim_lookup
     from ..joins.universe import universe_mask
     be = get_backend(backend_name)
     b, d = c.shape
+    # Quarantined rows (non-finite / out-of-box) are dropped from BOTH
+    # transitions: base state via the padding-mask machinery, join state
+    # by forcing the dim lookup to "not found".
+    bad = quarantine_mask(c, a, qlo, qhi)
+    n_quar = jnp.sum(bad).astype(jnp.int32)
+    c_route = jnp.where(bad[:, None], 0.0, c)
     if d == 1:
-        leaf, dsel = _route_1d(state.leaf_lo, state.leaf_hi, c)
+        leaf, dsel = _route_1d(state.leaf_lo, state.leaf_hi, c_route)
     else:
-        leaf, dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c)
-    new_state = _apply_routed(state, c, a, u, leaf, dsel, backend_name)
+        leaf, dsel = be.route_multid(state.leaf_lo, state.leaf_hi, c_route)
+    new_state = _apply_routed(state, c, a, u, leaf, dsel, backend_name,
+                              mask=~bad, n_quar=n_quar)
 
     k, su = jstate.u_a.shape
     p = dim.num_partitions
     kp = k * p
     part, dattr, found = dim_lookup(dim, keys)
+    found = found & ~bad
 
     # Streamed cell aggregates: unmatched keys carry seg id -1 (dropped).
     cell = jnp.where(found, leaf * p + part, -1)
@@ -129,18 +137,18 @@ def _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root, p_u,
 
 @partial(jax.jit, static_argnames=("backend_name",))
 def _join_ingest_step(state, jstate, c, a, u, keys, dim, key_root, p_u,
-                      backend_name):
+                      backend_name, qlo=None, qhi=None):
     """Explicit-uniforms entry (tests / oracle replay)."""
     return _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root,
-                             p_u, backend_name)
+                             p_u, backend_name, qlo=qlo, qhi=qhi)
 
 
 @partial(jax.jit, static_argnames=("backend_name",))
 def _join_ingest_step_keyed(state, jstate, c, a, rkey, keys, dim, key_root,
-                            p_u, backend_name):
+                            p_u, backend_name, qlo=None, qhi=None):
     u = jax.random.uniform(rkey, (a.shape[0],), jnp.float32)
     return _join_ingest_core(state, jstate, c, a, u, keys, dim, key_root,
-                             p_u, backend_name)
+                             p_u, backend_name, qlo=qlo, qhi=qhi)
 
 
 @partial(jax.jit, static_argnames=("backend_name",))
@@ -204,8 +212,10 @@ class JoinStreamingIngestor(StreamingIngestor):
     """
 
     def __init__(self, jsyn, *, seed: int = 0, key: jax.Array | None = None,
-                 backend: str | None = None):
-        super().__init__(jsyn.base, seed=seed, key=key, backend=backend)
+                 backend: str | None = None,
+                 quarantine_box: tuple | None = None):
+        super().__init__(jsyn.base, seed=seed, key=key, backend=backend,
+                         quarantine_box=quarantine_box)
         self._join_base = jsyn
         self.jstate = JoinStreamState(
             cell_delta=_empty_cell_delta(jsyn.num_leaves,
@@ -225,6 +235,11 @@ class JoinStreamingIngestor(StreamingIngestor):
             raise ValueError(
                 "JoinStreamingIngestor.ingest needs the batch's fk keys "
                 "(universe membership and cell routing are keyed)")
+        from ..testing import faults as _faults
+        inj = _faults.active()
+        if inj is not None:
+            c_rows, a_vals, _ = inj.poison_batch(
+                np.asarray(c_rows, np.float32), np.asarray(a_vals, np.float32))
         c = jnp.asarray(c_rows, jnp.float32)
         if c.ndim == 1:
             c = jnp.reshape(c, (-1, 1))
@@ -238,11 +253,13 @@ class JoinStreamingIngestor(StreamingIngestor):
             self._key, sub = jax.random.split(self._key)
             self.state, self.jstate, dropped = _join_ingest_step_keyed(
                 self.state, self.jstate, c, a, sub, kv, jb.dim,
-                jb.key_root, jnp.float32(jb.p_u), self._backend)
+                jb.key_root, jnp.float32(jb.p_u), self._backend,
+                qlo=self._qlo, qhi=self._qhi)
         else:
             self.state, self.jstate, dropped = _join_ingest_step(
                 self.state, self.jstate, c, a, jnp.asarray(u, jnp.float32),
-                kv, jb.dim, jb.key_root, jnp.float32(jb.p_u), self._backend)
+                kv, jb.dim, jb.key_root, jnp.float32(jb.p_u), self._backend,
+                qlo=self._qlo, qhi=self._qhi)
         dropped = np.asarray(dropped)
         if dropped.any():
             self._pending.append((np.asarray(c)[dropped],

@@ -1,0 +1,17 @@
+"""Deterministic fault-injection harness for the serving stack
+(DESIGN.md §15).
+
+    from repro.testing import FaultPlan, inject
+
+    with inject(FaultPlan(seed=7, poison_every=3, straggler_every=5)):
+        ...   # ingest / coalescer traffic now sees injected faults
+
+Everything is seed-keyed and counter-driven, so a fixed plan over a fixed
+call sequence injects the exact same faults every run — the chaos CI leg's
+bit-identity assertions rest on that.
+"""
+from .faults import (FaultPlan, FaultInjector, InjectedFault, active,
+                     inject, install, uninstall)
+
+__all__ = ["FaultPlan", "FaultInjector", "InjectedFault", "active",
+           "inject", "install", "uninstall"]

@@ -1,0 +1,387 @@
+"""Chaos harness (DESIGN.md §15): the serving stack under injected
+faults. Every request must resolve (result or typed error — never a
+hung future), containment policies must fire and be observable in
+engine.stats()["faults"], and the ladder/coalescer must stay
+bit-identical to a clean run on queries the faults do not touch."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (PassEngine, ServingConfig, CIConfig, CatalogConfig,
+                       CoalescerConfig)
+from repro.core import build_synopsis
+from repro.core.types import QueryBatch
+from repro.serve import RequestCoalescer, TickDriver, Overloaded
+from repro.testing import FaultPlan, inject
+from repro.streaming import StreamingIngestor
+
+KINDS = ("sum", "count", "avg")
+
+
+def _make(seed=0, n=12000, k=16):
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0, 100, n))
+    a = np.floor(rng.uniform(0, 500, n))
+    syn, _ = build_synopsis(c, a, k=k, sample_rate=0.02, method="eq",
+                            seed=seed)
+    return c, a, syn
+
+
+def _queries(seed=1, m=6):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(0, 70, (m, 1)).astype(np.float32)
+    return QueryBatch(lo=lo, hi=(lo + rng.uniform(5, 25, (m, 1))
+                                 ).astype(np.float32))
+
+
+def _batches(seed, count, b=200):
+    rng = np.random.default_rng(seed)
+    return [(rng.uniform(0, 100, b), np.floor(rng.uniform(0, 500, b)))
+            for _ in range(count)]
+
+
+def _assert_equal(got, want):
+    for kind in want:
+        assert np.array_equal(np.asarray(got[kind].estimate),
+                              np.asarray(want[kind].estimate)), kind
+
+
+# --------------------------------------------------------------------------
+# Poisoned ingest: whole-batch quarantine keeps serving bit-identical
+# --------------------------------------------------------------------------
+
+def test_poisoned_batches_quarantine_to_noops_bit_identical():
+    _, _, syn = _make()
+    q = _queries()
+    batches = _batches(seed=2, count=6)
+
+    clean = StreamingIngestor(syn, seed=5, quarantine_box=([0.0], [100.0]))
+    for c, a in batches:
+        clean.ingest(c, a)
+    want = PassEngine(clean, serving=ServingConfig(kinds=KINDS)).answer(q)
+
+    chaotic = StreamingIngestor(syn, seed=5, quarantine_box=([0.0], [100.0]))
+    with inject(FaultPlan(poison_every=3, poison_mode="nan")) as inj:
+        for c, a in batches:
+            chaotic.ingest(c, a)
+    assert inj.snapshot()["poisoned_batches"] == 2
+    # Poisoned batches quarantine in toto but consume the same PRNG key
+    # sequence, so the unaffected batches land identically... except the
+    # reservoir: a poisoned batch is a counted no-op, so the reservoir
+    # matches a run where those batches simply never contribute rows.
+    assert chaotic.n_quarantined == 2 * 200
+    eng = PassEngine(chaotic, serving=ServingConfig(kinds=KINDS))
+    got = eng.answer(q)
+    faults = eng.stats()["faults"]
+    assert faults["quarantined_rows"] == 400
+    # Aggregates of clean batches are unaffected; the quarantined rows
+    # never enter delta_agg, so estimates can only differ through the
+    # reservoir sample. Hard bounds must still contain the chaotic
+    # estimates of the clean run's population minus nothing exact-side:
+    for kind in ("sum", "count"):
+        assert np.all(np.asarray(got[kind].lower)
+                      <= np.asarray(want[kind].upper))
+
+
+def test_poisoned_run_bit_identical_when_poison_lands_on_same_batches():
+    """Clean-vs-chaos bit-identity: compare a faulted run against a clean
+    run that simply skips the poisoned batches. Quarantine must make them
+    byte-equivalent no-ops (same key sequence, zero row effects)."""
+    _, _, syn = _make(seed=3)
+    q = _queries(seed=4)
+    batches = _batches(seed=6, count=6)
+
+    with inject(FaultPlan(poison_every=3, poison_mode="oob")):
+        chaotic = StreamingIngestor(syn, seed=7,
+                                    quarantine_box=([0.0], [100.0]))
+        for c, a in batches:
+            chaotic.ingest(c, a)
+
+    clean = StreamingIngestor(syn, seed=7, quarantine_box=([0.0], [100.0]))
+    for i, (c, a) in enumerate(batches, start=1):
+        if i % 3 == 0:
+            # Same batch slot, but every row quarantined: ingest a batch
+            # that the quarantine box rejects in toto (consumes the same
+            # per-batch PRNG split).
+            clean.ingest(np.full_like(c, 500.0), a)
+        else:
+            clean.ingest(c, a)
+    got = PassEngine(chaotic, serving=ServingConfig(kinds=KINDS)).answer(q)
+    want = PassEngine(clean, serving=ServingConfig(kinds=KINDS)).answer(q)
+    _assert_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# Sharded dispatch failures: transient retries are bit-identical
+# --------------------------------------------------------------------------
+
+def test_transient_shard_failures_retry_bit_identical():
+    from repro.sharded import ShardedIngestor
+    from repro.sharded import ingest as shingest
+    _, _, syn = _make(seed=8)
+    q = _queries(seed=9)
+    batches = _batches(seed=10, count=4, b=128)
+
+    clean = ShardedIngestor(syn, seed=21)
+    for c, a in batches:
+        clean.ingest(c, a)
+    want = PassEngine(clean, serving=ServingConfig(kinds=KINDS)).answer(q)
+
+    old = shingest.DISPATCH_BACKOFF_S
+    shingest.DISPATCH_BACKOFF_S = 1e-5
+    try:
+        chaotic = ShardedIngestor(syn, seed=21)
+        with inject(FaultPlan(shard_fail_every=2, shard_fail_persist=2)):
+            for c, a in batches:
+                chaotic.ingest(c, a)
+    finally:
+        shingest.DISPATCH_BACKOFF_S = old
+    stats = chaotic.fault_stats()
+    assert stats["dispatch_retries"] == 4      # 2 failed dispatches x 2
+    assert stats["dropped_batches"] == 0
+    got = PassEngine(chaotic, serving=ServingConfig(kinds=KINDS)).answer(q)
+    _assert_equal(got, want)                   # same pre-split keys
+
+
+def test_persistent_shard_failure_drops_batch_and_counts():
+    from repro.sharded import ShardedIngestor
+    from repro.sharded import ingest as shingest
+    _, _, syn = _make(seed=11)
+    batches = _batches(seed=12, count=2, b=64)
+    old = shingest.DISPATCH_BACKOFF_S
+    shingest.DISPATCH_BACKOFF_S = 1e-5
+    try:
+        ing = ShardedIngestor(syn, seed=23)
+        with inject(FaultPlan(shard_fail_every=2, shard_fail_persist=-1)):
+            for c, a in batches:
+                ing.ingest(c, a)
+    finally:
+        shingest.DISPATCH_BACKOFF_S = old
+    assert ing.fault_stats()["dropped_batches"] == 1
+    assert ing.n_stream == 64                  # dropped batch never counted
+    eng = PassEngine(ing)
+    assert eng.stats()["faults"]["dropped_batches"] == 1
+
+
+# --------------------------------------------------------------------------
+# Catalog materialization failures degrade, not fail
+# --------------------------------------------------------------------------
+
+def test_materialization_failure_degrades_to_catalog_bounds():
+    from repro.partitions import partition_rows
+    from repro.partitions.source import CatalogSource
+    from repro.partitions import source as psource
+    rng = np.random.default_rng(13)
+    c = np.sort(rng.uniform(0, 100, 8000))
+    a = np.floor(rng.uniform(0, 500, 8000))
+    store = partition_rows(c, a, 8)
+    # Budget below the partition count keeps the tier selective (flat
+    # serving never calls stage); pi_floor=1 picks every overlapping
+    # partition deterministically.
+    cfg = CatalogConfig(k=4, s_per_leaf=16, max_partitions=7, pi_floor=1.0)
+    q = _queries(seed=14)
+
+    old = psource.MATERIALIZE_BACKOFF_S
+    psource.MATERIALIZE_BACKOFF_S = 1e-5
+    try:
+        src = CatalogSource(store, cfg)
+        eng = PassEngine(src, serving=ServingConfig(kinds=("sum", "count")))
+        with inject(FaultPlan(materialize_fail_parts=(3,),
+                              materialize_fail_times=-1)) as inj:
+            res = eng.answer(q)
+    finally:
+        psource.MATERIALIZE_BACKOFF_S = old
+    assert inj.snapshot()["materialize_failures"] >= 4   # retries exhausted
+    assert src.degraded_partitions == {3}
+    faults = eng.stats()["faults"]
+    assert faults["degraded_partitions"] == [3]
+    st = src.stats()
+    assert st["materialize_failures"] == 1
+    assert st["materialize_retries"] == 3
+    # Every query still answered, intervals contain the exact truth.
+    qlo, qhi = np.asarray(q.lo)[:, 0], np.asarray(q.hi)[:, 0]
+    for i in range(qlo.shape[0]):
+        inside = (c >= qlo[i]) & (c <= qhi[i])
+        truth = a[inside].sum()
+        lo = float(np.asarray(res["sum"].lower)[i])
+        hi = float(np.asarray(res["sum"].upper)[i])
+        assert lo - 1e-2 <= truth <= hi + 1e-2, i
+
+
+def test_materialization_transient_failure_recovers():
+    from repro.partitions import partition_rows
+    from repro.partitions.source import CatalogSource
+    from repro.partitions import source as psource
+    rng = np.random.default_rng(15)
+    c = np.sort(rng.uniform(0, 100, 4000))
+    a = np.floor(rng.uniform(0, 500, 4000))
+    cfg = CatalogConfig(k=4, s_per_leaf=8, max_partitions=5, pi_floor=1.0)
+    old = psource.MATERIALIZE_BACKOFF_S
+    psource.MATERIALIZE_BACKOFF_S = 1e-5
+    try:
+        src = CatalogSource(partition_rows(c, a, 6), cfg)
+        with inject(FaultPlan(materialize_fail_parts=(1,),
+                              materialize_fail_times=2)):
+            assert src._materialize(1) is not None
+    finally:
+        psource.MATERIALIZE_BACKOFF_S = old
+    # Two injected failures < retry budget: the build heals in-place.
+    assert src.degraded_partitions == set()
+    assert src.stats()["materialize_retries"] == 2
+
+
+# --------------------------------------------------------------------------
+# Coalescer under chaos: stragglers, deadlines, driver containment
+# --------------------------------------------------------------------------
+
+def test_straggler_ticks_route_deadline_requests_to_tier0():
+    _, _, syn = _make(seed=17)
+    q = _queries(seed=18)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(8,)))
+    # Prime the dispatch-latency EWMA with one clean dispatch.
+    co.submit("t0", q)
+    co.tick()
+    with inject(FaultPlan(straggler_every=1, straggler_ms=30.0)):
+        fut = co.submit("t0", q, deadline_ms=5.0)
+        co.tick()          # sleeps 30ms: the request's budget is blown
+    res = fut.result(timeout=5)
+    assert set(res) == {"sum"}
+    assert co.stats()["degraded_served"] == 1
+    assert eng.stats()["degraded_serves"] == 1
+
+
+def test_overload_with_deadline_serves_degraded_instead_of_shedding():
+    _, _, syn = _make(seed=19)
+    q = _queries(seed=20)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    co = RequestCoalescer(eng, CoalescerConfig(max_outstanding=1,
+                                               shape_classes=(8,)))
+    f1 = co.submit("t0", q)                       # fills the budget
+    with pytest.raises(Overloaded):
+        co.submit("t0", q)                        # no deadline: shed
+    f2 = co.submit("t0", q, deadline_ms=100.0)    # deadline: degraded
+    assert f2.done()
+    assert set(f2.result()) == {"sum"}
+    st = co.stats()
+    assert st["degraded_served"] == 1 and st["shed"] == 1
+    co.flush()
+    assert f1.done()
+    # Accounting reconciles: submitted = served + shed is kept by the
+    # degraded path counting as served.
+    st = co.stats()
+    assert st["submitted"] == st["served"] + 0    # shed not submitted
+    assert st["tenants"]["t0"]["outstanding"] == 0
+
+
+def test_driver_survives_poisoned_tick_and_fails_futures():
+    _, _, syn = _make(seed=21)
+    q = _queries(seed=22)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    co = RequestCoalescer(eng, CoalescerConfig(tick_ms=1.0))
+    boom = RuntimeError("tick exploded")
+    calls = {"n": 0}
+    real_tick = co.tick
+
+    def exploding_tick():
+        # Explode exactly once, and only on a tick that actually has a
+        # queued request (empty driver ticks race the submits below).
+        if calls["n"] < 1 and co.queue_depth > 0:
+            calls["n"] += 1
+            raise boom
+        return real_tick()
+
+    co.tick = exploding_tick
+    drv = TickDriver(co, tick_ms=1.0)
+    drv.start()
+    try:
+        fut = co.submit("t0", q)
+        # The first ticks explode; the driver must fail the queued future
+        # rather than leave it pending, and keep the loop alive.
+        with pytest.raises(RuntimeError, match="tick exploded"):
+            fut.result(timeout=5)
+        fut2 = co.submit("t0", q)
+        res = fut2.result(timeout=5)       # loop survived, serving works
+        assert set(res) == {"sum"}
+    finally:
+        drv.stop(flush=True)               # must not hang
+    st = co.stats()
+    assert st["driver_errors"] >= 1
+    assert "tick exploded" in st["last_driver_error"]
+    assert st["failed"] >= 1
+    assert st["tenants"]["t0"]["outstanding"] == 0
+
+
+def test_chaos_soak_every_request_resolves():
+    """Concurrent tenants + stragglers + deadline mix: every submitted
+    future resolves to a result or a typed error; nothing hangs."""
+    _, _, syn = _make(seed=23)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=KINDS),
+                     ci=CIConfig(level=0.95))
+    co = RequestCoalescer(eng, CoalescerConfig(max_outstanding=4,
+                                               max_queue_depth=32,
+                                               shape_classes=(8, 32)))
+    futures, errors = [], []
+    flock = threading.Lock()
+
+    def tenant(tid):
+        rng = np.random.default_rng(100 + tid)
+        for i in range(12):
+            m = int(rng.integers(1, 7))
+            lo = rng.uniform(0, 70, (m, 1)).astype(np.float32)
+            q = QueryBatch(lo=lo, hi=(lo + 10.0).astype(np.float32))
+            deadline = 50.0 if i % 3 == 0 else None
+            try:
+                f = co.submit(f"t{tid}", q, deadline_ms=deadline)
+                with flock:
+                    futures.append(f)
+            except Overloaded as exc:
+                with flock:
+                    errors.append(exc)
+
+    with inject(FaultPlan(straggler_every=5, straggler_ms=5.0)):
+        with TickDriver(co, tick_ms=1.0):
+            threads = [threading.Thread(target=tenant, args=(t,))
+                       for t in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+    # Driver stopped with flush: every future must be resolved.
+    for f in futures:
+        assert f.done()
+        assert set(f.result(timeout=0)) == set(KINDS)
+    st = co.stats()
+    assert st["submitted"] == len(futures)
+    assert st["served"] == len(futures)
+    assert st["shed"] == len(errors)
+    for acct in st["tenants"].values():
+        assert acct["outstanding"] == 0
+
+def test_checkpoint_mid_drill_restores_bit_identical(tmp_path):
+    """Checkpoint taken while faults are live: the restored engine serves
+    bit-identically and carries the containment state (quarantine
+    counter), and post-restore ingest tracks the original — the epoch
+    boundary is consistent even mid-chaos."""
+    _, _, syn = _make(seed=31)
+    q = _queries(seed=32)
+    batches = _batches(seed=33, count=8)
+    with inject(FaultPlan(poison_every=3, poison_mode="nan")):
+        ing = StreamingIngestor(syn, seed=35, quarantine_box=([0.0], [100.0]))
+        for c, a in batches[:5]:
+            ing.ingest(c, a)
+        eng = PassEngine(ing, serving=ServingConfig(kinds=KINDS))
+        want = eng.answer(q)
+        eng.checkpoint(tmp_path / "mid.npz")
+        eng2 = PassEngine.restore(tmp_path / "mid.npz")
+        _assert_equal(eng2.answer(q), want)
+        assert eng2._source.n_quarantined == ing.n_quarantined > 0
+    # Drill over (the injector's per-site batch counter is global, so two
+    # interleaved ingestors would draw different poison schedules):
+    # post-restore ingest parity — the restored PRNG state must reproduce
+    # the original's reservoir on identical future batches.
+    for c, a in batches[5:]:
+        ing.ingest(c, a)
+        eng2._source.ingest(c, a)
+    _assert_equal(eng2.answer(q), eng.answer(q))

@@ -1,0 +1,204 @@
+"""Epoch-consistent checkpoint/restore (repro.serve.checkpoint,
+DESIGN.md §15): one-file .npz round-trip for every source type, serving
+bit-identity after restore, post-restore ingest parity (the PRNG key
+round-trips), config preservation/override, and version guarding."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro.api import PassEngine, ServingConfig, CIConfig, CatalogConfig
+from repro.core import build_synopsis
+from repro.core.types import QueryBatch
+from repro.serve.checkpoint import CHECKPOINT_VERSION
+from repro.streaming import StreamingIngestor
+from repro.partitions import partition_rows
+from repro.partitions.source import CatalogSource
+
+ALL_KINDS = ("sum", "count", "avg", "min", "max")
+
+
+def _make(seed=0, n=8000, k=16, d=1):
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0, 100, (n, d))
+    if d == 1:
+        c = np.sort(c, axis=0)
+    a = np.floor(rng.uniform(0, 500, n))
+    syn, _ = build_synopsis(c if d > 1 else c[:, 0], a, k=k,
+                            sample_rate=0.02, method="eq", seed=seed)
+    return c, a, syn
+
+
+def _queries(seed=1, m=5, d=1):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(0, 70, (m, d)).astype(np.float32)
+    return QueryBatch(lo=lo,
+                      hi=(lo + rng.uniform(5, 25, (m, d))).astype(np.float32))
+
+
+def _assert_equal(got, want):
+    assert set(got) == set(want)
+    for kind in want:
+        for f in ("estimate", "ci_half", "lower", "upper",
+                  "frac_rows_touched", "ci_lo", "ci_hi"):
+            g, w = getattr(got[kind], f), getattr(want[kind], f)
+            if g is None or w is None:
+                assert g is None and w is None, (kind, f)
+                continue
+            assert np.array_equal(np.asarray(g), np.asarray(w)), (kind, f)
+
+
+def test_synopsis_roundtrip_bit_identical(tmp_path):
+    _, _, syn = _make()
+    q = _queries()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=ALL_KINDS),
+                     ci=CIConfig(level=0.95))
+    want = eng.answer(q)
+    meta = eng.checkpoint(tmp_path / "ck.npz")
+    assert meta["source"] == "synopsis"
+    assert meta["version"] == CHECKPOINT_VERSION
+    eng2 = PassEngine.restore(tmp_path / "ck.npz")
+    assert eng2.serving == eng.serving and eng2.ci == eng.ci
+    _assert_equal(eng2.answer(q), want)
+
+
+def test_streaming_roundtrip_and_future_ingest_parity(tmp_path):
+    _, _, syn = _make(seed=2)
+    rng = np.random.default_rng(3)
+    ing = StreamingIngestor(syn, seed=11, quarantine_box=([0.0], [100.0]))
+    ing.ingest(rng.uniform(0, 100, 400), np.floor(rng.uniform(0, 500, 400)))
+    q = _queries(seed=4)
+    eng = PassEngine(ing, serving=ServingConfig(kinds=("sum", "avg")))
+    want = eng.answer(q)
+    eng.checkpoint(tmp_path / "ck.npz")
+    eng2 = PassEngine.restore(tmp_path / "ck.npz")
+    src2 = eng2._source
+    assert isinstance(src2, StreamingIngestor)
+    assert src2.epoch == ing.epoch and src2.n_stream == ing.n_stream
+    _assert_equal(eng2.answer(q), want)
+    # The reservoir PRNG key round-trips: identical future ingest paths.
+    batch = (rng.uniform(0, 100, 300), np.floor(rng.uniform(0, 500, 300)))
+    ing.ingest(*batch)
+    src2.ingest(*batch)
+    _assert_equal(eng2.answer(q), eng.answer(q))
+
+
+def test_streaming_quarantine_counter_survives(tmp_path):
+    _, _, syn = _make(seed=5)
+    ing = StreamingIngestor(syn, quarantine_box=([0.0], [100.0]))
+    c = np.asarray([5.0, np.nan, 400.0, 7.0])
+    ing.ingest(c, np.ones(4))
+    assert ing.n_quarantined == 2
+    PassEngine(ing).checkpoint(tmp_path / "ck.npz")
+    eng2 = PassEngine.restore(tmp_path / "ck.npz")
+    assert eng2._source.n_quarantined == 2
+    assert eng2._source.total_rows == ing.total_rows
+
+
+def test_catalog_roundtrip(tmp_path):
+    rng = np.random.default_rng(6)
+    c = np.sort(rng.uniform(0, 100, 6000))
+    a = np.floor(rng.uniform(0, 500, 6000))
+    store = partition_rows(c, a, 8)
+    src = CatalogSource(store, CatalogConfig(k=4, s_per_leaf=16,
+                                             max_partitions=3, seed=9))
+    q = _queries(seed=7)
+    eng = PassEngine(src, serving=ServingConfig(kinds=("sum", "count")))
+    eng.answer(q)               # advances the selection draw counter
+    want = eng.answer(q)        # draw #2
+    meta = PassEngine(src).checkpoint(tmp_path / "ck.npz")
+    assert meta["source"] == "catalog"
+    eng2 = PassEngine.restore(tmp_path / "ck.npz",
+                              serving=ServingConfig(kinds=("sum", "count")))
+    src2 = eng2._source
+    assert src2.store.num_partitions == 8
+    assert src2._draws == src._draws
+    # Same draw counter -> the next selection is the same deterministic
+    # draw -> bit-identical serving.
+    _assert_equal(eng.answer(q), eng2.answer(q))
+
+
+def test_catalog_degraded_set_survives(tmp_path):
+    rng = np.random.default_rng(8)
+    c = np.sort(rng.uniform(0, 100, 4000))
+    a = np.floor(rng.uniform(0, 500, 4000))
+    src = CatalogSource(partition_rows(c, a, 6),
+                        CatalogConfig(k=4, s_per_leaf=8, max_partitions=2))
+    src._degraded = {3}
+    PassEngine(src).checkpoint(tmp_path / "ck.npz")
+    eng2 = PassEngine.restore(tmp_path / "ck.npz")
+    assert eng2._source.degraded_partitions == {3}
+    assert eng2.stats()["faults"]["degraded_partitions"] == [3]
+
+
+def test_sharded_roundtrip(tmp_path):
+    from repro.sharded import ShardedIngestor
+    _, _, syn = _make(seed=9)
+    rng = np.random.default_rng(10)
+    ing = ShardedIngestor(syn, seed=13)
+    ing.ingest(rng.uniform(0, 100, 256), np.floor(rng.uniform(0, 500, 256)))
+    q = _queries(seed=11)
+    eng = PassEngine(ing, serving=ServingConfig(kinds=("sum", "avg")))
+    want = eng.answer(q)
+    meta = eng.checkpoint(tmp_path / "ck.npz")
+    assert meta["source"] == "sharded"
+    assert meta["n_shards"] == ing.n_shards
+    eng2 = PassEngine.restore(tmp_path / "ck.npz")
+    assert eng2._source.n_shards == ing.n_shards
+    _assert_equal(eng2.answer(q), want)
+    # Post-restore ingest parity across the shard dispatch.
+    batch = (rng.uniform(0, 100, 128), np.floor(rng.uniform(0, 500, 128)))
+    ing.ingest(*batch)
+    eng2._source.ingest(*batch)
+    _assert_equal(eng2.answer(q), eng.answer(q))
+
+
+def test_config_override_on_restore(tmp_path):
+    _, _, syn = _make()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    eng.checkpoint(tmp_path / "ck.npz")
+    eng2 = PassEngine.restore(tmp_path / "ck.npz",
+                              serving=ServingConfig(kinds=("count",)),
+                              ci=CIConfig(level=0.9))
+    assert eng2.serving.kinds == ("count",)
+    assert eng2.ci.level == 0.9
+
+
+def test_version_guard(tmp_path):
+    _, _, syn = _make()
+    PassEngine(syn).checkpoint(tmp_path / "ck.npz")
+    with np.load(tmp_path / "ck.npz", allow_pickle=False) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    meta = json.loads(str(arrays.pop("__meta__")[()]))
+    meta["version"] = 999
+    arrays["__meta__"] = np.asarray(json.dumps(meta))
+    np.savez(tmp_path / "bad.npz", **arrays)
+    with pytest.raises(ValueError, match="version"):
+        PassEngine.restore(tmp_path / "bad.npz")
+
+
+def test_checkpoint_flushes_attached_coalescer(tmp_path):
+    from repro.serve import RequestCoalescer
+    _, _, syn = _make()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    co = RequestCoalescer(eng)
+    fut = co.submit("t0", _queries())
+    eng.checkpoint(tmp_path / "ck.npz")     # epoch boundary: queue drained
+    assert fut.done()
+    assert co.queue_depth == 0
+
+
+def test_prng_key_roundtrip_typed_and_raw(tmp_path):
+    from repro.serve.checkpoint import _put_key, _get_key
+    arrays = {}
+    raw = jax.random.PRNGKey(5)
+    _put_key(arrays, "a", raw)
+    assert np.array_equal(np.asarray(_get_key(arrays, "a")),
+                          np.asarray(raw))
+    typed = jax.random.key(5)
+    _put_key(arrays, "b", typed)
+    back = _get_key(arrays, "b")
+    assert np.array_equal(np.asarray(jax.random.key_data(back)),
+                          np.asarray(jax.random.key_data(typed)))

@@ -7,6 +7,7 @@ against a sharded-ingest engine (the CI multi-device leg runs it on 4
 forced host devices)."""
 import concurrent.futures as cf
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -415,3 +416,78 @@ def test_soak_concurrent_tenants_sharded_ingest_engine():
     # bounded executable set: at most one plan-cache entry per ladder
     # class (+ rounded-up oversize multiples) for the single config
     assert eng.stats()["entries"] <= 4
+
+
+# --------------------------------------------------------------------------
+# Shed path under concurrent submitters (DESIGN.md §15)
+# --------------------------------------------------------------------------
+
+def test_concurrent_shed_counters_reconcile_and_no_stranded_futures():
+    """Many threads hammering a tiny admission budget: every submit either
+    returns a future or raises Overloaded; after flush() every returned
+    future is resolved, per-tenant shed counts sum to the global counter,
+    and submitted == served (shed requests are never queued)."""
+    _, _, syn = _make()
+    serving = ServingConfig(kinds=("sum",))
+    eng = PassEngine(syn, serving=serving)
+    co = RequestCoalescer(eng, CoalescerConfig(
+        shape_classes=(8,), max_outstanding=2, max_queue_depth=6))
+    futures, sheds = [], []
+    lock = threading.Lock()
+    barrier = threading.Barrier(6)
+
+    def submitter(tid):
+        rng = np.random.default_rng(tid)
+        barrier.wait()
+        for i in range(10):
+            lo = rng.uniform(0, 70, (2, 1)).astype(np.float32)
+            q = QueryBatch(lo=lo, hi=(lo + 10.0).astype(np.float32))
+            try:
+                f = co.submit(f"t{tid}", q)
+                with lock:
+                    futures.append(f)
+            except Overloaded as exc:
+                assert exc.reason in ("tenant_outstanding", "queue_depth")
+                assert exc.tenant == f"t{tid}"
+                with lock:
+                    sheds.append(exc)
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(6)]
+    for t in threads:
+        t.start()
+    # Tick concurrently with the submitters so the queue drains and
+    # admission keeps flipping between admit and shed.
+    deadline = time.time() + 30
+    while any(t.is_alive() for t in threads):
+        co.tick()
+        assert time.time() < deadline
+    for t in threads:
+        t.join()
+    co.flush()
+
+    assert len(futures) + len(sheds) == 60
+    assert len(sheds) >= 1                      # the budget actually bit
+    for f in futures:                           # nothing stranded
+        assert f.done()
+        assert set(f.result(timeout=0)) == {"sum"}
+    s = co.stats()
+    assert s["submitted"] == len(futures) == s["served"]
+    assert s["shed"] == len(sheds)
+    assert sum(t["shed"] for t in s["tenants"].values()) == s["shed"]
+    assert all(t["outstanding"] == 0 for t in s["tenants"].values())
+    assert s["queue_depth"] == 0
+
+
+def test_flush_after_driverless_submits_resolves_everything():
+    _, _, syn = _make()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum", "count")))
+    co = RequestCoalescer(eng, CoalescerConfig(shape_classes=(8,)))
+    qs = [random_queries(np.linspace(0, 100, 50), 3, seed=i)
+          for i in range(9)]
+    futs = [co.submit(f"t{i % 3}", q) for i, q in enumerate(qs)]
+    assert not any(f.done() for f in futs)
+    co.flush()
+    assert all(f.done() for f in futs)
+    s = co.stats()
+    assert s["served"] == 9 and s["queue_depth"] == 0

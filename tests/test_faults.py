@@ -1,0 +1,119 @@
+"""Fault-injection harness (repro.testing.faults, DESIGN.md §15):
+deterministic seed-keyed schedules, plan validation, the install /
+inject lifecycle, and the containment policies each hook drives —
+quarantine counters for poisoned batches, retry-then-drop for shard
+dispatch, retry-then-degrade for partition materialization."""
+import numpy as np
+import pytest
+
+from repro.testing import (FaultPlan, FaultInjector, InjectedFault,
+                           inject, install, uninstall, active)
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(shard_fail_every=-1).validate()
+    with pytest.raises(ValueError):
+        FaultPlan(poison_mode="zebra").validate()
+    with pytest.raises(ValueError):
+        FaultPlan(straggler_ms=-1.0).validate()
+    FaultPlan(shard_fail_every=3, poison_every=2, straggler_every=4).validate()
+
+
+def test_install_lifecycle():
+    assert active() is None
+    inj = install(FaultPlan(poison_every=2))
+    try:
+        assert active() is inj
+    finally:
+        uninstall()
+    assert active() is None
+    with inject(FaultPlan()) as inj2:
+        assert active() is inj2
+    assert active() is None
+
+
+def test_shard_dispatch_schedule_is_deterministic():
+    def run():
+        inj = FaultInjector(FaultPlan(shard_fail_every=3,
+                                      shard_fail_persist=2))
+        out = []
+        for _ in range(6):
+            fails = [inj.shard_dispatch_fails(att) for att in range(4)]
+            out.append(tuple(fails))
+        return out
+    a, b = run(), run()
+    assert a == b
+    # Every 3rd dispatch fails its first `persist` attempts, then heals.
+    assert a[0] == (False, False, False, False)
+    assert a[2] == (True, True, False, False)
+    assert a[5] == (True, True, False, False)
+
+
+def test_persistent_shard_failure():
+    inj = FaultInjector(FaultPlan(shard_fail_every=1, shard_fail_persist=-1))
+    assert all(inj.shard_dispatch_fails(att) for att in range(8))
+
+
+def test_straggler_schedule():
+    inj = FaultInjector(FaultPlan(straggler_every=2, straggler_ms=15.0))
+    delays = [inj.tick_delay_s() for _ in range(4)]
+    assert delays == [0.0, 0.015, 0.0, 0.015]
+
+
+def test_poison_batch_deterministic_and_whole_batch():
+    plan = FaultPlan(seed=7, poison_every=2, poison_mode="inf")
+    c = np.random.default_rng(0).uniform(0, 1, (16, 2)).astype(np.float32)
+    a = np.ones(16, np.float32)
+    i1 = FaultInjector(plan)
+    _, _, p1 = i1.poison_batch(c.copy(), a.copy())
+    c1, a1, p2 = i1.poison_batch(c.copy(), a.copy())
+    i2 = FaultInjector(plan)
+    i2.poison_batch(c.copy(), a.copy())
+    c3, a3, p3 = i2.poison_batch(c.copy(), a.copy())
+    assert not p1 and p2 and p3          # every 2nd batch, 1-based
+    assert np.array_equal(a1, a3) and np.array_equal(c1, c3)
+    assert np.all(np.isinf(a1))          # whole batch poisoned
+    assert c1.shape == c.shape and a1.shape == a.shape
+
+
+@pytest.mark.parametrize("mode", ["nan", "inf", "oob"])
+def test_poison_modes_produce_quarantinable_rows(mode):
+    from repro.streaming.ingest import quarantine_mask
+    import jax.numpy as jnp
+    inj = FaultInjector(FaultPlan(poison_every=1, poison_mode=mode))
+    c = np.random.default_rng(1).uniform(0, 1, (8, 2)).astype(np.float32)
+    a = np.ones(8, np.float32)
+    cp, ap, poisoned = inj.poison_batch(c, a)
+    assert poisoned
+    bad = np.asarray(quarantine_mask(
+        jnp.asarray(cp), jnp.asarray(ap),
+        jnp.zeros(2, jnp.float32), jnp.ones(2, jnp.float32)))
+    assert bad.all(), mode
+
+
+def test_materialize_schedule():
+    inj = FaultInjector(FaultPlan(materialize_fail_parts=(2, 5),
+                                  materialize_fail_times=2))
+    assert not inj.materialize_fails(0)
+    assert inj.materialize_fails(2)
+    assert inj.materialize_fails(2)
+    assert not inj.materialize_fails(2)   # healed after 2 attempts
+    assert inj.materialize_fails(5)
+    inj2 = FaultInjector(FaultPlan(materialize_fail_parts=(1,),
+                                   materialize_fail_times=-1))
+    assert all(inj2.materialize_fails(1) for _ in range(6))
+
+
+def test_snapshot_counts_events():
+    inj = FaultInjector(FaultPlan(shard_fail_every=1, poison_every=1))
+    inj.shard_dispatch_fails(0)
+    inj.poison_batch(np.zeros((2, 1), np.float32), np.zeros(2, np.float32))
+    snap = inj.snapshot()
+    assert snap["shard_dispatch_failures"] == 1
+    assert snap["poisoned_batches"] == 1
+    assert isinstance(snap, dict)
+
+
+def test_injected_fault_is_runtime_error():
+    assert issubclass(InjectedFault, RuntimeError)

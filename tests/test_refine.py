@@ -1,0 +1,243 @@
+"""Graceful-degradation ladder (repro.serve.refine, DESIGN.md §15):
+tier-0 aggregates-only answers (planner hard bounds, bit-identical to
+the exact path on covered queries), monotone interval tightening across
+sample tiers, the deadline / CI-width stop criteria, and the
+RefinementHandle lifecycle surfaced through engine.answer(deadline_ms=)
+and answer_progressive()."""
+import numpy as np
+import pytest
+
+from repro.api import PassEngine, ServingConfig, CIConfig
+from repro.core import build_synopsis
+from repro.core.types import QueryBatch
+from repro.serve import RefinementHandle, ladder_tiers, tier0_answer
+from repro.serve.refine import merge_refinement
+
+ALL_KINDS = ("sum", "count", "avg", "min", "max")
+
+
+def _make(seed=0, n=20000, k=16):
+    """Integer-valued data: f32 accumulation is exact and
+    order-independent, so host tier-0 arithmetic matches device XLA
+    bit-for-bit on covered queries."""
+    rng = np.random.default_rng(seed)
+    c = np.sort(rng.uniform(0, 100, n))
+    a = np.floor(rng.uniform(0, 1000, n))
+    syn, _ = build_synopsis(c, a, k=k, sample_rate=0.02, method="eq",
+                            seed=seed)
+    return c, a, syn
+
+
+def _covered_queries(syn, m=6):
+    """Queries aligned to leaf boundaries — fully covered, zero partial
+    strata, so tier-0 must equal the exact aggregate."""
+    lo = np.asarray(syn.leaf_lo, np.float32)[:, 0]
+    hi = np.asarray(syn.leaf_hi, np.float32)[:, 0]
+    k = lo.shape[0]
+    qlo, qhi = [], []
+    for i in range(m):
+        a = (i * 2) % (k - 1)
+        b = min(k - 1, a + 3)
+        qlo.append(lo[a])
+        qhi.append(hi[b])
+    return QueryBatch(lo=np.asarray(qlo, np.float32)[:, None],
+                      hi=np.asarray(qhi, np.float32)[:, None])
+
+
+def _overlap_queries(seed=1, m=8):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(0, 80, (m, 1)).astype(np.float32)
+    return QueryBatch(lo=lo, hi=(lo + rng.uniform(5, 20, (m, 1))
+                                 ).astype(np.float32))
+
+
+def _intervals(res):
+    _, lo, hi = res.interval()
+    return np.asarray(lo, np.float64), np.asarray(hi, np.float64)
+
+
+# --------------------------------------------------------------------------
+# Tier 0
+# --------------------------------------------------------------------------
+
+def test_tier0_bit_identical_to_exact_on_covered_queries():
+    _, _, syn = _make()
+    q = _covered_queries(syn)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=ALL_KINDS))
+    exact = eng.answer(q)
+    t0 = tier0_answer(eng, q, ALL_KINDS)
+    for kind in ALL_KINDS:
+        got = np.asarray(t0[kind].estimate)
+        want = np.asarray(exact[kind].estimate)
+        assert np.array_equal(got, want), kind
+        # Covered queries: the hard-bound envelope collapses onto the
+        # exact value for sum/count (exact covered aggregate).
+        if kind in ("sum", "count"):
+            assert np.array_equal(np.asarray(t0[kind].lower), want), kind
+            assert np.array_equal(np.asarray(t0[kind].upper), want), kind
+
+
+def test_tier0_envelope_contains_exact_answer_everywhere():
+    c, a, syn = _make(seed=3)
+    q = _overlap_queries()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=ALL_KINDS))
+    t0 = tier0_answer(eng, q, ALL_KINDS)
+    qlo, qhi = np.asarray(q.lo)[:, 0], np.asarray(q.hi)[:, 0]
+    for i in range(qlo.shape[0]):
+        inside = (c >= qlo[i]) & (c <= qhi[i])
+        rows = a[inside]
+        truth = {"sum": rows.sum(), "count": float(inside.sum()),
+                 "avg": rows.mean() if rows.size else 0.0,
+                 "min": rows.min() if rows.size else 0.0,
+                 "max": rows.max() if rows.size else 0.0}
+        for kind in ALL_KINDS:
+            if rows.size == 0 and kind in ("avg", "min", "max"):
+                continue
+            lo = float(np.asarray(t0[kind].lower)[i])
+            hi = float(np.asarray(t0[kind].upper)[i])
+            assert lo - 1e-3 <= truth[kind] <= hi + 1e-3, (kind, i)
+
+
+def test_tier0_does_no_sample_work():
+    _, _, syn = _make()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    tier0_answer(eng, _overlap_queries(), ("sum",))
+    st = eng.stats()
+    assert st["misses"] == 0 and st["fused_serves"] == 0
+
+
+# --------------------------------------------------------------------------
+# Ladder
+# --------------------------------------------------------------------------
+
+def test_ladder_tiers_schedule():
+    assert ladder_tiers(64) == [8, 16, 32, None]
+    assert ladder_tiers(4) == [1, 2, None]
+    tiers = ladder_tiers(1)
+    assert tiers[-1] is None and all(t is None or t >= 1 for t in tiers)
+
+
+def test_refinement_intervals_monotonically_tighten():
+    _, _, syn = _make(seed=5)
+    q = _overlap_queries(seed=6)
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum", "count",
+                                                       "avg")))
+    h = eng.answer_progressive(q, ci=CIConfig(level=0.95))
+    widths = []
+    prev = {k: _intervals(r) for k, r in h.results.items()}
+    while not h.done:
+        h.refine()
+        for kind, res in h.results.items():
+            lo, hi = _intervals(res)
+            plo, phi = prev[kind]
+            assert np.all(lo >= plo - 1e-6), kind
+            assert np.all(hi <= phi + 1e-6), kind
+            prev[kind] = (lo, hi)
+        widths.append(h.width())
+    assert widths[-1] <= widths[0] + 1e-6
+
+
+def test_final_tier_matches_plain_answer_intervals_or_tighter():
+    _, _, syn = _make(seed=7)
+    q = _overlap_queries(seed=8)
+    sv = ServingConfig(kinds=("sum",))
+    ci = CIConfig(level=0.95)
+    eng = PassEngine(syn, serving=sv, ci=ci)
+    plain = eng.answer(q)
+    h = eng.answer_progressive(q)
+    full = h.final()
+    _, plo, phi = plain["sum"].interval()
+    _, flo, fhi = full["sum"].interval()
+    assert np.all(np.asarray(flo) >= np.asarray(plo) - 1e-6)
+    assert np.all(np.asarray(fhi) <= np.asarray(phi) + 1e-6)
+
+
+def test_merge_refinement_crossing_guard():
+    from repro.core.types import QueryResult
+    mk = lambda est, lo, hi: QueryResult(
+        np.float32([est]), np.float32([(hi - lo) / 2]), np.float32([lo]),
+        np.float32([hi]), np.float32([1.0]), ci_lo=np.float32([lo]),
+        ci_hi=np.float32([hi]))
+    merged = merge_refinement({"sum": mk(5.0, 4.0, 6.0)},
+                              {"sum": mk(9.0, 8.0, 10.0)})
+    _, lo, hi = merged["sum"].interval()
+    est = float(np.asarray(merged["sum"].estimate)[0])
+    assert float(np.asarray(lo)[0]) <= est <= float(np.asarray(hi)[0])
+
+
+# --------------------------------------------------------------------------
+# Stop criteria
+# --------------------------------------------------------------------------
+
+def test_deadline_zero_serves_tier0_only():
+    _, _, syn = _make()
+    q = _overlap_queries()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    res = eng.answer(q, deadline_ms=0.0)
+    st = eng.stats()
+    assert st["tier0_serves"] == 1
+    assert st["refine_steps"] == 0
+    assert st["degraded_serves"] == 1
+    assert res["sum"].estimate.shape == (8,)
+
+
+def test_generous_deadline_reaches_full_ladder():
+    _, _, syn = _make()
+    q = _overlap_queries()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    eng.answer(q, deadline_ms=1e6)
+    st = eng.stats()
+    assert st["refine_steps"] >= 1
+    assert st["degraded_serves"] == 0
+
+
+def test_max_ci_width_stops_early_when_met():
+    _, _, syn = _make()
+    q = _overlap_queries()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    # A huge width target is met by tier-0 itself: zero refine steps.
+    eng.answer(q, ci=CIConfig(level=0.95, max_ci_width=1e12))
+    assert eng.stats()["refine_steps"] == 0
+    # An impossible target runs the whole ladder.
+    eng2 = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    eng2.answer(q, ci=CIConfig(level=0.95, max_ci_width=1e-9))
+    assert eng2.stats()["refine_steps"] == len(ladder_tiers(
+        int(np.asarray(syn.sample_a).shape[1])))
+
+
+def test_handle_api_surface():
+    _, _, syn = _make()
+    q = _overlap_queries()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    h = eng.answer_progressive(q, deadline_ms=50.0)
+    assert isinstance(h, RefinementHandle)
+    assert h.tier == 0 and not h.done
+    first = h.results
+    assert set(first) == {"sum"}
+    h.refine()
+    assert h.tier == 1
+    out = h.final()
+    assert h.done and out is h.results
+    assert h.refine() is out    # exhausted ladder: refine is a no-op
+
+
+def test_sample_slots_validation_and_slicing():
+    from repro.engine.executor import slice_sample_slots
+    _, _, syn = _make()
+    sliced = slice_sample_slots(syn, 4)
+    assert np.asarray(sliced.sample_a).shape[1] == 4
+    assert int(np.asarray(sliced.k_per_leaf).max()) <= 4
+    assert slice_sample_slots(syn, None) is syn
+    cap = np.asarray(syn.sample_a).shape[1]
+    assert slice_sample_slots(syn, cap + 10) is syn
+    with pytest.raises(ValueError):
+        ServingConfig(sample_slots=0).validate()
+
+
+def test_progressive_rejects_explicit_sample_slots():
+    _, _, syn = _make()
+    eng = PassEngine(syn, serving=ServingConfig(kinds=("sum",)))
+    with pytest.raises(ValueError):
+        eng.answer_progressive(_overlap_queries(),
+                               serving=ServingConfig(kinds=("sum",),
+                                                     sample_slots=4))
